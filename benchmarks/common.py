@@ -1,0 +1,101 @@
+"""Shared FEEL experiment harness for the paper-figure benchmarks.
+
+One entry point: :func:`run_fl` — builds the synthetic shard-partitioned
+dataset (paper §VI-A protocol), the wireless network, and runs
+``num_rounds`` of Algorithm 1 under a given scheduling method, returning
+the per-round history (accuracy / energy / time / #selected).
+
+``quick=True`` shrinks the scale (K=40 devices, 300-shard pool, 8 rounds)
+so the whole benchmark suite completes on the CPU container; ``--full``
+restores the paper's K=100 / 1200x50 / 15 rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import diversity, federated, scheduler, wireless
+from repro.data import partition, synthetic
+from repro.models import paper_nets
+
+
+@dataclasses.dataclass(frozen=True)
+class FLBenchConfig:
+    quick: bool = True
+    model: str = "mlp"            # mlp | cnn
+    method: str = "das"           # das | abs | random | full
+    n_fixed: Optional[int] = None
+    local_epochs: int = 1
+    model_bits: float = 100e3     # s (paper Table I: 100 kbit)
+    num_rounds: int = 0           # 0 -> default per quick/full
+    seed: int = 0
+    reentry: str = "strict"
+
+    @property
+    def rounds(self) -> int:
+        if self.num_rounds:
+            return self.num_rounds
+        return 8 if self.quick else 15
+
+    @property
+    def num_devices(self) -> int:
+        return 40 if self.quick else 100
+
+    @property
+    def pspec(self) -> partition.PartitionSpec:
+        if self.quick:
+            return partition.PartitionSpec(num_devices=40, num_shards=300,
+                                           shard_size=50)
+        return partition.PartitionSpec()
+
+
+@functools.lru_cache(maxsize=4)
+def _dataset(quick: bool, seed: int):
+    spc = 2000 if quick else 6000
+    imgs, labs = synthetic.generate(seed, samples_per_class=spc)
+    cfg = FLBenchConfig(quick=quick, seed=seed)
+    return partition.partition(imgs, labs, seed=seed + 1, spec=cfg.pspec)
+
+
+def run_fl(cfg: FLBenchConfig) -> List[federated.RoundRecord]:
+    data = _dataset(cfg.quick, cfg.seed)
+    wcfg = wireless.WirelessConfig(model_bits=cfg.model_bits)
+    net = wireless.sample_network(jax.random.key(cfg.seed + 7),
+                                  data.num_devices, wcfg)
+    mspec = paper_nets.PaperNetSpec(kind=cfg.model)
+    params = paper_nets.init(jax.random.key(cfg.seed + 11), mspec)
+    scfg = scheduler.SchedulerConfig(
+        method=cfg.method, n_min=1, n_fixed=cfg.n_fixed,
+        iterations_max=6, reentry=cfg.reentry)
+    fcfg = federated.FLConfig(
+        num_rounds=cfg.rounds, local_epochs=cfg.local_epochs,
+        batch_size=50, learning_rate=0.1 if cfg.model == "mlp" else 0.05)
+    _, hist = federated.run_federated(
+        init_params=params,
+        loss_fn=functools.partial(paper_nets.loss_fn, spec=mspec),
+        eval_fn=functools.partial(paper_nets.accuracy, spec=mspec),
+        data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
+        key=jax.random.key(cfg.seed + 13))
+    return hist
+
+
+def rounds_to_accuracy(hist, target: float) -> int:
+    for rec in hist:
+        if rec.accuracy == rec.accuracy and rec.accuracy >= target:
+            return rec.round + 1
+    return -1  # not reached
+
+
+def totals(hist):
+    e = sum(r.energy_total for r in hist)
+    t = sum(r.round_time for r in hist)
+    n = sum(r.n_selected for r in hist)
+    return {"energy_total_j": e, "time_total_s": t,
+            "energy_per_device_j": e / max(n, 1),
+            "mean_selected": n / len(hist),
+            "final_accuracy": hist[-1].accuracy}

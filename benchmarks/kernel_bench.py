@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this container the numbers measure the *reference* path plus the
+interpreted kernel (functional check); on a TPU backend the same harness
+times the compiled kernels (interpret=False).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = True) -> List[Tuple[str, float, str]]:
+    rows = []
+    key = jax.random.key(0)
+
+    k, p = 64, 65536 if not quick else 16384
+    u = jax.random.normal(key, (k, p), jnp.float32)
+    w = jax.nn.softmax(jax.random.normal(key, (k,)))
+    ref_fn = jax.jit(ref.fedavg_agg)
+    rows.append(("kernel/fedavg_agg/ref_jnp", round(_time(ref_fn, u, w), 1),
+                 f"K={k} P={p}"))
+    rows.append(("kernel/fedavg_agg/pallas_interpret",
+                 round(_time(lambda a, b: ops.fedavg_agg(a, b), u, w), 1),
+                 "interpret=True on CPU"))
+
+    labels = jax.random.randint(key, (32, 1024), 0, 10)
+    mask = jnp.ones((32, 1024), jnp.float32)
+    rows.append(("kernel/diversity/ref_jnp",
+                 round(_time(jax.jit(lambda l, m: ref.diversity(l, m, 10)),
+                             labels, mask), 1), "K=32 N=1024"))
+    rows.append(("kernel/diversity/pallas_interpret",
+                 round(_time(lambda l, m: ops.diversity_stats(l, m, 10),
+                             labels, mask), 1), ""))
+
+    s = 512 if quick else 2048
+    q = jax.random.normal(key, (1, s, 4, 64), jnp.bfloat16)
+    kv = jax.random.normal(key, (1, s, 2, 64), jnp.bfloat16)
+
+    def ref_attn(q_, k_, v_):
+        kk = jnp.repeat(k_, 2, axis=2)
+        vv = jnp.repeat(v_, 2, axis=2)
+        flat = lambda x: x.transpose(0, 2, 1, 3).reshape(4, s, 64)
+        return ref.flash_attention(flat(q_), flat(kk), flat(vv))
+
+    rows.append(("kernel/flash_attention/ref_jnp",
+                 round(_time(jax.jit(ref_attn), q, kv, kv), 1),
+                 f"S={s} causal"))
+    rows.append(("kernel/flash_attention/pallas_interpret",
+                 round(_time(lambda a, b, c: ops.flash_attention(a, b, c),
+                             q, kv, kv), 1), ""))
+    return rows

@@ -1,0 +1,104 @@
+"""Roofline analysis from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  Terms per (arch x shape), single-pod mesh:
+
+  compute    = HLO_FLOPs / (chips x peak)        [per-device HLO -> /chip]
+  memory     = HLO_bytes / (chips x HBM_bw)
+  collective = collective_bytes / (chips x link_bw)
+
+``cost_analysis`` is per-*device* program, so terms divide by one chip's
+rates directly.  Depth-corrected values (scan-over-layers; see dryrun
+docstring) are used when present.  sLSTM trip-count correction: xlstm
+pairs multiply the scanned sLSTM body by seq_len analytically (flagged in
+the notes column).
+
+MODEL_FLOPS = 6 * N_active * D tokens (training; 2ND for single-token
+decode) gives the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+from repro import configs
+from repro.configs import shapes as shapes_lib
+from repro.models import transformer
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+
+def model_flops(arch: str, shape: shapes_lib.InputShape) -> float:
+    cfg = configs.get(arch)
+    n_active = transformer.active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else (shape.seq_len
+                                         if shape.kind == "prefill"
+                                         else 1))
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def analyze(records: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    out = []
+    for rec in records:
+        if rec.get("skipped") or rec.get("error"):
+            continue
+        if rec.get("num_devices") != 256:      # roofline = single pod
+            continue
+        arch, sname = rec["arch"], rec["shape"]
+        shape = shapes_lib.get_shape(sname)
+        cost = rec.get("cost_corrected") or rec["cost"]
+        coll = rec.get("collectives_corrected_bytes",
+                       rec["collectives"]["total_bytes"])
+        t_compute = cost["flops"] / PEAK_FLOPS
+        t_memory = cost["bytes"] / HBM_BW
+        t_coll = coll / ICI_BW
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(arch, shape)
+        mf_per_dev = mf / 256.0
+        ratio = mf_per_dev / max(cost["flops"], 1.0)
+        out.append({
+            "arch": arch, "shape": sname,
+            "compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dominant,
+            "model_flops_per_dev": mf_per_dev,
+            "useful_ratio": ratio,
+            "memory_gb": (rec["memory"].get("temp_size_in_bytes", 0)
+                          + rec["memory"].get("argument_size_in_bytes", 0)
+                          ) / 1e9,
+            "corrected": "cost_corrected" in rec,
+        })
+    return out
+
+
+def table(rows: List[Dict[str, Any]]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s} "
+           f"{'useful':>7s} {'mem_GB':>7s}")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+            f"{r['memory_gb']:7.1f}")
+    return "\n".join(lines)
+
+
+def main(path: str = "dryrun_results.json") -> List[Dict[str, Any]]:
+    with open(path) as f:
+        records = json.load(f)
+    rows = analyze(records)
+    print(table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")

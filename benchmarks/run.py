@@ -1,0 +1,91 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,...]
+
+Prints ``name,value,derived`` CSV rows.  Default (quick) mode shrinks the
+FL scale so the whole suite runs on the CPU container; ``--full`` is the
+paper's K=100 / 1200x50-shard / 15-round configuration.
+
+Suites: fig2 (limited devices), fig3 (local epochs), fig45 (model size),
+fig67 (energy/time vs baseline+ABS), divergence (selected-fraction
+probe), sched (scheduler latency), kernels (Pallas micro), roofline
+(requires dryrun_results.json from repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    print("name,value,derived")
+    t0 = time.time()
+
+    if want("fig2") or want("fig3") or want("fig45") or want("fig67") \
+            or want("divergence"):
+        from benchmarks import paper_figs
+        if want("fig2"):
+            for r in paper_figs.fig2_limited_devices(quick):
+                _emit(r)
+        if want("fig3"):
+            for r in paper_figs.fig3_local_epochs(quick):
+                _emit(r)
+        if want("fig45"):
+            for r in paper_figs.fig45_model_size(quick):
+                _emit(r)
+        if want("fig67"):
+            for r in paper_figs.fig67_energy_time(quick):
+                _emit(r)
+        if want("divergence"):
+            for r in paper_figs.selection_fraction_sweep(quick):
+                _emit(r)
+
+    if want("sched"):
+        from benchmarks import sched_micro
+        for r in sched_micro.run(quick):
+            _emit(r)
+
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        for r in kernel_bench.run(quick):
+            _emit(r)
+
+    if want("roofline"):
+        if os.path.exists(args.dryrun_json):
+            from benchmarks import roofline
+            for row in roofline.analyze(
+                    __import__("json").load(open(args.dryrun_json))):
+                _emit((f"roofline/{row['arch']}/{row['shape']}/"
+                       f"{row['dominant']}",
+                       round(max(row['compute_s'], row['memory_s'],
+                                 row['collective_s']), 4),
+                       f"useful={row['useful_ratio']:.3f}"))
+        else:
+            print(f"# roofline skipped: {args.dryrun_json} not found "
+                  f"(run repro.launch.dryrun first)", file=sys.stderr)
+
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+def _emit(row) -> None:
+    name, value, derived = row
+    print(f"{name},{value},{derived}")
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

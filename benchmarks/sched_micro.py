@@ -1,0 +1,50 @@
+"""Scheduler micro-benchmark: jitted DAS/ABS/random decision latency vs K.
+
+Systems-level table (no paper analogue): the per-round scheduling cost a
+MEC server (or pod controller) pays.  DAS = iterative Sub1/Sub2 with the
+tangent-PGD allocator; everything jit-compiled once per K.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import diversity, scheduler, wireless
+
+
+def bench(method: str, k: int, iters: int = 5) -> float:
+    wcfg = wireless.WirelessConfig()
+    net = wireless.sample_network(jax.random.key(0), k, wcfg)
+    gains = wireless.sample_fading(jax.random.key(1), net)
+    sizes = jax.random.randint(jax.random.key(2), (k,), 50, 1500)
+    hists = jax.random.randint(jax.random.key(3), (k, 10), 0,
+                               30).astype(jnp.float32)
+    ages = jnp.zeros((k,), jnp.int32)
+    idx = diversity.diversity_index(label_hists=hists, data_sizes=sizes,
+                                    ages=ages)
+    sch = scheduler.SchedulerConfig(method=method, n_min=1,
+                                    iterations_max=6)
+    res = scheduler.schedule(jax.random.key(4), idx, ages, sizes, gains,
+                             net, wcfg, sch)
+    jax.block_until_ready(res.alpha)      # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        res = scheduler.schedule(jax.random.key(4), idx, ages, sizes,
+                                 gains, net, wcfg, sch)
+        jax.block_until_ready(res.alpha)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = True) -> List[Tuple[str, float, str]]:
+    rows = []
+    ks = (50, 100) if quick else (50, 100, 200, 400)
+    for k in ks:
+        for method in ("das", "abs", "random", "full"):
+            us = bench(method, k)
+            rows.append((f"sched/{method}/K{k}", round(us, 1),
+                         "us_per_decision"))
+    return rows

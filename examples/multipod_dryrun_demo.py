@@ -1,0 +1,44 @@
+"""Multi-pod dry-run walkthrough for a single (arch, shape).
+
+    PYTHONPATH=src python examples/multipod_dryrun_demo.py \
+        [--arch qwen3-14b] [--shape decode_32k]
+
+Shows the artifacts the production launch depends on: the 2x16x16 mesh,
+the input ShapeDtypeStructs with their shardings, per-device memory
+analysis, cost analysis, and the collective schedule parsed from the
+post-SPMD HLO.  (Sets 512 host devices — run standalone, not inside a
+session that already initialized jax.)
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+
+    # dryrun must be imported first: it sets XLA_FLAGS before jax init.
+    from repro.launch import dryrun, mesh as mesh_lib
+    from repro import configs
+    from repro.configs import shapes as shapes_lib
+
+    cfg = configs.get(args.arch)
+    shape = shapes_lib.get_shape(args.shape)
+    ok, why = shapes_lib.applicable(cfg, shape)
+    if not ok:
+        raise SystemExit(f"{cfg.name} x {shape.name} skipped: {why}")
+
+    for multi_pod in (False, True):
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+        rec = dryrun.lower_one(cfg, shape, mesh, mem_only=multi_pod)
+        print(f"== {rec['mesh']} ({rec['num_devices']} chips) ==")
+        print("  per-device memory:", rec["memory"])
+        print("  collective bytes by kind:",
+              {k: f"{v / 1e6:.1f} MB"
+               for k, v in rec["collectives"]["bytes"].items() if v})
+
+
+if __name__ == "__main__":
+    main()

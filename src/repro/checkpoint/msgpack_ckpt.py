@@ -1,0 +1,87 @@
+"""Msgpack pytree checkpointing (no flax/orbax in the container).
+
+Format: a msgpack map ``{"__paths__": [...], "__meta__": {...}}`` plus one
+entry per leaf: ``{"dtype": str, "shape": [...], "data": bytes}``.
+Restore rebuilds the pytree and (optionally) device_puts every leaf with a
+target sharding — sharding-aware restore for the pod launcher.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+Params = Any
+
+
+def _flatten_with_paths(tree: Params) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+
+    def walk(path: str, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{path}/{k}" if path else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{path}[{i}]", v)
+        else:
+            out[path] = np.asarray(node)
+
+    walk("", tree)
+    return out
+
+
+def save(path: str, tree: Params, meta: Optional[dict] = None) -> None:
+    flat = _flatten_with_paths(tree)
+    payload = {
+        "__meta__": meta or {},
+        "leaves": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        },
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_flat(path: str) -> tuple[Dict[str, np.ndarray], dict]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = {
+        k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"])
+                         ).reshape(v["shape"])
+        for k, v in payload["leaves"].items()
+    }
+    return leaves, payload.get("__meta__", {})
+
+
+def restore(path: str, like: Params,
+            sharding_fn: Optional[Callable[[str], Any]] = None) -> Params:
+    """Restore into the structure of ``like`` (shapes validated).
+
+    ``sharding_fn(path) -> Sharding`` places each leaf on the mesh during
+    restore (sharded device_put); None keeps host arrays.
+    """
+    flat, _ = load_flat(path)
+
+    def walk(prefix: str, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}/{k}" if prefix else str(k), node[k])
+                    for k in sorted(node)}
+        arr = flat[prefix]
+        want = tuple(node.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{prefix}: shape {arr.shape} != {want}")
+        if sharding_fn is not None:
+            return jax.device_put(arr, sharding_fn(prefix))
+        return jnp.asarray(arr)
+
+    return walk("", like)

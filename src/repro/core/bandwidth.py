@@ -1,0 +1,236 @@
+"""Sub2 — bandwidth allocation (paper Eq. 15), JAX-native solvers.
+
+The paper fixes the selection ``x`` and solves::
+
+    min_alpha  rho * sum_k x_k E_k(alpha_k) + (1 - rho) * T(alpha)
+    s.t.       sum_k alpha_k <= 1,   0 <= alpha_k <= 1
+
+with an off-the-shelf (scipy) solver.  Both objective terms are strictly
+decreasing in every ``alpha_k`` (more bandwidth -> faster upload -> less
+time *and* less energy at fixed transmit power), so the budget binds:
+``sum alpha = 1`` over the selected set.  We exploit the structure twice:
+
+* :func:`min_time_allocation` — the ``rho = 0`` limit has a water-filling
+  solution: all selected devices finish at the same instant ``T*``.  For a
+  deadline ``T`` the minimal per-device share is ``alpha_k(T)`` obtained by
+  inverting the rate function (monotone -> bisection); feasibility
+  ``sum_k alpha_k(T) <= 1`` is monotone in ``T`` -> outer bisection on
+  ``T``.  Fully vectorized, fixed iteration count, jit-safe.
+
+* :func:`pgd_allocation` — general ``rho``: projected gradient descent on
+  the selected-coordinate simplex (Duchi projection), with the round time
+  smoothed by a logsumexp so the objective is differentiable.  Matches
+  scipy's SLSQP to <1e-3 on random instances (see tests) while remaining
+  jit-able inside the DAS loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wireless
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Sub2Params:
+    rho: float = 0.5            # energy/time trade-off (paper: 1/2)
+    time_bisect_iters: int = 60
+    rate_bisect_iters: int = 50
+    pgd_iters: int = 400
+    pgd_lr: float = 0.05
+    smooth_tau: float = 1e-3    # logsumexp temperature for max T (seconds)
+
+
+# ---------------------------------------------------------------------------
+# Rate inversion: alpha such that rate(alpha) == r_req
+# ---------------------------------------------------------------------------
+
+def invert_rate(r_req: Array, gains: Array, tx_power: Array,
+                cfg: wireless.WirelessConfig, iters: int = 50) -> Array:
+    """Minimal alpha achieving rate ``r_req`` (vectorized bisection).
+
+    rate(alpha) = alpha*B*log2(1 + c/alpha), c = g*P/(B*N0), is strictly
+    increasing and concave in alpha.  Returns alpha possibly > 1 when the
+    requirement is infeasible inside the band — callers check the budget.
+    """
+    c = gains * tx_power / (cfg.bandwidth_hz * cfg.noise_psd)
+
+    def rate(a):
+        a = jnp.maximum(a, cfg.min_alpha)
+        return a * cfg.bandwidth_hz * jnp.log2(1.0 + c / a)
+
+    # Bracket: rate is bounded above by B*c/ln2; alpha up to 4 covers any
+    # feasible-within-band requirement with margin.
+    lo = jnp.zeros_like(r_req)
+    hi = jnp.full_like(r_req, 4.0)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        ok = rate(mid) >= r_req
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi
+
+
+# ---------------------------------------------------------------------------
+# rho -> 0 water-filling: minimize the round time T
+# ---------------------------------------------------------------------------
+
+def alpha_for_deadline(deadline: Array, selected: Array, t_train: Array,
+                       gains: Array, tx_power: Array,
+                       cfg: wireless.WirelessConfig,
+                       rate_iters: int = 50) -> Array:
+    """Minimal alpha_k letting each selected device finish by ``deadline``.
+
+    Devices whose training alone exceeds the deadline get a sentinel share
+    of 4.0 (infeasible marker, exceeds any budget).
+    """
+    slack = deadline - t_train
+    r_req = jnp.where(slack > 0.0, cfg.model_bits / jnp.maximum(slack, 1e-9),
+                      jnp.inf)
+    a = invert_rate(jnp.where(jnp.isinf(r_req), 1e30, r_req), gains,
+                    tx_power, cfg, iters=rate_iters)
+    a = jnp.where(jnp.isinf(r_req), 4.0, a)
+    return jnp.where(selected > 0.0, a, 0.0)
+
+
+def min_time_allocation(selected: Array, t_train: Array, gains: Array,
+                        tx_power: Array, cfg: wireless.WirelessConfig,
+                        params: Sub2Params = Sub2Params()) -> tuple[Array, Array]:
+    """Water-filling min-T allocation: returns (alpha, T*).
+
+    Outer bisection on the deadline T; inner rate inversion per device.
+    At the optimum every selected device finishes at T* (unless its single-
+    device optimum is already faster with spare bandwidth).
+    """
+    any_sel = jnp.sum(selected) > 0.0
+    # Bracket the deadline: lower = max t_train (upload takes >0 time);
+    # upper = time when every device gets an equal share (feasible point).
+    n_sel = jnp.maximum(jnp.sum(selected), 1.0)
+    equal_alpha = jnp.where(selected > 0.0, 1.0 / n_sel, 0.0)
+    t_up_equal = wireless.upload_time(equal_alpha, gains, tx_power, cfg)
+    hi0 = jnp.max(jnp.where(selected > 0.0, t_train + t_up_equal, 0.0))
+    lo0 = jnp.max(jnp.where(selected > 0.0, t_train, 0.0))
+
+    def feasible(deadline):
+        a = alpha_for_deadline(deadline, selected, t_train, gains, tx_power,
+                               cfg, rate_iters=params.rate_bisect_iters)
+        return jnp.sum(a) <= 1.0
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        ok = feasible(mid)
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, params.time_bisect_iters, body, (lo0, hi0))
+    t_star = hi
+    alpha = alpha_for_deadline(t_star, selected, t_train, gains, tx_power,
+                               cfg, rate_iters=params.rate_bisect_iters)
+    # Normalize tiny bisection overshoot back inside the budget.
+    total = jnp.sum(alpha)
+    alpha = jnp.where(total > 1.0, alpha / total, alpha)
+    alpha = jnp.where(any_sel, alpha, jnp.zeros_like(alpha))
+    t_star = jnp.where(any_sel, t_star, 0.0)
+    return alpha, t_star
+
+
+# ---------------------------------------------------------------------------
+# General rho: projected gradient on the simplex
+# ---------------------------------------------------------------------------
+
+def project_simplex(v: Array, mask: Array, radius: float = 1.0) -> Array:
+    """Euclidean projection of ``v`` (masked coords) onto the simplex
+    {a >= 0, sum a = radius, a_i = 0 for mask_i = 0} (Duchi et al., 2008).
+    """
+    big_neg = -1e30
+    n_active = jnp.maximum(jnp.sum(mask), 1.0)
+    vm = jnp.where(mask > 0.0, v, big_neg)
+    u = jnp.sort(vm)[::-1]
+    css = jnp.cumsum(u)
+    k = jnp.arange(1, v.shape[0] + 1, dtype=v.dtype)
+    cond = (u * k > (css - radius)) & (u > big_neg / 2)
+    rho_idx = jnp.sum(cond) - 1
+    rho_idx = jnp.clip(rho_idx, 0, v.shape[0] - 1)
+    theta = (css[rho_idx] - radius) / (rho_idx + 1.0)
+    out = jnp.maximum(v - theta, 0.0)
+    out = jnp.where(mask > 0.0, out, 0.0)
+    # Guard: if nothing active, return zeros.
+    return jnp.where(n_active > 0.5, out, jnp.zeros_like(out))
+
+
+def sub2_objective(alpha: Array, selected: Array, t_train: Array,
+                   gains: Array, tx_power: Array,
+                   cfg: wireless.WirelessConfig, rho: float,
+                   smooth_tau: float = 0.0) -> Array:
+    """rho * sum E_k + (1-rho) * T (Eq. 15a); optionally smoothed max."""
+    t_up = wireless.upload_time(alpha, gains, tx_power, cfg)
+    t_up = jnp.where(selected > 0.0, t_up, 0.0)
+    energy = jnp.where(selected > 0.0, tx_power * t_up, 0.0)
+    total = jnp.where(selected > 0.0, t_train + t_up, 0.0)
+    if smooth_tau > 0.0:
+        t_round = smooth_tau * jax.nn.logsumexp(total / smooth_tau)
+    else:
+        t_round = jnp.max(total)
+    return rho * jnp.sum(energy) + (1.0 - rho) * t_round
+
+
+def pgd_allocation(selected: Array, t_train: Array, gains: Array,
+                   tx_power: Array, cfg: wireless.WirelessConfig,
+                   params: Sub2Params = Sub2Params()) -> tuple[Array, Array]:
+    """Solve Sub2 for general rho by tangent-space projected gradient.
+
+    Two warm starts (min-time water-filling — optimal for rho=0 — and the
+    uniform share), each descended with the gradient's *tangential*
+    component (mean removed: on the simplex a common offset projects to
+    zero movement, so raw/Adam steps stall — see tests) under a cosine lr
+    decay, tracking the best exact-max objective seen.  Returns
+    (alpha, objective).
+    """
+    mask = (selected > 0.0).astype(jnp.float32)
+    n_act = jnp.maximum(jnp.sum(mask), 1.0)
+
+    def exact_obj(a):
+        return sub2_objective(a, selected, t_train, gains, tx_power, cfg,
+                              params.rho, smooth_tau=0.0)
+
+    grad_fn = jax.grad(
+        lambda a: sub2_objective(a, selected, t_train, gains, tx_power, cfg,
+                                 params.rho, params.smooth_tau))
+
+    def descend(alpha0):
+        alpha0 = project_simplex(alpha0, mask)
+
+        def body(i, carry):
+            a, best_a, best_o = carry
+            g = grad_fn(a) * mask
+            g_t = (g - jnp.sum(g) / n_act) * mask      # tangent component
+            gmax = jnp.max(jnp.abs(g_t))
+            frac = i.astype(jnp.float32) / params.pgd_iters
+            lr = params.pgd_lr * (0.5 * (1 + jnp.cos(jnp.pi * frac)))
+            a = project_simplex(
+                a - lr * g_t / jnp.maximum(gmax, 1e-12), mask)
+            o = exact_obj(a)
+            better = o < best_o
+            return (a, jnp.where(better, a, best_a),
+                    jnp.where(better, o, best_o))
+
+        init = (alpha0, alpha0, exact_obj(alpha0))
+        _, best_a, best_o = jax.lax.fori_loop(0, params.pgd_iters, body,
+                                              init)
+        return best_a, best_o
+
+    wf, _ = min_time_allocation(selected, t_train, gains, tx_power, cfg,
+                                params)
+    uniform = mask / n_act
+    a1, o1 = descend(wf)
+    a2, o2 = descend(uniform)
+    pick = o1 <= o2
+    return jnp.where(pick, a1, a2), jnp.where(pick, o1, o2)

@@ -1,0 +1,177 @@
+"""Dataset-diversity measures and the paper's diversity index (§III, §IV-B).
+
+The paper's selection criterion is a weighted, normalized combination of
+per-device dataset metrics (Eq. 4)::
+
+    I_k = sum_i  v_{i,k} * gamma_i ,   v_{i,k} = metric_i(k) / max_k metric_i
+
+with ``i in {dataset diversity, dataset size, age}``.  For classification
+the dataset-diversity term uses the Gini-Simpson index ``1 - sum_c p_c^2``
+(Eq. 2) or Shannon entropy (Eq. 3); for sequence data ApEn/SampEn.
+
+All measures operate on *label statistics only* (a histogram) or on a small
+data sample, matching the paper's privacy argument: devices upload a single
+scalar, never raw data.
+
+The fused histogram->index computation also exists as a Pallas TPU kernel
+(``repro.kernels.diversity``); this module is the reference/jnp path used
+everywhere shapes are small (K ~ 100 devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Classification diversity (Eq. 2 / Eq. 3)
+# ---------------------------------------------------------------------------
+
+def label_histogram(labels: Array, mask: Array, num_classes: int) -> Array:
+    """Class-count histogram over a (possibly padded) label vector.
+
+    Args:
+      labels: (n,) int labels; entries with mask==0 are ignored.
+      mask:   (n,) {0,1} validity mask (devices have unequal |D_k|).
+      num_classes: C.
+
+    Returns: (C,) float counts.
+    """
+    one_hot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    return jnp.sum(one_hot * mask[..., None].astype(jnp.float32), axis=-2)
+
+
+def class_probs(hist: Array) -> Array:
+    total = jnp.sum(hist, axis=-1, keepdims=True)
+    return hist / jnp.maximum(total, 1.0)
+
+
+def simpson_index(probs: Array) -> Array:
+    """lambda = sum_c p_c^2 (Eq. 2): P(two random samples share a class)."""
+    return jnp.sum(probs * probs, axis=-1)
+
+
+def gini_simpson(probs: Array) -> Array:
+    """1 - lambda (paper's choice for MNIST): in [0, 1 - 1/C]."""
+    return 1.0 - simpson_index(probs)
+
+
+def shannon_entropy(probs: Array) -> Array:
+    """H = -sum p log2 p (Eq. 3), with 0*log(0) := 0 (paper's caveat)."""
+    logp = jnp.where(probs > 0.0, jnp.log2(jnp.maximum(probs, 1e-30)), 0.0)
+    return -jnp.sum(probs * logp, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Sequence diversity: approximate / sample entropy (§III)
+# ---------------------------------------------------------------------------
+
+def _phi_counts(series: Array, m: int, r: Array) -> Array:
+    """Fraction of template pairs (length m) within Chebyshev distance r.
+
+    Vectorized O(n^2) formulation; the paper notes ApEn/SampEn are heavy and
+    should run on a small sample — callers pass n <= a few hundred.
+    Returns (n-m+1,) per-template match fractions (self-match included).
+    """
+    n = series.shape[0]
+    num_templates = n - m + 1
+    idx = jnp.arange(num_templates)[:, None] + jnp.arange(m)[None, :]
+    templates = series[idx]                                   # (nt, m)
+    dist = jnp.max(
+        jnp.abs(templates[:, None, :] - templates[None, :, :]), axis=-1)
+    matches = (dist <= r).astype(jnp.float32)                 # (nt, nt)
+    return jnp.mean(matches, axis=-1)
+
+
+def approximate_entropy(series: Array, m: int = 2,
+                        r_factor: float = 0.2) -> Array:
+    """ApEn(m, r) = Phi^m(r) - Phi^{m+1}(r) (Pincus); r = r_factor * std."""
+    r = r_factor * jnp.std(series)
+    phi_m = jnp.mean(jnp.log(jnp.maximum(_phi_counts(series, m, r), 1e-12)))
+    phi_m1 = jnp.mean(
+        jnp.log(jnp.maximum(_phi_counts(series, m + 1, r), 1e-12)))
+    return phi_m - phi_m1
+
+
+def sample_entropy(series: Array, m: int = 2, r_factor: float = 0.2) -> Array:
+    """SampEn(m, r) = -log(A/B), self-matches excluded (length-robust)."""
+    r = r_factor * jnp.std(series)
+
+    def pair_count(mm: int) -> Array:
+        n = series.shape[0]
+        nt = n - mm + 1
+        idx = jnp.arange(nt)[:, None] + jnp.arange(mm)[None, :]
+        t = series[idx]
+        dist = jnp.max(jnp.abs(t[:, None, :] - t[None, :, :]), axis=-1)
+        match = (dist <= r).astype(jnp.float32)
+        match = match * (1.0 - jnp.eye(nt))  # exclude self-matches
+        return jnp.sum(match)
+
+    b = pair_count(m)
+    a = pair_count(m + 1)
+    return -jnp.log(jnp.maximum(a, 1e-12) / jnp.maximum(b, 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# The diversity index I_k (Eq. 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IndexWeights:
+    """gamma_i weights; the paper's experiments use 1/3 each."""
+
+    diversity: float = 1.0 / 3.0
+    size: float = 1.0 / 3.0
+    age: float = 1.0 / 3.0
+
+
+def normalize_metric(values: Array) -> Array:
+    """v_i = value / max_k value (Eq. just above Eq. 4); 0 if all zero."""
+    m = jnp.max(values)
+    return jnp.where(m > 0.0, values / jnp.maximum(m, 1e-12), 0.0)
+
+
+def age_priority(ages: Array) -> Array:
+    """Age-of-update term f(k) = log(1 + T(k)) (Yang et al. form, §VI)."""
+    return jnp.log1p(ages.astype(jnp.float32))
+
+
+def diversity_index(
+    *,
+    label_hists: Array,
+    data_sizes: Array,
+    ages: Array,
+    weights: IndexWeights = IndexWeights(),
+    measure: str = "gini_simpson",
+) -> Array:
+    """Compute I_k for every device (Eq. 4).
+
+    Args:
+      label_hists: (K, C) per-device class histograms (computed on-device).
+      data_sizes:  (K,)   |D_k| sample counts.
+      ages:        (K,)   rounds since last selection.
+      weights:     gamma_i.
+      measure:     'gini_simpson' | 'shannon'.
+
+    Returns: (K,) index values in [0, sum_i gamma_i].
+    """
+    probs = class_probs(label_hists)
+    if measure == "gini_simpson":
+        div = gini_simpson(probs)
+    elif measure == "shannon":
+        div = shannon_entropy(probs)
+    else:
+        raise ValueError(f"unknown diversity measure: {measure!r}")
+    terms: Mapping[str, Array] = {
+        "diversity": normalize_metric(div) * weights.diversity,
+        "size": normalize_metric(data_sizes.astype(jnp.float32))
+                * weights.size,
+        "age": normalize_metric(age_priority(ages)) * weights.age,
+    }
+    return terms["diversity"] + terms["size"] + terms["age"]

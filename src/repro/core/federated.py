@@ -1,0 +1,224 @@
+"""FEEL orchestration — the paper's Algorithm 1 (FedAvg + scheduling).
+
+Each round:
+
+1. Devices report (transmit power, |D_k|, diversity index) — here the
+   index is computed from on-device label histograms
+   (``core.diversity.diversity_index``), sizes and ages.
+2. Fresh channel fading is drawn; the scheduler (``core.scheduler``)
+   returns the selected set and bandwidth allocation.
+3. Selected devices run ``E`` local epochs of SGD from the global model
+   (vmapped over the *entire* client axis, masked by selection — static
+   shapes, one jit).
+4. The server aggregates with FedAvg weights ``|D_k| / D_r`` (Alg. 1
+   line 12) — optionally through the ``fedavg_agg`` Pallas kernel path.
+5. Ages update (selected -> 0, others += 1); energy/time accumulate.
+
+The client axis is shardable: on a pod, ``client_batch_spec`` places
+clients over the ``data`` mesh axis so K local trainings run as one SPMD
+program — the cross-silo mapping described in DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diversity, scheduler, wireless
+from repro.data import partition as partition_lib
+from repro.data import synthetic
+
+Array = jax.Array
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    num_rounds: int = 15                  # paper: 15 rounds
+    local_epochs: int = 1                 # E
+    batch_size: int = 50                  # one shard per step
+    learning_rate: float = 0.05
+    momentum: float = 0.0
+    num_classes: int = 10
+    measure: str = "gini_simpson"
+    index_weights: diversity.IndexWeights = diversity.IndexWeights()
+    use_kernel_agg: bool = False          # route FedAvg through Pallas
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    accuracy: float
+    n_selected: int
+    round_time: float
+    energy_total: float
+    energy_per_device: float
+    selected: np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Local training (vmapped over clients)
+# ---------------------------------------------------------------------------
+
+def make_local_trainer(loss_fn: Callable[[Params, Array, Array, Array],
+                                         Array],
+                       cfg: FLConfig) -> Callable:
+    """Build the vmapped multi-epoch local-SGD update.
+
+    Every client runs ``steps_k = E * ceil(size_k / B)`` gradient steps;
+    clients are padded to the max step count and masked, so one
+    ``lax.scan`` covers the heterogeneous dataset sizes (the wireless time
+    model separately charges each device for its true workload, Eq. 8).
+    """
+
+    def local_sgd(params: Params, images: Array, labels: Array,
+                  mask: Array, steps_active: Array, key: Array) -> Params:
+        cap = images.shape[0]
+        max_steps = steps_active.shape[0]
+        del max_steps
+
+        def step(carry, inp):
+            p, vel = carry
+            k, active = inp
+            idx = jax.random.randint(k, (cfg.batch_size,), 0, cap)
+            bx = synthetic.to_float(images[idx])
+            by = labels[idx]
+            bm = mask[idx]
+            g = jax.grad(loss_fn)(p, bx, by, bm)
+            vel = jax.tree_util.tree_map(
+                lambda v, gi: cfg.momentum * v + gi, vel, g)
+            p_new = jax.tree_util.tree_map(
+                lambda w, v: w - cfg.learning_rate * v, p, vel)
+            p = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(active > 0.0, new, old),
+                p_new, p)
+            return (p, vel), None
+
+        vel0 = jax.tree_util.tree_map(jnp.zeros_like, params)
+        keys = jax.random.split(key, steps_active.shape[0])
+        (params, _), _ = jax.lax.scan(step, (params, vel0),
+                                      (keys, steps_active))
+        return params
+
+    return jax.vmap(local_sgd, in_axes=(None, 0, 0, 0, 0, 0))
+
+
+def fedavg_aggregate(client_params: Params, weights: Array,
+                     use_kernel: bool = False) -> Params:
+    """g <- sum_k (D_k / D_r) w_k (Alg. 1 line 12) over stacked params.
+
+    ``weights`` must already be normalized over the selected set (zeros
+    for unselected clients).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return jax.tree_util.tree_map(
+            lambda stacked: kernel_ops.fedavg_agg(
+                stacked.reshape(stacked.shape[0], -1), weights
+            ).reshape(stacked.shape[1:]),
+            client_params)
+    return jax.tree_util.tree_map(
+        lambda stacked: jnp.tensordot(weights, stacked, axes=1),
+        client_params)
+
+
+# ---------------------------------------------------------------------------
+# One federated round (jit)
+# ---------------------------------------------------------------------------
+
+def make_round_fn(loss_fn: Callable, cfg: FLConfig,
+                  capacity: int) -> Callable:
+    """Returns jit'd ``round_fn(params, data, selected, weights, key)``.
+
+    ``selected``/``weights`` come from the scheduler (host side); the round
+    body — local training for all K clients, masked FedAvg — is one SPMD
+    program.
+    """
+    trainer = make_local_trainer(loss_fn, cfg)
+    steps_per_epoch = max(1, -(-capacity // cfg.batch_size))
+    max_steps = cfg.local_epochs * steps_per_epoch
+
+    @jax.jit
+    def round_fn(params: Params, images: Array, labels: Array, mask: Array,
+                 sizes: Array, selected: Array, key: Array) -> Params:
+        k = images.shape[0]
+        # Per-client active step schedule: E * ceil(size_k / B) steps.
+        steps_k = cfg.local_epochs * jnp.ceil(
+            sizes.astype(jnp.float32) / cfg.batch_size)
+        step_idx = jnp.arange(max_steps, dtype=jnp.float32)[None, :]
+        active = (step_idx < steps_k[:, None]).astype(jnp.float32)
+        active = active * selected[:, None]             # frozen if unselected
+        keys = jax.random.split(key, k)
+        client_params = trainer(params, images, labels, mask, active, keys)
+        # FedAvg weights D_k / D_r over the selected set.
+        w = sizes.astype(jnp.float32) * selected
+        w = w / jnp.maximum(jnp.sum(w), 1.0)
+        return fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Full training driver (Alg. 1)
+# ---------------------------------------------------------------------------
+
+def run_federated(
+    *,
+    init_params: Params,
+    loss_fn: Callable,
+    eval_fn: Callable[[Params, Array, Array], Array],
+    data: partition_lib.ClientDataset,
+    net: wireless.NetworkState,
+    wcfg: wireless.WirelessConfig,
+    scfg: scheduler.SchedulerConfig,
+    fcfg: FLConfig,
+    key: Array,
+    eval_every: int = 1,
+) -> tuple[Params, List[RoundRecord]]:
+    """Run ``num_rounds`` of FEEL; returns final params + per-round records."""
+    k_dev = data.num_devices
+    round_fn = make_round_fn(loss_fn, fcfg, data.capacity)
+
+    # On-device statistics reported to the server (Alg. 1 line 5).
+    hists = jax.vmap(
+        lambda lab, m: diversity.label_histogram(lab, m, fcfg.num_classes)
+    )(data.labels, data.mask)
+
+    ages = jnp.zeros((k_dev,), jnp.int32)
+    params = init_params
+    history: List[RoundRecord] = []
+    test_x = synthetic.to_float(data.test_images)
+
+    for r in range(fcfg.num_rounds):
+        key, k_fade, k_sched, k_train = jax.random.split(key, 4)
+        index = diversity.diversity_index(
+            label_hists=hists, data_sizes=data.sizes, ages=ages,
+            weights=fcfg.index_weights, measure=fcfg.measure)
+        gains = wireless.sample_fading(k_fade, net)
+        sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
+        result = scheduler.schedule(k_sched, index, ages, data.sizes,
+                                    gains, net, wcfg, sch)
+        selected = result.selected
+        params = round_fn(params, data.images, data.labels, data.mask,
+                          data.sizes, selected, k_train)
+        ages = jnp.where(selected > 0.0, 0, ages + 1)
+
+        if (r % eval_every) == 0 or r == fcfg.num_rounds - 1:
+            acc = float(eval_fn(params, test_x, data.test_labels))
+        else:
+            acc = float("nan")
+        n_sel = int(jnp.sum(selected))
+        e_total = float(jnp.sum(result.energy))
+        history.append(RoundRecord(
+            round=r, accuracy=acc, n_selected=n_sel,
+            round_time=float(result.round_time),
+            energy_total=e_total,
+            energy_per_device=e_total / max(n_sel, 1),
+            selected=np.asarray(selected),
+        ))
+    return params, history

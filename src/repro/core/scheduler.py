@@ -1,0 +1,253 @@
+"""Scheduling policies for FEEL rounds (paper Alg. 2 + §VI baselines).
+
+Implements:
+
+* :func:`das_schedule` — the paper's Data-Aware Scheduling: iterate Sub1
+  (selection, ``core.selection``) and Sub2 (bandwidth, ``core.bandwidth``)
+  until the (x, alpha) pair stabilizes or ``iterations_max`` is hit
+  (Algorithm 2).
+* :func:`abs_schedule` — age-based scheduling baseline (Yang et al.):
+  priority ``f(k) = log(1 + age_k)``.
+* :func:`random_schedule` — uniform-random priorities.
+* :func:`full_schedule` — the paper's "baseline": every device
+  participates, bandwidth optimized with Sub2 only.
+* :func:`topn_schedule` — fixed-count stress-test mode used by the paper's
+  Fig. 2/3 experiments (select exactly n by a given priority, then Sub2).
+
+All policies share one jit-able entry point, :func:`schedule`, returning a
+:class:`ScheduleResult` with the realized per-round time/energy so the FL
+driver (``core.federated``) can account costs identically across policies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bandwidth as bw
+from repro.core import selection as sel
+from repro.core import wireless
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    method: str = "das"              # das | abs | random | full
+    n_min: int = 1                   # N in (13e)
+    n_fixed: Optional[int] = None    # paper Fig. 2/3 stress mode
+    iterations_max: int = 8          # Alg. 2 outer iterations
+    local_epochs: int = 1            # E, enters t_train (Eq. 8)
+    sub1: sel.Sub1Params = sel.Sub1Params()
+    sub2: bw.Sub2Params = bw.Sub2Params()
+    x_tol: float = 0.5               # convergence: selection unchanged
+    alpha_tol: float = 1e-4          # convergence: allocation stable
+    # Alg. 2 under-specifies how Sub1 prices a currently-unselected
+    # device's energy.  "strict" uses the current allocation (alpha ~ 0 ->
+    # infinite energy -> monotone shrinking selection, the literal
+    # reading, reproduces the paper's small selected sets);  "mean"
+    # re-prices dropouts at the mean selected share so the set can grow
+    # back (selects 80%+ at Table-I constants).  See EXPERIMENTS.md
+    # §Repro-divergences.
+    reentry: str = "strict"          # strict | mean
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ScheduleResult:
+    selected: Array      # (K,) {0,1}
+    alpha: Array         # (K,) bandwidth shares, sum <= 1
+    t_train: Array       # (K,) seconds
+    t_up: Array          # (K,) seconds (inf if unselected)
+    energy: Array        # (K,) joules (0 if unselected)
+    round_time: Array    # scalar, Eq. 7
+    iterations: Array    # scalar, DAS outer iterations used
+
+    def tree_flatten(self):
+        return ((self.selected, self.alpha, self.t_train, self.t_up,
+                 self.energy, self.round_time, self.iterations), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _finalize(selected: Array, alpha: Array, t_train: Array, gains: Array,
+              net: wireless.NetworkState, cfg: wireless.WirelessConfig,
+              iterations: Array | int = 0) -> ScheduleResult:
+    t_up = wireless.upload_time(alpha, gains, net.tx_power, cfg)
+    t_up = jnp.where(selected > 0.0, t_up, jnp.inf)
+    energy = jnp.where(selected > 0.0, net.tx_power *
+                       jnp.where(jnp.isinf(t_up), 0.0, t_up), 0.0)
+    t_round = wireless.round_time(
+        selected, t_train, jnp.where(jnp.isinf(t_up), 0.0, t_up))
+    return ScheduleResult(selected, alpha, t_train,
+                          t_up, energy, t_round,
+                          jnp.asarray(iterations, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# DAS — Algorithm 2
+# ---------------------------------------------------------------------------
+
+def das_schedule(index: Array, data_sizes: Array, gains: Array,
+                 net: wireless.NetworkState, cfg: wireless.WirelessConfig,
+                 sch: SchedulerConfig) -> ScheduleResult:
+    """Data-aware scheduling: iterate Sub1 <-> Sub2 (paper Alg. 2).
+
+    Sub1 needs per-device energies at *some* bandwidth point.  Selected
+    devices use their current alpha; unselected devices are evaluated at
+    the mean selected share (a hypothetical re-entry allocation), so the
+    selection can both shrink and grow across iterations.
+    """
+    k = index.shape[0]
+    t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
+
+    x0 = jnp.ones((k,), jnp.float32)                 # Alg. 2 line 1
+    alpha0 = jnp.full((k,), 1.0 / k, jnp.float32)    # line 2: uniform
+
+    def cond(carry):
+        x, alpha, x_prev, alpha_prev, it = carry
+        changed = (jnp.sum(jnp.abs(x - x_prev)) >= sch.x_tol) | \
+                  (jnp.max(jnp.abs(alpha - alpha_prev)) >= sch.alpha_tol)
+        return (it < sch.iterations_max) & ((it == 0) | changed)
+
+    def body(carry):
+        x, alpha, _, _, it = carry
+        if sch.reentry == "mean":
+            # Hypothetical share for currently-unselected devices.
+            n_sel = jnp.maximum(jnp.sum(x), 1.0)
+            mean_share = jnp.sum(alpha) / n_sel
+            alpha_eval = jnp.where(alpha > cfg.min_alpha, alpha,
+                                   jnp.maximum(mean_share, 1.0 / k))
+        else:  # strict: dropped devices keep their ~zero allocation
+            alpha_eval = jnp.maximum(alpha, cfg.min_alpha)
+        t_up = wireless.upload_time(alpha_eval, gains, net.tx_power, cfg)
+        energy = net.tx_power * t_up
+        # Sub1: select.
+        x_new, _, _ = sel.solve_sub1(energy, t_train + t_up, index,
+                                     dataclasses.replace(
+                                         sch.sub1, n_min=sch.n_min))
+        # Sub2: allocate bandwidth over the new selection.
+        alpha_new, _ = bw.pgd_allocation(x_new, t_train, gains,
+                                         net.tx_power, cfg, sch.sub2)
+        return x_new, alpha_new, x, alpha, it + 1
+
+    init = (x0, alpha0, jnp.zeros_like(x0), jnp.zeros_like(alpha0),
+            jnp.asarray(0, jnp.int32))
+    x, alpha, _, _, iters = jax.lax.while_loop(cond, body, init)
+    return _finalize(x, alpha, t_train, gains, net, cfg, iters)
+
+
+# ---------------------------------------------------------------------------
+# Priority-based baselines (ABS / random / fixed-n)
+# ---------------------------------------------------------------------------
+
+def _topn_by_priority(priority: Array, n: int) -> Array:
+    _, top = jax.lax.top_k(priority, n)
+    return jnp.zeros_like(priority).at[top].set(1.0)
+
+
+def topn_schedule(priority: Array, n: int, data_sizes: Array, gains: Array,
+                  net: wireless.NetworkState, cfg: wireless.WirelessConfig,
+                  sch: SchedulerConfig) -> ScheduleResult:
+    """Select exactly ``n`` devices by ``priority``, then run Sub2."""
+    t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
+    x = _topn_by_priority(priority, n)
+    alpha, _ = bw.pgd_allocation(x, t_train, gains, net.tx_power, cfg,
+                                 sch.sub2)
+    return _finalize(x, alpha, t_train, gains, net, cfg)
+
+
+def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
+                 net: wireless.NetworkState, cfg: wireless.WirelessConfig,
+                 sch: SchedulerConfig, key: Optional[Array] = None,
+                 deadline: Optional[float] = None) -> ScheduleResult:
+    """Age-based scheduling (paper §VI baselines, Yang et al. f(k)).
+
+    Priority is ``log(1 + age)`` with a small random tiebreak (all-zero
+    ages on round 0 would otherwise pick device order).  With ``n_fixed``
+    it is a top-n policy; otherwise devices are admitted greedily in
+    priority order while the deadline's minimal bandwidth fits the budget
+    — mirroring "collect as many aged updates as fit" from [9, 10].
+    """
+    t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
+    priority = jnp.log1p(ages.astype(jnp.float32))
+    if key is not None:
+        priority = priority + 1e-4 * jax.random.uniform(key, priority.shape)
+    if sch.n_fixed is not None:
+        return topn_schedule(priority, sch.n_fixed, data_sizes, gains, net,
+                             cfg, sch)
+    # Greedy admission under a deadline: per-device minimal alpha at the
+    # deadline is independent across devices -> sort + cumsum.
+    if deadline is None:
+        # Default deadline: median device at an equal 1/8 band share.
+        a_ref = jnp.full_like(priority, 1.0 / 8.0)
+        t_ref = t_train + wireless.upload_time(a_ref, gains, net.tx_power,
+                                               cfg)
+        deadline_arr = jnp.median(t_ref)
+    else:
+        deadline_arr = jnp.asarray(deadline, jnp.float32)
+    ones = jnp.ones_like(priority)
+    a_min = bw.alpha_for_deadline(deadline_arr, ones, t_train, gains,
+                                  net.tx_power, cfg)
+    order = jnp.argsort(-priority)
+    csum = jnp.cumsum(a_min[order])
+    admit_sorted = (csum <= 1.0)
+    # Guarantee the minimum count even if the deadline is tight.
+    admit_sorted = admit_sorted | (jnp.arange(priority.shape[0]) < sch.n_min)
+    x = jnp.zeros_like(priority).at[order].set(
+        admit_sorted.astype(jnp.float32))
+    alpha, _ = bw.pgd_allocation(x, t_train, gains, net.tx_power, cfg,
+                                 sch.sub2)
+    return _finalize(x, alpha, t_train, gains, net, cfg)
+
+
+def random_schedule(key: Array, data_sizes: Array, gains: Array,
+                    net: wireless.NetworkState,
+                    cfg: wireless.WirelessConfig,
+                    sch: SchedulerConfig) -> ScheduleResult:
+    """Uniform-random selection baseline (paper §VI-B)."""
+    priority = jax.random.uniform(key, data_sizes.shape)
+    n = sch.n_fixed if sch.n_fixed is not None else sch.n_min
+    return topn_schedule(priority, n, data_sizes, gains, net, cfg, sch)
+
+
+def full_schedule(data_sizes: Array, gains: Array,
+                  net: wireless.NetworkState, cfg: wireless.WirelessConfig,
+                  sch: SchedulerConfig) -> ScheduleResult:
+    """Paper's baseline: all devices participate; Sub2 optimizes alpha."""
+    t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
+    x = jnp.ones_like(data_sizes, dtype=jnp.float32)
+    alpha, _ = bw.pgd_allocation(x, t_train, gains, net.tx_power, cfg,
+                                 sch.sub2)
+    return _finalize(x, alpha, t_train, gains, net, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Unified entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "sch"))
+def schedule(key: Array, index: Array, ages: Array, data_sizes: Array,
+             gains: Array, net: wireless.NetworkState,
+             cfg: wireless.WirelessConfig,
+             sch: SchedulerConfig) -> ScheduleResult:
+    """Dispatch on ``sch.method``; one jit for the whole round's decision."""
+    if sch.method == "das":
+        if sch.n_fixed is not None:
+            return topn_schedule(index, sch.n_fixed, data_sizes, gains, net,
+                                 cfg, sch)
+        return das_schedule(index, data_sizes, gains, net, cfg, sch)
+    if sch.method == "abs":
+        return abs_schedule(ages, data_sizes, gains, net, cfg, sch, key)
+    if sch.method == "random":
+        return random_schedule(key, data_sizes, gains, net, cfg, sch)
+    if sch.method == "full":
+        return full_schedule(data_sizes, gains, net, cfg, sch)
+    raise ValueError(f"unknown scheduling method: {sch.method!r}")

@@ -1,0 +1,95 @@
+"""Sub1 — device selection via relaxation + rounding (paper Eq. 14/16).
+
+For fixed per-device energy ``E_k``, completion time ``t_k = t_train_k +
+t_up_k`` and diversity index ``I_k``, the paper relaxes the binary
+selection to ``0 <= x_k <= 1`` (Eq. 16) and rounds, falling back to the
+top-N priorities if the minimum-count constraint (14c) fails.
+
+We solve the relaxation *exactly* instead of calling a generic LP solver.
+Reinstating the deadline coupling (13b), the relaxed program is::
+
+    min_{x,T}  lam_T * T + sum_k (lam_E E_k - lam_I I_k) x_k
+    s.t.       t_k x_k <= T,  0 <= x_k <= 1.
+
+For fixed ``T`` it separates per device: with cost coefficient
+``c_k = lam_E E_k - lam_I I_k``, the optimum is ``x_k = min(1, T/t_k)`` if
+``c_k < 0`` else ``0``.  The outer objective ``J(T)`` is piecewise-linear
+with breakpoints at ``{t_k}``, so scanning the K breakpoints yields the
+global optimum in O(K^2) vectorized work (K ~ 100).  The continuous ``x``
+is the paper's "selection priority"; rounding + the top-N fallback follow
+Algorithm 2 lines 6-9.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Sub1Params:
+    lambda_e: float = 0.25   # paper §VI-A: lam_E = lam_T = 1/4, lam_I = 1/2
+    lambda_t: float = 0.25
+    lambda_i: float = 0.5
+    n_min: int = 1           # N: minimum devices per round (paper: 1)
+
+
+def solve_sub1_relaxed(energy: Array, times: Array, index: Array,
+                       params: Sub1Params) -> tuple[Array, Array]:
+    """Exact solution of the relaxed Sub1 (Eq. 16).
+
+    Args:
+      energy: (K,) E_k at the current bandwidth allocation.
+      times:  (K,) t_train_k + t_up_k at the current allocation.
+      index:  (K,) diversity index I_k.
+
+    Returns:
+      (x_relaxed, t_star): continuous priorities in [0, 1] and the optimal
+      deadline.
+    """
+    c = params.lambda_e * energy - params.lambda_i * index      # (K,)
+    beneficial = c < 0.0
+    t_safe = jnp.maximum(times, 1e-9)
+
+    # J(T) evaluated at every breakpoint T = t_j (plus T = 0).
+    cand = jnp.concatenate([jnp.zeros((1,), times.dtype), t_safe])  # (K+1,)
+    frac = jnp.minimum(1.0, cand[:, None] / t_safe[None, :])        # (K+1,K)
+    contrib = jnp.where(beneficial[None, :], c[None, :] * frac, 0.0)
+    j_vals = params.lambda_t * cand + jnp.sum(contrib, axis=1)      # (K+1,)
+    t_star = cand[jnp.argmin(j_vals)]
+
+    x = jnp.where(beneficial, jnp.minimum(1.0, t_star / t_safe), 0.0)
+    return x, t_star
+
+
+def round_with_min(x_relaxed: Array, index: Array, n_min: int) -> Array:
+    """Round priorities to {0,1}; enforce (14c) via top-N fallback.
+
+    The paper: "if the condition (14c) is not satisfied, we set x_k = 1 for
+    the N devices with highest priorities."  Ties are broken by the
+    diversity index so the fallback still prefers data-rich devices.
+    """
+    x = (x_relaxed >= 0.5).astype(jnp.float32)
+    need_fallback = jnp.sum(x) < n_min
+    # Priority = relaxed value, index as tiebreaker.
+    idx_norm = index / jnp.maximum(jnp.max(index), 1e-12)
+    priority = x_relaxed + 1e-4 * idx_norm
+    _, top = jax.lax.top_k(priority, n_min)
+    fallback = jnp.zeros_like(x).at[top].set(1.0)
+    # Fallback *adds* to the rounded set (the constraint is >= N).
+    return jnp.where(need_fallback, jnp.maximum(x, fallback), x)
+
+
+def solve_sub1(energy: Array, times: Array, index: Array,
+               params: Sub1Params) -> tuple[Array, Array, Array]:
+    """Full Sub1: relax -> round -> enforce minimum count.
+
+    Returns (x_binary, x_relaxed, t_star).
+    """
+    x_rel, t_star = solve_sub1_relaxed(energy, times, index, params)
+    x_bin = round_with_min(x_rel, index, params.n_min)
+    return x_bin, x_rel, t_star

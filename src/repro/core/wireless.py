@@ -1,0 +1,155 @@
+"""Wireless edge channel / time / energy models (paper §IV-C, Eq. 6-10).
+
+The paper models a single-cell OFDMA uplink: ``K`` edge devices in a 500 m
+square, one BS at the centre.  Per-device channel gain combines large-scale
+pathloss and small-scale Rayleigh fading::
+
+    |g_k|^2 = d_k^{-beta} * |h_k|^2 ,   h_k ~ Rayleigh(1)
+
+Achievable uplink rate with bandwidth fraction ``alpha_k`` (Eq. 6)::
+
+    r_k = alpha_k * B * log2(1 + g_k P_k / (alpha_k * B * N0))
+
+Upload time (Eq. 9), transmit energy (Eq. 10), local training time (Eq. 8)
+and synchronous round duration (Eq. 7) follow.
+
+Everything is vectorized over the ``K`` device axis and jit-safe; the
+scheduler (``core/scheduler.py``) composes these into Sub1/Sub2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessConfig:
+    """Static wireless-edge simulation parameters (paper Table I)."""
+
+    bandwidth_hz: float = 1.0e6          # B: total OFDMA bandwidth
+    noise_psd: float = 3.98e-21          # N0: -174 dBm/Hz
+    pathloss_exp: float = 3.0            # beta (paper: alpha)
+    cell_side_m: float = 500.0           # square side; BS at centre
+    model_bits: float = 100e3            # s: update size (paper: 100 kbits)
+    cpu_freq_range: tuple = (1.0e9, 3.0e9)      # f_k in [1, 3] GHz
+    cycles_per_bit_range: tuple = (10.0, 30.0)  # C_k in [10, 30] cycles/bit
+    tx_power_range: tuple = (1.0, 5.0)          # P_k in [1, 5] W
+    bits_per_sample: float = 28.0 * 28.0 * 8.0  # MNIST-like greyscale image
+    min_alpha: float = 1e-6              # numerical floor for bandwidth share
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NetworkState:
+    """Per-device random draws for one simulation run.
+
+    ``pathloss`` is static across rounds; ``fading`` is redrawn each round
+    via :func:`sample_fading`.
+    """
+
+    distance_m: Array      # (K,)
+    pathloss: Array        # (K,)  d^-beta
+    tx_power: Array        # (K,)  P_k [W]
+    cpu_freq: Array        # (K,)  f_k [Hz]
+    cycles_per_bit: Array  # (K,)  C_k
+
+    def tree_flatten(self):
+        return (
+            (self.distance_m, self.pathloss, self.tx_power, self.cpu_freq,
+             self.cycles_per_bit),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def num_devices(self) -> int:
+        return self.distance_m.shape[0]
+
+
+def sample_network(key: Array, num_devices: int,
+                   cfg: WirelessConfig) -> NetworkState:
+    """Draw device placement and hardware capabilities (paper §VI-A.1)."""
+    k_pos, k_pow, k_cpu, k_cyc = jax.random.split(key, 4)
+    # Uniform placement in the square; BS at the centre.
+    pos = jax.random.uniform(k_pos, (num_devices, 2),
+                             minval=0.0, maxval=cfg.cell_side_m)
+    centre = jnp.asarray([cfg.cell_side_m / 2.0, cfg.cell_side_m / 2.0])
+    dist = jnp.linalg.norm(pos - centre, axis=-1)
+    dist = jnp.maximum(dist, 1.0)  # 1 m exclusion zone
+    pathloss = dist ** (-cfg.pathloss_exp)
+    tx_power = jax.random.uniform(
+        k_pow, (num_devices,), minval=cfg.tx_power_range[0],
+        maxval=cfg.tx_power_range[1])
+    cpu_freq = jax.random.uniform(
+        k_cpu, (num_devices,), minval=cfg.cpu_freq_range[0],
+        maxval=cfg.cpu_freq_range[1])
+    cycles = jax.random.uniform(
+        k_cyc, (num_devices,), minval=cfg.cycles_per_bit_range[0],
+        maxval=cfg.cycles_per_bit_range[1])
+    return NetworkState(dist, pathloss, tx_power, cpu_freq, cycles)
+
+
+def sample_fading(key: Array, net: NetworkState) -> Array:
+    """Per-round channel gains ``|g_k|^2 = d^-beta * |h|^2`` with Rayleigh h.
+
+    ``|h|^2`` for a unit Rayleigh variable is Exp(1)-distributed.
+    """
+    h2 = jax.random.exponential(key, (net.num_devices,))
+    return net.pathloss * h2
+
+
+def achievable_rate(alpha: Array, gains: Array, tx_power: Array,
+                    cfg: WirelessConfig) -> Array:
+    """Uplink rate r_k (Eq. 6), elementwise over devices.  bits/s.
+
+    Safe at alpha -> 0 (rate -> 0): we floor alpha before the log and mask
+    after, keeping the function differentiable for the PGD solver.
+    """
+    a = jnp.maximum(alpha, cfg.min_alpha)
+    snr = gains * tx_power / (a * cfg.bandwidth_hz * cfg.noise_psd)
+    rate = a * cfg.bandwidth_hz * jnp.log2(1.0 + snr)
+    return jnp.where(alpha > 0.0, rate, 0.0)
+
+
+def upload_time(alpha: Array, gains: Array, tx_power: Array,
+                cfg: WirelessConfig,
+                model_bits: Optional[float] = None) -> Array:
+    """t_up_k = s / r_k (Eq. 9).  Infinite when alpha_k == 0."""
+    s = cfg.model_bits if model_bits is None else model_bits
+    rate = achievable_rate(alpha, gains, tx_power, cfg)
+    return jnp.where(rate > 0.0, s / jnp.maximum(rate, 1e-12), jnp.inf)
+
+
+def upload_energy(alpha: Array, gains: Array, tx_power: Array,
+                  cfg: WirelessConfig,
+                  model_bits: Optional[float] = None) -> Array:
+    """E_k = P_k * t_up_k (Eq. 10)."""
+    t = upload_time(alpha, gains, tx_power, cfg, model_bits)
+    return tx_power * t
+
+
+def train_time(data_sizes: Array, net: NetworkState, cfg: WirelessConfig,
+               local_epochs: int | Array = 1) -> Array:
+    """t_train_k = E * |D_k| * C_k / f_k (Eq. 8).
+
+    ``|D_k|`` counts samples; C_k is cycles/bit so we convert samples to
+    bits with ``cfg.bits_per_sample`` (the paper leaves the unit implicit).
+    """
+    bits = data_sizes.astype(jnp.float32) * cfg.bits_per_sample
+    return local_epochs * bits * net.cycles_per_bit / net.cpu_freq
+
+
+def round_time(selected: Array, t_train: Array, t_up: Array) -> Array:
+    """T = max_k (t_train_k + t_up_k) x_k (Eq. 7); 0 if nothing selected."""
+    total = jnp.where(selected > 0.0, t_train + t_up, 0.0)
+    return jnp.max(total)

@@ -1,0 +1,89 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, layout (B, S, H, hd) <-> kernel
+(BH, S, hd), GQA head expansion, and the interpret-mode switch (True off
+TPU so the kernels validate on CPU; on real TPU backends pass
+``interpret=False``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import diversity as _div
+from repro.kernels import fedavg_agg as _agg
+from repro.kernels import flash_attention as _fa
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedavg_agg(updates: jax.Array, weights: jax.Array,
+               block_p: int = _agg.DEFAULT_BLOCK_P,
+               interpret: bool | None = None) -> jax.Array:
+    """FedAvg weighted aggregation: (K, P) x (K,) -> (P,)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    k, p = updates.shape
+    bp = min(block_p, max(128, 1 << (p - 1).bit_length()))
+    padded, pad = _pad_to(updates, 1, bp)
+    out = _agg.fedavg_agg_kernel(padded, weights, block_p=bp,
+                                 interpret=interpret)
+    return out[:p] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "interpret"))
+def diversity_stats(labels: jax.Array, mask: jax.Array, num_classes: int,
+                    interpret: bool | None = None) -> jax.Array:
+    """(K, N) labels/mask -> (K, 3) [gini-simpson, shannon, count]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _div.diversity_kernel(labels, mask, num_classes,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Batched GQA flash attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) -> (B, Sq, H, hd).
+    Sequences are zero-padded to block multiples; the causal mask plus the
+    `k_pos < seq_len` guard inside the kernel keeps padding inert.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], hd)
+    bq = min(block_q, sq)
+    bk = min(block_k, kf.shape[1])
+    kv_len = kf.shape[1]
+    qf, qpad = _pad_to(qf, 1, bq)
+    kf, _ = _pad_to(kf, 1, bk)
+    vf, _ = _pad_to(vf, 1, bk)
+    out = _fa.flash_attention_kernel(qf, kf, vf, causal=causal,
+                                     window=window, block_q=bq, block_k=bk,
+                                     kv_len=kv_len, interpret=interpret)
+    out = out[:, :sq]
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function mirrors its kernel's contract exactly; the sweep tests in
+``tests/test_kernels.py`` assert the kernels (interpret=True) match these
+within dtype-appropriate tolerances.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_agg(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """(K, P), (K,) -> (P,): FedAvg weighted sum in f32 accumulation."""
+    out = jnp.einsum("kp,k->p", updates.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    return out.astype(updates.dtype)
+
+
+def diversity(labels: jax.Array, mask: jax.Array,
+              num_classes: int) -> jax.Array:
+    """(K, N) labels/mask -> (K, 3) [gini, shannon, count]."""
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    hist = jnp.sum(onehot * mask[..., None], axis=1)      # (K, C)
+    total = jnp.sum(hist, axis=-1)
+    p = hist / jnp.maximum(total, 1.0)[..., None]
+    gini = 1.0 - jnp.sum(p * p, axis=-1)
+    logp = jnp.where(p > 0.0, jnp.log2(jnp.maximum(p, 1e-30)), 0.0)
+    shannon = -jnp.sum(p * logp, axis=-1)
+    return jnp.stack([gini, shannon, total], axis=-1)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0) -> jax.Array:
+    """(BH, Sq, hd) x (BH, Skv, hd) -> (BH, Sq, hd), f32 softmax."""
+    sq, skv = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    visible = jnp.ones((sq, skv), bool)
+    if causal:
+        visible &= k_pos <= q_pos
+    if window > 0:
+        visible &= k_pos > q_pos - window
+    s = jnp.where(visible[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mlstm_sequential(q, k, v, ig, fg):
+    """Step-by-step mLSTM oracle for the chunked implementation.
+
+    q,k,v: (B, S, nh, hd); ig/fg: (B, S, nh) raw gates.
+    Returns h (B, S, nh, hd) float32.
+    """
+    b, s, nh, hd = q.shape
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    igf = ig.astype(jnp.float32)
+
+    def step(carry, t):
+        c, n, m = carry
+        m_new = jnp.maximum(logf[:, t] + m, igf[:, t])
+        f_eff = jnp.exp(logf[:, t] + m - m_new)
+        i_eff = jnp.exp(igf[:, t] - m_new)
+        c = (f_eff[..., None, None] * c
+             + i_eff[..., None, None] * vf[:, t][..., :, None]
+             * kf[:, t][..., None, :])
+        n = f_eff[..., None] * n + i_eff[..., None] * kf[:, t]
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf[:, t]))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        h = jnp.einsum("bhde,bhe->bhd", c, qf[:, t]) / den[..., None]
+        return (c, n, m_new), h
+
+    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (c0, n0, m0), jnp.arange(s))
+    return hs.swapaxes(0, 1)
+
+
+def ssd_sequential(xh, bmat, cmat, log_a, dt_s):
+    """Step-by-step SSD oracle (ssm._ssd_chunked contract)."""
+    b, s, nh, p = xh.shape
+    n = bmat.shape[-1]
+
+    def step(h, t):
+        a = jnp.exp(log_a[:, t])                       # (B, nh)
+        h = (a[..., None, None] * h
+             + jnp.einsum("bh,bn,bhp->bhnp", dt_s[:, t],
+                          bmat[:, t].astype(jnp.float32),
+                          xh[:, t].astype(jnp.float32)))
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, n, p), jnp.float32)
+    h_final, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.swapaxes(0, 1), h_final

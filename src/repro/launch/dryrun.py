@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh).
+
+Run:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k [--multi-pod] [--all] [--out results.json]
+
+For each combination this:
+
+1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod) over
+   512 forced host devices,
+2. lowers + compiles the appropriate step (train_step / prefill_step /
+   serve_step) with ShapeDtypeStruct inputs (no allocation),
+3. prints ``memory_analysis()`` (per-device bytes — proves it fits) and
+   ``cost_analysis()`` (FLOPs / bytes for the §Roofline terms),
+4. parses the post-SPMD HLO for collective operand bytes, and
+5. appends a JSON record consumed by ``benchmarks/roofline.py``.
+
+Cost-accounting methodology: XLA's cost analysis counts a ``while`` body
+ONCE, so with scan-over-layers the per-program numbers exclude repeated
+groups.  The harness therefore lowers each model **twice** (1-group and
+2-group depth); the difference is the exact per-group cost and
+``total = cost(1g) + (G-1) * (cost(2g) - cost(1g))``.  Inner chunk loops
+(attention q-chunks, SSD chunks) are unrolled in the model code so the
+per-group delta is exact.  The sLSTM time scan is corrected analytically
+(trip count = seq_len) — see EXPERIMENTS.md §Dry-run.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro import configs, optim
+from repro.configs import shapes as shapes_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as specs_lib
+from repro.launch import steps as steps_lib
+from repro.models import transformer
+from repro.sharding import params as psharding
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s32|s8|u8|u32|s64|pred|f8\w*)"
+                       r"\[([\d,]*)\]")
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4,
+                "s64": 8, "s8": 1, "u8": 1, "u32": 4, "pred": 1}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of all array shapes in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt[:4] if dt.startswith("f8")
+                                      else dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Parse post-SPMD HLO: per-collective-kind operand bytes + counts.
+
+    Counts the *output* shape of each collective instruction (the bytes
+    that cross links, up to the algorithm factor) — the standard proxy.
+    """
+    per_kind: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([\w-]+)\(", s)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        op = op.rstrip("-start").rstrip("-done") if False else op
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base in per_kind:
+            if op.endswith("-done"):
+                continue  # avoid double counting start/done pairs
+            per_kind[base] += _shape_bytes(type_str)
+            counts[base] += 1
+    return {"bytes": per_kind, "counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _mem_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        try:
+            out[attr] = float(getattr(ma, attr))
+        except AttributeError:
+            pass
+    return out
+
+
+def default_microbatches(cfg, shape, mesh) -> int:
+    """Gradient-accumulation factor keeping per-device activations sane.
+
+    Target <= ~4 sequences per device per microbatch at seq 4k for models
+    with d_model >= 4096 (see §Perf iteration log)."""
+    if shape.kind != "train" or cfg.d_model < 4096:
+        return 1
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    per_dev = shape.global_batch // max(dp, 1)
+    return max(1, per_dev // 4)
+
+
+def lower_one(cfg, shape: shapes_lib.InputShape, mesh,
+              ocfg: Optional[optim.OptimizerConfig] = None,
+              verbose: bool = True,
+              microbatches: Optional[int] = None,
+              mem_only: bool = False,
+              with_mb_memory: bool = True) -> Dict[str, Any]:
+    """Lower + compile; returns the record with costs & collectives."""
+    ocfg = ocfg or optim.OptimizerConfig(
+        state_dtype=("bfloat16" if cfg.arch_type in ("hybrid",)
+                     or "235b" in cfg.name or "398b" in cfg.name
+                     or "72b" in cfg.name else "float32"))
+    if microbatches is None:
+        microbatches = default_microbatches(cfg, shape, mesh)
+    specs = specs_lib.input_specs(cfg, shape, mesh)
+    t0 = time.time()
+
+    mem_override = None
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state_shapes = steps_lib.train_state_shapes(cfg, ocfg)
+            pspecs = psharding.param_shardings(state_shapes["params"], cfg,
+                                               mesh)
+            opt_specs = _opt_shardings(state_shapes, pspecs, mesh)
+            state_in = {"params": _attach(state_shapes["params"], pspecs),
+                        "opt": opt_specs}
+            # Costs/collectives from the microbatches=1 program (grad
+            # accumulation is FLOP-identical); memory from the scan-of-
+            # microbatches program (true sequenced peak).  mem_only skips
+            # the cost program (multi-pod pass: sharding proof + memory).
+            if mem_only and microbatches > 1:
+                step = steps_lib.make_train_step(
+                    cfg, ocfg, mesh, microbatches=microbatches)
+                lowered = jax.jit(step).lower(state_in, specs)
+            else:
+                step = steps_lib.make_train_step(cfg, ocfg, mesh,
+                                                 microbatches=1)
+                lowered = jax.jit(step).lower(state_in, specs)
+                if microbatches > 1 and with_mb_memory:
+                    step_mb = steps_lib.make_train_step(
+                        cfg, ocfg, mesh, microbatches=microbatches)
+                    mem_override = _mem_dict(
+                        jax.jit(step_mb).lower(state_in, specs).compile())
+        elif shape.kind == "prefill":
+            params_shapes = transformer.init_shapes(cfg)
+            pspecs = psharding.param_shardings(params_shapes, cfg, mesh)
+            step = steps_lib.make_prefill_step(cfg, mesh)
+            # Pin the output cache to the decode cache sharding —
+            # without out_shardings XLA materializes a replicated cache
+            # (76 GB/device at qwen2-vl prefill_32k; §Perf-hillclimb).
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            cache_sds = specs_lib.cache_specs(
+                cfg, shape.global_batch, shape.seq_len, mesh,
+                enc_len=shape.seq_len if cfg.is_encdec else 0)
+            cache_out = jax.tree_util.tree_map(lambda s: s.sharding,
+                                               cache_sds)
+            logits_out = NamedSharding(mesh, P(None, None, None))
+            lowered = jax.jit(
+                step, out_shardings=(logits_out, cache_out)).lower(
+                _attach(params_shapes, pspecs), specs)
+        else:  # decode
+            params_shapes = transformer.init_shapes(cfg)
+            pspecs = psharding.param_shardings(params_shapes, cfg, mesh)
+            step = steps_lib.make_serve_step(cfg, mesh)
+            lowered = jax.jit(step).lower(
+                _attach(params_shapes, pspecs), specs["tokens"],
+                specs["cache"], specs["index"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    rec: Dict[str, Any] = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "num_devices": int(mesh.devices.size),
+        "cost": _cost_dict(compiled),
+        "memory": mem_override or _mem_dict(compiled),
+        "memory_mb1": _mem_dict(compiled) if mem_override else None,
+        "collectives": collective_bytes(compiled.as_text()),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "microbatches": microbatches,
+    }
+    if verbose:
+        print(f"[dryrun] {cfg.name} x {shape.name} x {rec['mesh']}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {rec['memory']}")
+        print(f"  cost_analysis:   {rec['cost']}")
+        print(f"  collectives:     total "
+              f"{rec['collectives']['total_bytes'] / 1e9:.3f} GB "
+              f"{rec['collectives']['counts']}")
+    return rec
+
+
+def _attach(shapes, shardings):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def _opt_shardings(state_shapes, pspecs, mesh):
+    """Optimizer moments shard like their parameters; scalars replicate."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    out = {}
+    for k, v in state_shapes["opt"].items():
+        if k in ("mu", "nu"):
+            out[k] = jax.tree_util.tree_map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                v, pspecs)
+        else:
+            out[k] = jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=rep)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def run_matrix(arch_ids, shape_names, multi_pod_list, out_path: str,
+               corrected: bool = True) -> int:
+    """Staged execution (single CPU core budget):
+
+    Stage 1 — baseline lower+compile for every (arch, shape, mesh):
+      single-pod full record (cost + microbatched memory), multi-pod
+      memory-mode proof.  This is the hard deliverable; dump after each.
+    Stage 2 — depth-correction lowers (1-group / 2-group) per single-pod
+      pair, updating ``cost_corrected``.
+    """
+    results = []
+    failures = 0
+    pairs = []
+    for arch in arch_ids:
+        cfg = configs.get(arch)
+        for sname in shape_names:
+            shape = shapes_lib.get_shape(sname)
+            ok, why = shapes_lib.applicable(cfg, shape)
+            if not ok:
+                print(f"[dryrun] SKIP {cfg.name} x {sname}: {why}",
+                      flush=True)
+                results.append({"arch": cfg.name, "shape": sname,
+                                "skipped": why})
+                continue
+            pairs.append((cfg, shape))
+
+    # Stage 1: every pair, every mesh.
+    for cfg, shape in pairs:
+        for mp in multi_pod_list:
+            mesh = mesh_lib.make_production_mesh(multi_pod=mp)
+            try:
+                rec = lower_one(cfg, shape, mesh, mem_only=mp)
+                results.append(rec)
+                print(f"[dryrun] OK {cfg.name} x {shape.name} x "
+                      f"{rec['mesh']}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"[dryrun] FAIL {cfg.name} x {shape.name} "
+                      f"multi_pod={mp}: {type(e).__name__}: {e}",
+                      flush=True)
+                results.append({"arch": cfg.name, "shape": shape.name,
+                                "multi_pod": mp, "error": str(e)})
+            _dump(results, out_path)
+
+    # Stage 2: depth corrections (single-pod only).
+    if corrected:
+        mesh = mesh_lib.make_production_mesh(multi_pod=False)
+        for cfg, shape in pairs:
+            if cfg.num_groups == 1 or cfg.layer_mode == "unroll":
+                for rec in results:
+                    if (rec.get("arch") == cfg.name
+                            and rec.get("shape") == shape.name
+                            and rec.get("num_devices") == 256):
+                        rec["cost_corrected"] = dict(rec["cost"])
+                        rec["collectives_corrected_bytes"] = \
+                            rec["collectives"]["total_bytes"]
+                continue
+            try:
+                c1 = lower_one(dataclasses.replace(
+                    cfg, num_layers=cfg.pattern_period), shape, mesh,
+                    verbose=False, microbatches=1)
+                c2 = lower_one(dataclasses.replace(
+                    cfg, num_layers=2 * cfg.pattern_period), shape, mesh,
+                    verbose=False, microbatches=1)
+                for rec in results:
+                    if (rec.get("arch") == cfg.name
+                            and rec.get("shape") == shape.name
+                            and rec.get("num_devices") == 256):
+                        g = cfg.num_groups
+                        rec["cost_corrected"] = {
+                            key: c1["cost"][key] + (g - 1) *
+                            (c2["cost"][key] - c1["cost"][key])
+                            for key in ("flops", "bytes")}
+                        rec["collectives_corrected_bytes"] = (
+                            c1["collectives"]["total_bytes"] + (g - 1) *
+                            (c2["collectives"]["total_bytes"]
+                             - c1["collectives"]["total_bytes"]))
+                print(f"[dryrun] CORRECTED {cfg.name} x {shape.name}",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001
+                print(f"[dryrun] CORRECTION-FAIL {cfg.name} x "
+                      f"{shape.name}: {e}", flush=True)
+            _dump(results, out_path)
+    _dump(results, out_path)
+    return failures
+
+
+def _dump(results, out_path):
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 mesh (default also runs 16x16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-corrected", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) \
+        else [args.arch]
+    shape_names = ([s.name for s in shapes_lib.SHAPES]
+                   if (args.all or not args.shape) else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = run_matrix(archs, shape_names, meshes, args.out,
+                          corrected=not args.no_corrected)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

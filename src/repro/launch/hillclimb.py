@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb re-lowers: the optimized variants of the three pairs.
+
+Pair A  qwen3-14b x train_4k      — §Perf iterations 0-6 (sequence
+        parallelism, padded head sharding, vocab-dim sharding, scan
+        microbatching) are already the shipped defaults; its baseline
+        row in dryrun_results.json IS the optimized state.  This script
+        re-measures it with iteration 7 (below) applied.
+Pair B  qwen3-moe-235b x train_4k — MoE dispatch: ragged (sort +
+        lax.ragged_dot; does not partition under GSPMD) -> GShard
+        grouped einsum dispatch (moe_impl="dense_grouped").
+Pair C  qwen2-vl-72b x prefill_32k — prefill output cache pinned to the
+        decode cache sharding via out_shardings (was: replicated).
+
+Iteration 7 (pair A): attn q-chunk 1024 -> 2048 (halves mask/bias
+overhead + score-buffer count; napkin: ~no FLOP change, fewer
+intermediate materializations).
+
+Usage:  PYTHONPATH=src python -m repro.launch.hillclimb \
+            [--out dryrun_hillclimb.json]
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro import configs
+from repro.configs import shapes as shapes_lib
+from repro.launch import dryrun, mesh as mesh_lib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="dryrun_hillclimb.json")
+    ap.add_argument("--pairs", default="A,B,C")
+    args = ap.parse_args()
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    results = []
+    pairs = set(args.pairs.split(","))
+
+    def run(tag, cfg, shape_name, **kw):
+        shape = shapes_lib.get_shape(shape_name)
+        rec = dryrun.lower_one(cfg, shape, mesh, **kw)
+        rec["tag"] = tag
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+        print(f"[hillclimb] {tag}: mem={rec['memory']} "
+              f"cost={rec['cost']} coll="
+              f"{rec['collectives']['total_bytes'] / 1e9:.2f}GB",
+              flush=True)
+
+    if "B" in pairs:
+        # Pair B: grouped dispatch (now the config default).
+        cfg = configs.get("qwen3_moe_235b_a22b")
+        run("B/moe-grouped-dispatch/train_4k", cfg, "train_4k")
+    if "C" in pairs:
+        # Pair C: prefill with pinned cache out_shardings (now default
+        # in lower_one).
+        cfg = configs.get("qwen2_vl_72b")
+        run("C/prefill-pinned-cache/prefill_32k", cfg, "prefill_32k")
+    if "A" in pairs:
+        # Pair A iteration 7: larger attention q-chunk.
+        cfg = dataclasses.replace(configs.get("qwen3_14b"),
+                                  attn_chunk=2048)
+        run("A/qchunk-2048/train_4k", cfg, "train_4k")
+    if "B2" in pairs:
+        # Pair B iteration 2: bigger dispatch groups (fewer, larger
+        # einsums; same capacity math).
+        cfg = dataclasses.replace(configs.get("qwen3_moe_235b_a22b"),
+                                  moe_group_size=8192)
+        run("B/moe-group-8192/train_4k", cfg, "train_4k")
+    if "C2" in pairs:
+        # Pair C iteration 2: prefill attention q-chunk 2048.
+        cfg = dataclasses.replace(configs.get("qwen2_vl_72b"),
+                                  attn_chunk=2048)
+        run("C/qchunk-2048/prefill_32k", cfg, "prefill_32k")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction (DESIGN.md §5).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+Functions only — importing this module never touches jax device state;
+``dryrun.py`` sets XLA_FLAGS for 512 host devices *before* any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over the actually-present devices (tests / examples)."""
+    n = len(jax.devices())
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def data_parallel_size(mesh: jax.sharding.Mesh) -> int:
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return size

@@ -1,0 +1,141 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no alloc).
+
+``input_specs(cfg, shape, mesh)`` returns the exact pytree the step
+functions consume, with shardings attached:
+
+* train:   {"inputs", "labels" (+"positions" for M-RoPE,
+            +"encoder_inputs" for enc-dec)}
+* prefill: {"inputs" (+extras as above)}
+* decode:  {"tokens", "index", "cache"}
+
+Batch dims shard over (pod, data) when divisible (long_500k's batch=1
+stays replicated); token/embedding feature dims replicate; decode caches
+shard batch over (pod, data) and KV heads over model (GSPMD pads
+non-divisible head counts — noted in the roofline analysis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.models import common, transformer
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+
+Params = Any
+
+
+def _sds(shape, dtype, mesh: Mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_spec(batch: int, mesh: Mesh, extra_dims: int) -> P:
+    axes = rules.resolve("batch", mesh)
+    size = 1
+    names = axes if isinstance(axes, tuple) else ((axes,) if axes else ())
+    for a in names:
+        size *= mesh.shape[a]
+    lead = axes if (axes and batch % max(size, 1) == 0 and batch >= size) \
+        else None
+    return P(lead, *([None] * extra_dims))
+
+
+def token_specs(cfg: ModelConfig, batch: int, seq: int,
+                mesh: Mesh) -> Dict[str, Any]:
+    """Training/prefill inputs."""
+    out: Dict[str, Any] = {}
+    if cfg.input_mode == "embeddings" and not cfg.is_encdec:
+        out["inputs"] = _sds((batch, seq, cfg.d_model), jnp.bfloat16, mesh,
+                             _batch_spec(batch, mesh, 2))
+    else:
+        out["inputs"] = _sds((batch, seq), jnp.int32, mesh,
+                             _batch_spec(batch, mesh, 1))
+    out["labels"] = _sds((batch, seq), jnp.int32, mesh,
+                         _batch_spec(batch, mesh, 1))
+    if cfg.mrope_sections:
+        out["positions"] = _sds((3, batch, seq), jnp.int32, mesh,
+                                P(None, *_batch_spec(batch, mesh, 1)))
+    if cfg.is_encdec:
+        # Audio stub: precomputed frame embeddings, same sequence length.
+        out["encoder_inputs"] = _sds((batch, seq, cfg.d_model),
+                                     jnp.bfloat16, mesh,
+                                     _batch_spec(batch, mesh, 2))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                mesh: Mesh, enc_len: int = 0) -> Params:
+    """ShapeDtypeStructs matching ``transformer.init_cache``."""
+    dtype = common.dtype_of(cfg.dtype_compute)
+    shapes = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len, dtype,
+                                       enc_len or None))
+
+    bspec = _batch_spec(batch, mesh, 0)
+    b_axis = bspec[0]
+    tensor = rules.resolve("tensor", mesh)
+
+    def _div(dim: int) -> bool:
+        # in_shardings must divide exactly (no GSPMD padding on inputs)
+        size = 1
+        names = tensor if isinstance(tensor, tuple) else (
+            (tensor,) if tensor else ())
+        for a in names:
+            size *= mesh.shape[a]
+        return size > 1 and dim % size == 0
+
+    def leaf_spec(path: str, leaf) -> P:
+        nd = len(leaf.shape)
+        name = path.rsplit("/", 1)[-1]
+        # (G, B, S, KV, hd) attention k/v: shard KV heads over `model`
+        # when divisible, else the head_dim, else replicate (GQA head
+        # counts < 16 are common; head_dim 128/64 always divides).
+        if name in ("k", "v", "cross_k", "cross_v") and nd == 5:
+            kv, hd = leaf.shape[3], leaf.shape[4]
+            if _div(kv):
+                return P(None, b_axis, None, tensor, None)
+            if _div(hd):
+                return P(None, b_axis, None, None, tensor)
+            return P(None, b_axis, None, None, None)
+        if name == "h" and nd == 5:          # mamba (G,B,nh,n,p)
+            nh = leaf.shape[2]
+            return P(None, b_axis, tensor if _div(nh) else None, None,
+                     None)
+        if name == "conv" and nd == 4:       # (G,B,K,din)
+            din = leaf.shape[3]
+            return P(None, b_axis, None, tensor if _div(din) else None)
+        if nd >= 2:
+            return P(None, b_axis, *([None] * (nd - 2)))
+        return P(None)
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{path}/{k}", v) for k, v in node.items()}
+        return _sds(node.shape, node.dtype, mesh, leaf_spec(path, node))
+
+    return walk("", shapes)
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape,
+                 mesh: Mesh) -> Dict[str, Any]:
+    batch = shape.global_batch
+    enc_len = shape.seq_len if cfg.is_encdec else 0
+    return {
+        "tokens": _sds((batch, 1), jnp.int32, mesh,
+                       _batch_spec(batch, mesh, 1)),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache_specs(cfg, batch, shape.seq_len, mesh, enc_len),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                mesh: Mesh) -> Dict[str, Any]:
+    if shape.kind in ("train", "prefill"):
+        return token_specs(cfg, shape.global_batch, shape.seq_len, mesh)
+    return decode_specs(cfg, shape, mesh)

@@ -1,0 +1,223 @@
+"""Step builders: train_step / prefill_step / serve_step (+ FedAvg round).
+
+``make_train_step`` returns the canonical distributed training step:
+forward (+ MoE aux loss), masked token cross-entropy, backward, optimizer
+update — the function the multi-pod dry-run lowers for every
+(architecture x input shape).
+
+``make_federated_train_step`` is the paper's technique at datacenter
+scale (DESIGN.md §3): the global batch is partitioned into ``num_clients``
+client shards; per-client gradients are FedAvg-weighted by the scheduler's
+selection mask and data sizes before the update — equivalent to Alg. 1
+with E=1 at pod scale, with the DAS decision entering as the (selection,
+weight) inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.models import common, transformer
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+
+Params = Any
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token CE in f32 (sharded-vocab safe: logsumexp lowers to a
+    reduction XLA partitions with the logits)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_xent(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                 cfg: ModelConfig, mesh, num_chunks: int = 8) -> jax.Array:
+    """Sequence-chunked, rematerialized softmax cross-entropy.
+
+    The (B, S, V) logits tensor never fully materializes: each seq chunk's
+    head matmul + CE is wrapped in ``jax.checkpoint`` so only per-chunk
+    scalars survive the forward pass and the backward recomputes one
+    chunk's logits at a time (§Perf: 6-8 GB/device saved at V=152k).
+    """
+    b, s, _ = hidden.shape
+    if s % num_chunks:
+        num_chunks = 1
+    cs = s // num_chunks
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc):
+        logits = xc @ head.astype(xc.dtype)
+        if cfg.logits_softcap > 0.0:
+            logits = cfg.logits_softcap * jnp.tanh(
+                logits / cfg.logits_softcap)
+        logits = rules.constrain(logits, mesh, "batch", None, "tensor")
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    total = jnp.zeros((), jnp.float32)
+    for i in range(num_chunks):
+        sl = slice(i * cs, (i + 1) * cs)
+        total = total + chunk_loss(hidden[:, sl], labels[:, sl])
+    return total / (b * s)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            mesh) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    hidden, aux = transformer.forward(
+        params, batch["inputs"], cfg, mesh,
+        positions=batch.get("positions"),
+        encoder_inputs=batch.get("encoder_inputs"),
+        return_hidden=True)
+    ce = chunked_xent(hidden, transformer.head_matrix(params, cfg),
+                      batch["labels"], cfg, mesh)
+    total = ce + cfg.router_aux_weight * aux
+    return total, {"loss": total, "ce": ce, "moe_aux": aux}
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig,
+                     ocfg: optim.OptimizerConfig) -> Dict[str, Any]:
+    params = transformer.init(key, cfg)
+    return {"params": params, "opt": optim.init_state(params, ocfg)}
+
+
+def train_state_shapes(cfg: ModelConfig,
+                       ocfg: optim.OptimizerConfig) -> Dict[str, Any]:
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, ocfg), jax.random.key(0))
+
+
+def make_train_step(cfg: ModelConfig, ocfg: optim.OptimizerConfig,
+                    mesh, microbatches: int = 1) -> Callable:
+    """Canonical train step; ``microbatches > 1`` enables gradient
+    accumulation (unrolled, so cost_analysis sees every FLOP): the global
+    batch is split on the leading dim and per-microbatch grads are
+    accumulated in f32 before one optimizer update.  Cuts activation
+    memory by ~the microbatch factor at identical math (§Perf)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, mesh), has_aux=True)(params)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        if microbatches <= 1:
+            (_, metrics), grads = grads_of(state["params"], batch)
+        else:
+            # lax.scan forces the microbatches to run sequentially —
+            # an unrolled loop lets XLA overlap all forward passes and
+            # *grows* peak memory (§Perf: 23 -> 36 GB, refuted).  FLOP
+            # accounting for the scanned body is handled by the dry-run
+            # harness (costs are taken from the microbatches=1 lowering,
+            # which is FLOP-identical).
+            def resh(k, v):
+                ax = 1 if k == "positions" else 0
+                m = microbatches
+                shape = (v.shape[:ax] + (m, v.shape[ax] // m)
+                         + v.shape[ax + 1:])
+                mb = v.reshape(shape)
+                return jnp.moveaxis(mb, ax, 0) if ax else mb
+
+            stacked = {k: resh(k, v) for k, v in batch.items()}
+
+            def body(carry, mb):
+                grads_acc, metrics_acc = carry
+                (_, m), g = grads_of(state["params"], mb)
+                grads_acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), grads_acc, g)
+                metrics_acc = jax.tree_util.tree_map(jnp.add, metrics_acc,
+                                                     m)
+                return (grads_acc, metrics_acc), None
+
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32),
+                state["params"])
+            zeros_m = {"loss": jnp.zeros((), jnp.float32),
+                       "ce": jnp.zeros((), jnp.float32),
+                       "moe_aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(body, (zeros_g, zeros_m),
+                                               stacked)
+            inv = 1.0 / microbatches
+            grads = jax.tree_util.tree_map(lambda x: x * inv, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x * inv, metrics)
+        params, opt, opt_metrics = optim.apply_updates(
+            state["params"], grads, state["opt"], ocfg)
+        metrics.update(opt_metrics)
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh) -> Callable:
+    def prefill_step(params: Params, batch: Dict[str, jax.Array]):
+        return transformer.prefill(
+            params, batch["inputs"], cfg, mesh,
+            encoder_inputs=batch.get("encoder_inputs"))
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh) -> Callable:
+    def serve_step(params: Params, tokens: jax.Array, cache: Params,
+                   index: jax.Array):
+        return transformer.decode_step(params, tokens, cache, index, cfg,
+                                       mesh)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Federated (paper technique at pod scale)
+# ---------------------------------------------------------------------------
+
+def make_federated_train_step(cfg: ModelConfig,
+                              ocfg: optim.OptimizerConfig, mesh,
+                              num_clients: int) -> Callable:
+    """FedAvg-weighted gradient step over client-sharded batches.
+
+    batch["inputs"]/["labels"]: (num_clients, per_client_batch, seq);
+    batch["selected"]: (num_clients,) {0,1} from the DAS scheduler;
+    batch["sizes"]: (num_clients,) |D_k| for the FedAvg weights.
+
+    Per-client mean gradients are combined with weights
+    ``selected_k * |D_k| / sum(selected * |D|)`` — Alg. 1 line 12 as a
+    weighted reduction over the client axis (sharded over pod+data).
+    """
+
+    def client_grads(params, inputs, labels):
+        (_, m), g = jax.value_and_grad(
+            lambda p: loss_fn(p, {"inputs": inputs, "labels": labels},
+                              cfg, mesh), has_aux=True)(params)
+        return g, m["ce"]
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        w = batch["selected"].astype(jnp.float32) * \
+            batch["sizes"].astype(jnp.float32)
+        w = w / jnp.maximum(jnp.sum(w), 1e-9)
+        grads_stacked, ces = jax.vmap(
+            lambda i, l: client_grads(state["params"], i, l),
+            in_axes=(0, 0))(batch["inputs"], batch["labels"])
+        grads = jax.tree_util.tree_map(
+            lambda g: jnp.tensordot(w, g.astype(jnp.float32), axes=1
+                                    ).astype(g.dtype), grads_stacked)
+        params, opt, opt_metrics = optim.apply_updates(
+            state["params"], grads, state["opt"], ocfg)
+        metrics = {"ce": jnp.sum(ces * w), **opt_metrics,
+                   "n_selected": jnp.sum(batch["selected"])}
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step

@@ -1,0 +1,292 @@
+"""GQA attention: blocked training/prefill path + cached decode path.
+
+Features driven by :class:`repro.models.config.ModelConfig`:
+
+* grouped-query attention (``num_kv_heads`` <= ``num_heads``)
+* per-head q/k RMS normalization (Qwen3 ``qk_norm``)
+* RoPE, partial rotary (StableLM), M-RoPE (Qwen2-VL), or none (Whisper
+  absolute embeddings are added at the embedding layer)
+* sliding-window masking (Mistral/Mixtral/Danube SWA)
+* cross-attention (Whisper decoder)
+
+The training/prefill path is **q-chunked**: an *unrolled* Python loop over
+query chunks computes scores against the full K/V, so peak score memory is
+``(B, H, chunk, S)`` instead of ``(B, H, S, S)`` and — deliberately — no
+inner ``lax.scan`` hides FLOPs from ``cost_analysis()`` (see EXPERIMENTS.md
+§Dry-run methodology).  The Pallas flash-attention kernel
+(``repro.kernels.flash_attention``) is the TPU-target replacement for this
+path behind ``use_flash=True`` in ops form.
+
+Decode attends one query token against a (B, S_max, KV, hd) cache written
+in-place at ``cache["index"]``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def init(key: Array, cfg: ModelConfig, cross: bool = False) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    dt = common.dtype_of(cfg.dtype_params)
+    p: Params = {
+        "wq": common.dense_init(ks[0], (d, h * hd), d, dt),
+        "wk": common.dense_init(ks[1], (d, kv * hd), d, dt),
+        "wv": common.dense_init(ks[2], (d, kv * hd), d, dt),
+        "wo": common.dense_init(ks[3], (h * hd, d), h * hd, dt),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+        p["bo"] = jnp.zeros((d,), dt)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: Params, x: Array, kv_src: Array, cfg: ModelConfig,
+                 mesh) -> Tuple[Array, Array, Array]:
+    """x -> q (B,Sq,H,hd); kv_src -> k, v (B,Skv,KV,hd)."""
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = kv_src @ p["wk"].astype(dt)
+    v = kv_src @ p["wv"].astype(dt)
+    if cfg.use_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = rules.constrain(q, mesh, "batch", None, "tensor")
+    k = rules.constrain(k, mesh, "batch", None, "tensor")
+    v = rules.constrain(v, mesh, "batch", None, "tensor")
+    q = q.reshape(*q.shape[:2], cfg.num_heads, hd)
+    k = k.reshape(*k.shape[:2], cfg.num_kv_heads, hd)
+    v = v.reshape(*v.shape[:2], cfg.num_kv_heads, hd)
+    if cfg.qk_norm and "q_norm" in p:
+        q = common.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _maybe_rope(q: Array, k: Array, positions: Optional[Array],
+                cfg: ModelConfig) -> Tuple[Array, Array]:
+    if cfg.pos_embedding != "rope" or positions is None:
+        return q, k
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections:
+        sin, cos = common.mrope_sin_cos(positions, hd, cfg.rope_theta,
+                                        cfg.mrope_sections)
+    else:
+        sin, cos = common.rope_sin_cos(positions, hd, cfg.rope_theta,
+                                       cfg.rope_fraction)
+    return common.apply_rope(q, sin, cos), common.apply_rope(k, sin, cos)
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, causal: bool,
+               window: int) -> Array:
+    """(Sq, Skv) additive mask: 0 where visible, NEG_INF where masked."""
+    visible = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        visible &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        visible &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(visible, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _repeat_kv(k: Array, num_heads: int, mesh) -> Array:
+    """(B, S, KV, hd) -> (B, S, H, hd), head dim sharded over ``model``.
+
+    Explicitly materializing the repeated K/V lets GSPMD shard the score
+    tensors over the (full) head dim — without this the GQA reshape
+    de-shards the heads and the per-chunk score buffers replicate (41 GB
+    temp at qwen3-14b/train_4k; see EXPERIMENTS.md §Perf iteration 0).
+    """
+    b, s, kvh, hd = k.shape
+    if kvh != num_heads:
+        k = jnp.repeat(k, num_heads // kvh, axis=2)
+    return rules.constrain_pad(k, mesh, "batch", None, "tensor", None)
+
+
+def _scores_attend(q: Array, k: Array, v: Array, bias: Array) -> Array:
+    """q (B,Sq,H,hd), k/v (B,Skv,H,hd), bias (Sq,Skv) -> (B,Sq,H,hd).
+
+    Scores in float32 for numerical stability.
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5) + bias[None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def attend_full(q: Array, k: Array, v: Array, cfg: ModelConfig,
+                q_offset: int = 0, causal: Optional[bool] = None,
+                window: int = 0, mesh=None) -> Array:
+    """Blocked (q-chunked, unrolled) attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd).  Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    causal = cfg.causal if causal is None else causal
+    q = rules.constrain_pad(q, mesh, "batch", None, "tensor", None)
+    k = _repeat_kv(k, h, mesh)
+    v = _repeat_kv(v, h, mesh)
+    k_pos = jnp.arange(k.shape[1])
+
+    chunk = min(cfg.attn_chunk, sq)
+    if sq % chunk:
+        chunk = sq  # fallback: single chunk
+    outs = []
+    for start in range(0, sq, chunk):
+        q_pos = q_offset + start + jnp.arange(chunk)
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        outs.append(_scores_attend(
+            q[:, start:start + chunk], k, v, bias))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(b, sq, h, hd)
+
+
+def forward(p: Params, x: Array, cfg: ModelConfig, mesh,
+            positions: Optional[Array], layer_window: bool,
+            kv_override: Optional[Tuple[Array, Array]] = None,
+            causal: Optional[bool] = None,
+            return_kv: bool = False):
+    """Training/prefill attention over a full sequence.
+
+    ``kv_override`` supplies precomputed (k, v) for cross-attention.
+    Returns (out, (k, v) if return_kv else None).
+    """
+    kv_src = x if kv_override is None else None
+    if kv_override is None:
+        q, k, v = _project_qkv(p, x, x, cfg, mesh)
+        q, k = _maybe_rope(q, k, positions, cfg)
+    else:
+        hd = cfg.resolved_head_dim
+        dt = x.dtype
+        q = x @ p["wq"].astype(dt)
+        if cfg.use_bias:
+            q = q + p["bq"].astype(dt)
+        q = q.reshape(*q.shape[:2], cfg.num_heads, hd)
+        k, v = kv_override
+        causal = False if causal is None else causal
+    del kv_src
+    window = cfg.sliding_window if layer_window else 0
+    out = attend_full(q, k, v, cfg, causal=causal, window=window,
+                      mesh=mesh)
+    out = out.reshape(*out.shape[:2], -1)
+    out = out @ p["wo"].astype(out.dtype)
+    if cfg.use_bias:
+        out = out + p["bo"].astype(out.dtype)
+    out = rules.residual_constrain(out, mesh, cfg.sequence_sharding)
+    return (out, (k, v)) if return_kv else (out, None)
+
+
+def cross_kv(p: Params, enc_out: Array, cfg: ModelConfig) -> Tuple[Array,
+                                                                   Array]:
+    """Precompute cross-attention K/V from encoder output (prefill once)."""
+    hd = cfg.resolved_head_dim
+    dt = enc_out.dtype
+    k = enc_out @ p["wk"].astype(dt)
+    v = enc_out @ p["wv"].astype(dt)
+    if cfg.use_bias:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    k = k.reshape(*k.shape[:2], cfg.num_kv_heads, hd)
+    v = v.reshape(*v.shape[:2], cfg.num_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype) -> Dict[str, Array]:
+    """Ring-buffer cache.  SWA layers allocate only the window."""
+    kv = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def decode(p: Params, x: Array, cache: Dict[str, Array], index: Array,
+           cfg: ModelConfig, mesh, layer_window: bool,
+           cross_cache: Optional[Tuple[Array, Array]] = None
+           ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode.  x: (B, 1, D); ``index`` = absolute position of
+    the new token.  For SWA layers the cache is a ring buffer of size
+    ``sliding_window``; otherwise size ``max_len`` with positional mask.
+    Cross-attention decode attends the full (static) encoder cache.
+    """
+    if cross_cache is not None:
+        hd = cfg.resolved_head_dim
+        dt = x.dtype
+        q = x @ p["wq"].astype(dt)
+        if cfg.use_bias:
+            q = q + p["bq"].astype(dt)
+        q = q.reshape(x.shape[0], 1, cfg.num_heads, hd)
+        k, v = cross_cache
+        out = attend_full(q, k, v, cfg, causal=False, window=0,
+                          mesh=mesh)
+        out = out.reshape(x.shape[0], 1, -1) @ p["wo"].astype(dt)
+        if cfg.use_bias:
+            out = out + p["bo"].astype(dt)
+        return out, cache
+
+    bsz = x.shape[0]
+    if cfg.mrope_sections:
+        positions = jnp.full((3, bsz, 1), index, jnp.int32)
+    else:
+        positions = jnp.full((bsz, 1), index, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, mesh)
+    q, k_new = _maybe_rope(q, k_new, positions, cfg)
+
+    max_len = cache["k"].shape[1]
+    is_ring = bool(layer_window and cfg.sliding_window > 0)
+    slot = index % max_len if is_ring else jnp.minimum(index, max_len - 1)
+    k = cache["k"].at[:, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[:, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+
+    # Positional validity: entries written so far.
+    pos_ids = jnp.arange(max_len)
+    if is_ring:
+        # Ring buffer: slot p holds absolute position
+        # index - ((slot - p) mod max_len); valid if within window & >= 0.
+        age = (slot - pos_ids) % max_len
+        abs_pos = index - age
+        valid = abs_pos >= 0
+    else:
+        valid = pos_ids <= jnp.minimum(index, max_len - 1)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+
+    b, _, h, hd = q.shape
+    kr = _repeat_kv(k, h, mesh)
+    vr = _repeat_kv(v, h, mesh)
+    out = _scores_attend(q, kr, vr, bias)
+    out = out.reshape(b, 1, h * hd)
+    out = out @ p["wo"].astype(out.dtype)
+    if cfg.use_bias:
+        out = out + p["bo"].astype(out.dtype)
+    return out, {"k": k, "v": v}

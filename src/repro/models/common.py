@@ -1,0 +1,138 @@
+"""Shared model-zoo building blocks: norms, init, rotary embeddings.
+
+Parameters are plain nested dicts of ``jax.Array``; every initializer
+takes an explicit key.  Compute dtype casting happens at block entry
+(params stay in ``dtype_params``, activations in ``dtype_compute``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, shape: Tuple[int, ...], fan_in: int,
+               dtype=jnp.float32) -> Array:
+    """Truncated-normal with 1/sqrt(fan_in) scale (LeCun-style)."""
+    scale = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, dim: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            * (dim ** -0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(d: int, norm_type: str) -> dict:
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(p: dict, x: Array, norm_type: str, eps: float) -> Array:
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE / partial rotary / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0) -> Array:
+    """Inverse frequencies for the rotated fraction of the head dim."""
+    rot = int(head_dim * fraction) // 2 * 2
+    exponent = jnp.arange(0, rot, 2, dtype=jnp.float32) / max(rot, 1)
+    return 1.0 / (theta ** exponent)        # (rot/2,)
+
+
+def rope_sin_cos(positions: Array, head_dim: int, theta: float,
+                 fraction: float = 1.0) -> Tuple[Array, Array]:
+    """positions (..., S) -> sin/cos (..., S, rot/2)."""
+    freqs = rope_freqs(head_dim, theta, fraction)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def mrope_sin_cos(positions: Array, head_dim: int, theta: float,
+                  sections: Tuple[int, ...]) -> Tuple[Array, Array]:
+    """Qwen2-VL multimodal RoPE (arXiv:2409.12191).
+
+    ``positions``: (3, B, S) — temporal / height / width position ids
+    (equal for pure text).  ``sections`` split the rot/2 frequency slots
+    among the three axes (Qwen2-VL: (16, 24, 24) for head_dim 128).
+    Returns sin/cos of shape (B, S, rot/2).
+    """
+    assert positions.shape[0] == len(sections) == 3
+    freqs = rope_freqs(head_dim, theta, 1.0)    # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (3,B,S,hd/2)
+    # Select which axis drives each frequency slot.
+    sect_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections),
+        total_repeat_length=freqs.shape[0])     # (hd/2,)
+    gathered = jnp.take_along_axis(
+        angles, sect_id[None, None, None, :].astype(jnp.int32),
+        axis=0)[0]                               # (B,S,hd/2)
+    return jnp.sin(gathered), jnp.cos(gathered)
+
+
+def apply_rope(x: Array, sin: Array, cos: Array) -> Array:
+    """x: (B, S, H, hd); sin/cos: (B, S, rot/2).  Rotates the first
+    ``2*rot/2`` channels (partial rotary leaves the tail untouched)."""
+    rot2 = sin.shape[-1]
+    x_rot, x_pass = x[..., :2 * rot2], x[..., 2 * rot2:]
+    x1 = x_rot[..., 0::2]
+    x2 = x_rot[..., 1::2]
+    s = sin[..., None, :].astype(jnp.float32)
+    c = cos[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = x1f * c - x2f * s
+    o2 = x2f * c + x1f * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if x_pass.shape[-1] \
+        else out
+
+
+def sinusoidal_positions(length: int, dim: int) -> Array:
+    """Whisper-style absolute sinusoidal embeddings (length, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    angles = jnp.arange(length)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)

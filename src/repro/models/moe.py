@@ -1,0 +1,221 @@
+"""Feed-forward layers: dense MLP (SwiGLU / GELU) and top-k MoE.
+
+Three MoE dispatch implementations, selected by ``cfg.moe_impl``:
+
+* ``ragged`` (default) — sort tokens by assigned expert, run
+  ``jax.lax.ragged_dot`` against the stacked expert weights, scatter-add
+  back with the gate weights.  FLOPs equal the *active*-parameter cost
+  (``top_k`` experts per token); this is the TPU-native analogue of a
+  grouped GEMM.
+* ``dense_grouped`` — GShard-style einsum dispatch with capacity within
+  token groups of ``cfg.moe_group_size`` (robust under GSPMD, used as a
+  fallback and as a perf-iteration comparison point).
+* ``dense`` — every expert runs every token, combine by gate mask.  Only
+  sane for the reduced smoke configs (<=4 experts).
+
+Expert weights are stacked ``(E, D, F)``; the sharding rules place ``E``
+on the ``model`` mesh axis when divisible (expert parallel: qwen3-moe
+128/16, jamba 16/16) and otherwise shard ``F`` on ``model`` (mixtral 8
+experts -> per-expert tensor parallel).
+
+Router: softmax over expert logits, top-k, renormalized; Switch-style
+load-balance auxiliary loss returned to the caller.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: Array, cfg: ModelConfig, d_ff: int = 0) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = common.dtype_of(cfg.dtype_params)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_activation == "swiglu":
+        p = {
+            "wi": common.dense_init(ks[0], (d, f), d, dt),
+            "wg": common.dense_init(ks[1], (d, f), d, dt),
+            "wo": common.dense_init(ks[2], (f, d), f, dt),
+        }
+    else:
+        p = {
+            "wi": common.dense_init(ks[0], (d, f), d, dt),
+            "wo": common.dense_init(ks[2], (f, d), f, dt),
+        }
+    if cfg.use_bias:
+        p["bi"] = jnp.zeros((f,), dt)
+        p["bo"] = jnp.zeros((d,), dt)
+    return p
+
+
+def mlp_apply(p: Params, x: Array, cfg: ModelConfig, mesh) -> Array:
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if cfg.use_bias:
+        h = h + p["bi"].astype(dt)
+    if cfg.mlp_activation == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["wg"].astype(dt))
+    else:
+        h = jax.nn.gelu(h)
+    h = rules.constrain(h, mesh, "batch", None, "tensor")
+    out = h @ p["wo"].astype(dt)
+    if cfg.use_bias:
+        out = out + p["bo"].astype(dt)
+    return rules.residual_constrain(out, mesh, cfg.sequence_sharding)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_init(key: Array, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = common.dtype_of(cfg.dtype_params)
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "router": common.dense_init(ks[0], (d, e), d, jnp.float32),
+        "wi": common.dense_init(ks[1], (e, d, f), d, dt),
+        "wo": common.dense_init(ks[3], (e, f, d), f, dt),
+    }
+    if cfg.mlp_activation == "swiglu":
+        p["wg"] = common.dense_init(ks[2], (e, d, f), d, dt)
+    return p
+
+
+def route(p: Params, x2d: Array, cfg: ModelConfig
+          ) -> Tuple[Array, Array, Array]:
+    """Top-k routing.  x2d: (T, D).
+
+    Returns (expert_ids (T, k), gate_weights (T, k), aux_loss scalar).
+    """
+    logits = (x2d.astype(jnp.float32) @ p["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+    # Switch load-balance loss: E * sum_e fraction_e * mean_prob_e.
+    e = cfg.num_experts
+    assign = jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32)  # top-1 share
+    aux = e * jnp.sum(jnp.mean(assign, axis=0) * jnp.mean(probs, axis=0))
+    return ids, gate.astype(x2d.dtype), aux
+
+
+def _expert_ffn_ragged(p: Params, x_sorted: Array, group_sizes: Array,
+                       cfg: ModelConfig) -> Array:
+    """(T*k, D) sorted-by-expert tokens -> (T*k, D) via ragged grouped GEMM."""
+    dt = x_sorted.dtype
+    h = jax.lax.ragged_dot(x_sorted, p["wi"].astype(dt), group_sizes)
+    if cfg.mlp_activation == "swiglu":
+        g = jax.lax.ragged_dot(x_sorted, p["wg"].astype(dt), group_sizes)
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    return jax.lax.ragged_dot(h, p["wo"].astype(dt), group_sizes)
+
+
+def moe_apply_ragged(p: Params, x2d: Array, cfg: ModelConfig,
+                     mesh) -> Tuple[Array, Array]:
+    """Sort-based dispatch: active-parameter FLOPs, one grouped GEMM."""
+    t, d = x2d.shape
+    k = cfg.num_experts_per_tok
+    ids, gate, aux = route(p, x2d, cfg)
+
+    flat_ids = ids.reshape(-1)                                # (T*k,)
+    order = jnp.argsort(flat_ids)
+    token_of = order // k                                     # source token
+    x_sorted = jnp.take(x2d, token_of, axis=0)                # (T*k, D)
+    group_sizes = jnp.bincount(flat_ids, length=cfg.num_experts)
+    y_sorted = _expert_ffn_ragged(p, x_sorted, group_sizes, cfg)
+    w_sorted = jnp.take(gate.reshape(-1), order)[:, None]
+    out = jnp.zeros((t, d), x2d.dtype).at[token_of].add(
+        y_sorted * w_sorted.astype(y_sorted.dtype))
+    return out, aux
+
+
+def moe_apply_dense_grouped(p: Params, x2d: Array, cfg: ModelConfig,
+                            mesh) -> Tuple[Array, Array]:
+    """GShard einsum dispatch with per-group capacity buffers."""
+    t, d = x2d.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    gs = min(cfg.moe_group_size, t)
+    if t % gs:
+        gs = t
+    n_groups = t // gs
+    # Capacity floor: tiny groups (decode: T=batch tokens) must not drop —
+    # worst case all gs*k assignments land on one expert.
+    cap = max(int(gs * k * cfg.moe_capacity_factor / e),
+              min(gs * k, 16))
+
+    ids, gate, aux = route(p, x2d, cfg)
+    xg = x2d.reshape(n_groups, gs, d)
+    idsg = ids.reshape(n_groups, gs, k)
+    gateg = gate.reshape(n_groups, gs, k)
+
+    def per_group(xs, ids_s, gate_s):
+        # (gs, k) assignments -> dispatch one-hot (gs, E, cap)
+        onehot = jax.nn.one_hot(ids_s, e, dtype=jnp.float32)    # (gs,k,E)
+        pos = jnp.cumsum(onehot.sum(1), axis=0) - onehot.sum(1)  # (gs,E)
+        pos_k = jnp.einsum("ske,se->sk", onehot, pos)            # slot idx
+        keep = pos_k < cap
+        cap_onehot = jax.nn.one_hot(pos_k, cap, dtype=jnp.float32)
+        disp = (onehot[..., :, None] * cap_onehot[..., None, :]
+                * keep[..., None, None])        # (gs, k, E, cap)
+        disp_te = disp.sum(1)                                    # (gs,E,cap)
+        xe = jnp.einsum("sec,sd->ecd", disp_te, xs.astype(jnp.float32))
+        xe = xe.astype(xs.dtype)
+        h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(xs.dtype))
+        if cfg.mlp_activation == "swiglu":
+            g = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(xs.dtype))
+            h = jax.nn.silu(h) * g
+        else:
+            h = jax.nn.gelu(h)
+        ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xs.dtype))
+        comb = jnp.einsum("skec,sk->sec", disp, gate_s.astype(jnp.float32))
+        return jnp.einsum("sec,ecd->sd", comb.astype(ye.dtype), ye)
+
+    out = jax.vmap(per_group)(xg, idsg, gateg).reshape(t, d)
+    return out, aux
+
+
+def moe_apply_dense(p: Params, x2d: Array, cfg: ModelConfig,
+                    mesh) -> Tuple[Array, Array]:
+    """Every expert on every token (smoke-scale only)."""
+    ids, gate, aux = route(p, x2d, cfg)
+    dt = x2d.dtype
+    h = jnp.einsum("td,edf->tef", x2d, p["wi"].astype(dt))
+    if cfg.mlp_activation == "swiglu":
+        g = jnp.einsum("td,edf->tef", x2d, p["wg"].astype(dt))
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("tef,efd->ted", h, p["wo"].astype(dt))     # (T,E,D)
+    mask = jax.nn.one_hot(ids, cfg.num_experts, dtype=jnp.float32)  # (T,k,E)
+    comb = jnp.einsum("tke,tk->te", mask, gate.astype(jnp.float32))
+    return jnp.einsum("te,ted->td", comb.astype(dt), y), aux
+
+
+def moe_apply(p: Params, x: Array, cfg: ModelConfig, mesh
+              ) -> Tuple[Array, Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux scalar)."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    impl = {"ragged": moe_apply_ragged,
+            "dense_grouped": moe_apply_dense_grouped,
+            "dense": moe_apply_dense}[cfg.moe_impl]
+    out, aux = impl(p, x2d, cfg, mesh)
+    out = rules.residual_constrain(out.reshape(b, s, d), mesh,
+                                   cfg.sequence_sharding)
+    return out, aux

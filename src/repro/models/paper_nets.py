@@ -1,0 +1,123 @@
+"""The paper's two evaluation models (§VI-A.2): a small CNN and an MLP.
+
+CNN: two 5x5 conv layers (10 then 20 channels, each followed by 2x2 max
+pool), a 50-unit ReLU fully-connected layer, and a softmax output.
+MLP: two fully-connected layers.
+
+Pure-pytree definitions: ``init(key, spec) -> params``,
+``apply(params, images) -> logits``.  ``images`` are float32 (B, H, W) in
+[0, 1].  Conv via ``jax.lax.conv_general_dilated`` (NCHW).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperNetSpec:
+    kind: str = "cnn"          # cnn | mlp
+    image_size: int = 28
+    num_classes: int = 10
+    mlp_hidden: int = 200
+    cnn_hidden: int = 50
+
+
+def _dense_init(key: Array, n_in: int, n_out: int) -> Dict[str, Array]:
+    scale = jnp.sqrt(2.0 / n_in)
+    return {
+        "w": jax.random.normal(key, (n_in, n_out), jnp.float32) * scale,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _conv_init(key: Array, c_in: int, c_out: int, hw: int) -> Dict[str, Array]:
+    fan_in = c_in * hw * hw
+    scale = jnp.sqrt(2.0 / fan_in)
+    return {
+        "w": jax.random.normal(key, (c_out, c_in, hw, hw),
+                               jnp.float32) * scale,
+        "b": jnp.zeros((c_out,), jnp.float32),
+    }
+
+
+def _conv(x: Array, p: Dict[str, Array]) -> Array:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + p["b"][None, :, None, None]
+
+
+def _maxpool2(x: Array) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2), padding="VALID")
+
+
+def _cnn_flat_dim(spec: PaperNetSpec) -> int:
+    s = spec.image_size
+    s = (s - 4) // 2          # conv 5x5 VALID + pool 2
+    s = (s - 4) // 2
+    return 20 * s * s
+
+
+def init(key: Array, spec: PaperNetSpec) -> Params:
+    if spec.kind == "cnn":
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "conv1": _conv_init(k1, 1, 10, 5),
+            "conv2": _conv_init(k2, 10, 20, 5),
+            "fc1": _dense_init(k3, _cnn_flat_dim(spec), spec.cnn_hidden),
+            "fc2": _dense_init(k4, spec.cnn_hidden, spec.num_classes),
+        }
+    if spec.kind == "mlp":
+        k1, k2 = jax.random.split(key)
+        d_in = spec.image_size * spec.image_size
+        return {
+            "fc1": _dense_init(k1, d_in, spec.mlp_hidden),
+            "fc2": _dense_init(k2, spec.mlp_hidden, spec.num_classes),
+        }
+    raise ValueError(f"unknown paper net kind: {spec.kind!r}")
+
+
+def apply(params: Params, images: Array, spec: PaperNetSpec) -> Array:
+    """images: (B, H, W) float32 -> logits (B, C)."""
+    b = images.shape[0]
+    if spec.kind == "cnn":
+        x = images[:, None, :, :]                       # NCHW
+        x = _maxpool2(jax.nn.relu(_conv(x, params["conv1"])))
+        x = _maxpool2(jax.nn.relu(_conv(x, params["conv2"])))
+        x = x.reshape(b, -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        return x @ params["fc2"]["w"] + params["fc2"]["b"]
+    x = images.reshape(b, -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def loss_fn(params: Params, images: Array, labels: Array, mask: Array,
+            spec: PaperNetSpec) -> Array:
+    """Masked mean softmax cross-entropy (padded-batch safe)."""
+    logits = apply(params, images, spec)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def accuracy(params: Params, images: Array, labels: Array,
+             spec: PaperNetSpec) -> Array:
+    logits = apply(params, images, spec)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                    .astype(jnp.float32))
+
+
+def num_params(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

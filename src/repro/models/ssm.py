@@ -1,0 +1,211 @@
+"""Selective state-space mixer (Mamba), TPU-adapted SSD formulation.
+
+Jamba interleaves Mamba-1 blocks with attention.  Mamba-1's per-channel
+diagonal recurrence resists efficient chunking on the MXU (the inter-pair
+decay couples (d_inner x d_state) per step), so — per the hardware-
+adaptation mandate — we implement the **SSD (Mamba-2) formulation**:
+scalar decay per head, which turns the sequence mixing into chunked
+``(L x L)`` matmuls plus a small recurrent state carried across chunks.
+This preserves the paper-relevant property (O(1) decode state, linear-time
+prefill) while being MXU-native.  DESIGN.md records the substitution.
+
+Recurrence per head (head dim ``p``, state dim ``n``)::
+
+    a_t = exp(-softplus(dt_t + dt_bias) * exp(A_log))        # scalar decay
+    h_t = a_t * h_{t-1} + dt_t * B_t  x_t^T                  # (n, p) state
+    y_t = C_t^T h_t + D * x_t
+
+Chunked evaluation (chunk ``L = cfg.ssm_chunk``) splits ``y`` into an
+intra-chunk semiseparable matmul and an inter-chunk state term; the chunk
+loop is an **unrolled** Python loop so ``cost_analysis`` sees every FLOP
+(EXPERIMENTS.md §Dry-run methodology).
+
+Block: in_proj -> [z | x | B | C | dt]; causal depthwise conv on x;
+SSD mix; RMSNorm; gate by silu(z); out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def init(key: Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    n = cfg.ssm_state_dim
+    nh = cfg.ssm_num_heads
+    dt = common.dtype_of(cfg.dtype_params)
+    ks = jax.random.split(key, 9)
+    # dt bias: softplus^-1 of U[1e-3, 1e-1] (mamba init)
+    u = jax.random.uniform(ks[5], (nh,), minval=1e-3, maxval=1e-1)
+    dt_bias = u + jnp.log(-jnp.expm1(-u))
+    return {
+        "wz": common.dense_init(ks[0], (d, din), d, dt),
+        "wx": common.dense_init(ks[1], (d, din), d, dt),
+        "wB": common.dense_init(ks[2], (d, n), d, dt),
+        "wC": common.dense_init(ks[3], (d, n), d, dt),
+        "wdt": common.dense_init(ks[4], (d, nh), d, dt),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jax.random.uniform(ks[6], (nh,), minval=1.0,
+                                            maxval=16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv": common.dense_init(ks[7], (cfg.ssm_conv_dim, din),
+                                  cfg.ssm_conv_dim, dt),
+        "norm": jnp.ones((din,), jnp.float32),
+        "wo": common.dense_init(ks[8], (din, d), din, dt),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv: x (B,S,C), w (K,C) -> (B,S,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum_j x[t-k+1+j] * w[j]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j:j + x.shape[1]] * w[j].astype(x.dtype)
+    return out
+
+
+def _ssd_chunked(xh: Array, b: Array, c: Array, log_a: Array, dt_s: Array,
+                 chunk: int, h0: Optional[Array] = None
+                 ) -> Tuple[Array, Array]:
+    """Chunked scalar-decay SSD.
+
+    xh:    (B, S, nh, p)   head inputs
+    b, c:  (B, S, n)       input/output projections (shared across heads)
+    log_a: (B, S, nh)      per-step log decay (<= 0)
+    dt_s:  (B, S, nh)      softplus(dt) step sizes
+    h0:    (B, nh, n, p)   initial state (decode/prefill continuation)
+
+    Returns (y (B,S,nh,p), h_final (B,nh,n,p)).  Chunk loop unrolled.
+    """
+    bsz, s, nh, p = xh.shape
+    n = b.shape[-1]
+    # Cap the unrolled chunk count at 64 (compile-size guard for 32k+
+    # prefill); intra-chunk work stays O(S * L) in total.
+    while s // chunk > 64:
+        chunk *= 2
+    if s % chunk:
+        chunk = s
+    h = (jnp.zeros((bsz, nh, n, p), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    ys = []
+    for start in range(0, s, chunk):
+        sl = slice(start, start + chunk)
+        xc = xh[:, sl].astype(jnp.float32)          # (B,L,nh,p)
+        bc = b[:, sl].astype(jnp.float32)           # (B,L,n)
+        cc = c[:, sl].astype(jnp.float32)           # (B,L,n)
+        la = log_a[:, sl].astype(jnp.float32)       # (B,L,nh)
+        dts = dt_s[:, sl].astype(jnp.float32)       # (B,L,nh)
+        cum = jnp.cumsum(la, axis=1)                # (B,L,nh)
+        # Intra-chunk: M[t,s'] = (C_t . B_s') * exp(cum_t - cum_s') * dt_s'
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)     # (B,L,L)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]      # (B,L,L,nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # Mask BEFORE exp: above-diagonal decays are positive and large;
+        # exp there overflows and where(mask, inf, 0) back-props NaN
+        # (0 * inf).  See the jamba smoke test.
+        decay = jnp.where(tri[None, :, :, None], decay, -1e30)
+        w = jnp.exp(decay)
+        m = cb[..., None] * w * dts[:, None, :, :]  # (B,L,L,nh)
+        y_intra = jnp.einsum("btsh,bshp->bthp", m, xc)
+        # Inter-chunk: y_inter[t] = C_t . (exp(cum_t) * h_prev)
+        y_inter = jnp.einsum("btn,bth,bhnp->bthp", cc, jnp.exp(cum), h)
+        ys.append(y_intra + y_inter)
+        # State update: h = exp(cum_L) h + sum_s exp(cum_L - cum_s) dt B x^T
+        w_state = jnp.exp(cum[:, -1:, :] - cum) * dts        # (B,L,nh)
+        h = (jnp.exp(cum[:, -1])[:, :, None, None] * h
+             + jnp.einsum("bsh,bsn,bshp->bhnp", w_state, bc, xc))
+    y = jnp.concatenate(ys, axis=1) if len(ys) > 1 else ys[0]
+    return y.astype(xh.dtype), h
+
+
+def forward(p: Params, x: Array, cfg: ModelConfig, mesh,
+            return_state: bool = False):
+    """Full-sequence Mamba block.  x: (B, S, D)."""
+    bsz, s, _ = x.shape
+    nh, hp = cfg.ssm_num_heads, cfg.ssm_head_dim
+    dt = x.dtype
+    z = x @ p["wz"].astype(dt)
+    xin = x @ p["wx"].astype(dt)
+    xin = rules.constrain(xin, mesh, "batch", None, "tensor")
+    xin = _causal_conv(xin, p["conv"])
+    xin = jax.nn.silu(xin)
+    b = x @ p["wB"].astype(dt)
+    c = x @ p["wC"].astype(dt)
+    dt_raw = x @ p["wdt"].astype(dt)
+    dt_s = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + p["dt_bias"])            # (B,S,nh)
+    log_a = -dt_s * jnp.exp(p["A_log"])               # (B,S,nh)
+    xh = xin.reshape(bsz, s, nh, hp)
+    y, h = _ssd_chunked(xh, b, c, log_a, dt_s, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(dt)
+    y = y.reshape(bsz, s, -1)
+    y = common.rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ p["wo"].astype(dt)
+    out = rules.residual_constrain(out, mesh, cfg.sequence_sharding)
+    if return_state:
+        conv_state = xin_raw_tail(x, p, cfg)
+        return out, {"h": h.astype(jnp.float32), "conv": conv_state}
+    return out, None
+
+
+def xin_raw_tail(x: Array, p: Params, cfg: ModelConfig) -> Array:
+    """Last (conv_dim - 1) pre-conv inputs, for decode continuation."""
+    dt = x.dtype
+    xin = x @ p["wx"].astype(dt)
+    k = cfg.ssm_conv_dim
+    return xin[:, -(k - 1):, :]
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    nh, hp, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_dim
+    return {
+        "h": jnp.zeros((batch, nh, n, hp), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, cfg.ssm_d_inner),
+                          dtype),
+    }
+
+
+def decode(p: Params, x: Array, state: Dict[str, Array], cfg: ModelConfig,
+           mesh) -> Tuple[Array, Dict[str, Array]]:
+    """Single-token step.  x: (B, 1, D)."""
+    bsz = x.shape[0]
+    nh, hp = cfg.ssm_num_heads, cfg.ssm_head_dim
+    dt = x.dtype
+    xt = x[:, 0]
+    z = xt @ p["wz"].astype(dt)
+    xin_new = xt @ p["wx"].astype(dt)                 # (B, din)
+    conv_buf = jnp.concatenate([state["conv"],
+                                xin_new[:, None, :]], axis=1)  # (B,K,din)
+    w = p["conv"].astype(dt)                          # (K, din)
+    xin = jnp.einsum("bkc,kc->bc", conv_buf, w)
+    xin = jax.nn.silu(xin)
+    b = xt @ p["wB"].astype(dt)                       # (B, n)
+    c = xt @ p["wC"].astype(dt)
+    dt_s = jax.nn.softplus((xt @ p["wdt"].astype(dt)).astype(jnp.float32)
+                           + p["dt_bias"])            # (B, nh)
+    a = jnp.exp(-dt_s * jnp.exp(p["A_log"]))          # (B, nh)
+    xh = xin.reshape(bsz, nh, hp).astype(jnp.float32)
+    h = state["h"]
+    h = (a[:, :, None, None] * h
+         + jnp.einsum("bh,bn,bhp->bhnp", dt_s, b.astype(jnp.float32), xh))
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(bsz, -1).astype(dt)
+    y = common.rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["wo"].astype(dt))[:, None, :]
+    return out, {"h": h, "conv": conv_buf[:, 1:, :]}

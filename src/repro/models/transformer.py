@@ -1,0 +1,541 @@
+"""Model assembly: pattern-driven blocks, scan-over-layers, enc-dec.
+
+A model is: input embedding (token table, or a pass-through for the
+VLM/audio *embeddings* stub) -> ``num_groups`` repetitions of the layer
+``pattern`` -> final norm -> LM head.
+
+Layer parameters are stacked per pattern position with a leading group
+dim, so ``layer_mode="scan"`` runs one ``lax.scan`` over groups (compile
+time O(1) in depth) and ``layer_mode="unroll"`` slices the same stacked
+params in a Python loop (exact ``cost_analysis``).  See EXPERIMENTS.md
+§Dry-run for how roofline totals are recovered under scan.
+
+Three entry points per model:
+
+* :func:`forward`      — full-sequence logits (training / eval)
+* :func:`prefill`      — full sequence -> last-token logits + decode cache
+* :func:`decode_step`  — one token + cache -> logits + cache
+
+Whisper-style enc-dec: :func:`encode` runs the (non-causal) encoder over
+stub frame embeddings; decoder blocks add cross-attention against
+per-layer K/V computed once from the encoder output.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, moe, ssm, xlstm
+from repro.models.config import LayerSpec, ModelConfig
+from repro.sharding import rules
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key: Array, spec: LayerSpec, cfg: ModelConfig,
+                cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": common.norm_init(cfg.d_model, cfg.norm_type)}
+    if spec.mixer == "attn":
+        p["mixer"] = attention.init(ks[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm.init(ks[0], cfg)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm.mlstm_init(ks[0], cfg)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        p["norm_cross"] = common.norm_init(cfg.d_model, cfg.norm_type)
+        p["cross"] = attention.init(ks[1], cfg, cross=True)
+    if spec.ffn != "none":
+        p["norm2"] = common.norm_init(cfg.d_model, cfg.norm_type)
+        p["ffn"] = (moe.moe_init(ks[2], cfg) if spec.ffn == "moe"
+                    else moe.mlp_init(ks[2], cfg))
+    return p
+
+
+def _stacked_layers(key: Array, cfg: ModelConfig, num_groups: int,
+                    pattern: Tuple[LayerSpec, ...],
+                    cross: bool = False) -> Params:
+    """Per pattern position, stack ``num_groups`` block params."""
+    out: Params = {}
+    for i, spec in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), num_groups)
+        out[f"pos{i}"] = jax.vmap(
+            lambda k: _block_init(k, spec, cfg, cross))(keys)
+    return out
+
+
+def init(key: Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = common.dtype_of(cfg.dtype_params)
+    p: Params = {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "layers": _stacked_layers(ks[1], cfg, cfg.num_groups, cfg.pattern,
+                                  cross=cfg.cross_attention),
+        "final_norm": common.norm_init(cfg.d_model, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.dense_init(ks[2], (cfg.d_model,
+                                                 cfg.vocab_size),
+                                         cfg.d_model, dt)
+    if cfg.is_encdec:
+        enc_pattern = (LayerSpec("attn", "mlp"),)
+        assert cfg.encoder_layers % 1 == 0
+        p["encoder"] = {
+            "layers": _stacked_layers(ks[3], cfg, cfg.encoder_layers,
+                                      enc_pattern),
+            "final_norm": common.norm_init(cfg.d_model, cfg.norm_type),
+        }
+    return p
+
+
+def init_shapes(cfg: ModelConfig) -> Params:
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init(k, cfg), jax.random.key(0))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = init_shapes(cfg)
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k of E experts)."""
+    total = param_count(cfg)
+    if not cfg.is_moe:
+        return total
+    shapes = init_shapes(cfg)
+    inactive = 0
+    for pos in shapes["layers"].values():
+        ffn = pos.get("ffn", {})
+        for name in ("wi", "wg", "wo"):
+            if name in ffn:
+                leaf = ffn[name]
+                e = cfg.num_experts
+                frac = (e - cfg.num_experts_per_tok) / e
+                inactive += int(leaf.size * frac)
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Block application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _apply_mixer_full(bp: Params, spec: LayerSpec, x: Array,
+                      cfg: ModelConfig, mesh, positions, causal,
+                      collect_state: bool):
+    if spec.mixer == "attn":
+        out, kv = attention.forward(
+            bp["mixer"], x, cfg, mesh, positions,
+            layer_window=spec.sliding_window, causal=causal,
+            return_kv=collect_state)
+        return out, ({"k": kv[0], "v": kv[1]} if collect_state else None)
+    if spec.mixer == "mamba":
+        return ssm.forward(bp["mixer"], x, cfg, mesh,
+                           return_state=collect_state)
+    if spec.mixer == "mlstm":
+        return xlstm.mlstm_forward(bp["mixer"], x, cfg, mesh,
+                                   return_state=collect_state)
+    if spec.mixer == "slstm":
+        return xlstm.slstm_forward(bp["mixer"], x, cfg, mesh,
+                                   return_state=collect_state)
+    raise ValueError(spec.mixer)
+
+
+def _apply_block_full(bp: Params, spec: LayerSpec, x: Array,
+                      cfg: ModelConfig, mesh, positions, aux,
+                      causal=None, enc_out: Optional[Array] = None,
+                      collect_state: bool = False):
+    """Pre-norm residual block. Returns (x, aux, state_or_None)."""
+    h = common.apply_norm(bp["norm1"], x, cfg.norm_type, cfg.norm_eps)
+    h, state = _apply_mixer_full(bp, spec, h, cfg, mesh, positions, causal,
+                                 collect_state)
+    x = x + h
+    if "cross" in bp and enc_out is not None:
+        h = common.apply_norm(bp["norm_cross"], x, cfg.norm_type,
+                              cfg.norm_eps)
+        kv = attention.cross_kv(bp["cross"], enc_out, cfg)
+        h, _ = attention.forward(bp["cross"], h, cfg, mesh, None,
+                                 layer_window=False, kv_override=kv,
+                                 causal=False)
+        x = x + h
+        if collect_state and state is not None:
+            state = dict(state, cross_k=kv[0], cross_v=kv[1])
+    if spec.ffn != "none":
+        h = common.apply_norm(bp["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        if spec.ffn == "moe":
+            h, a = moe.moe_apply(bp["ffn"], h, cfg, mesh)
+            aux = aux + a
+        else:
+            h = moe.mlp_apply(bp["ffn"], h, cfg, mesh)
+        x = x + h
+    return x, aux, state
+
+
+def _run_stack(layers: Params, x: Array, cfg: ModelConfig, mesh,
+               positions, pattern: Tuple[LayerSpec, ...], num_groups: int,
+               causal=None, enc_out: Optional[Array] = None
+               ) -> Tuple[Array, Array]:
+    """Run the layer stack (no state collection). Returns (x, aux)."""
+
+    def group_fn(x, aux, group_params):
+        for i, spec in enumerate(pattern):
+            x, aux, _ = _apply_block_full(
+                group_params[f"pos{i}"], spec, x, cfg, mesh, positions,
+                aux, causal=causal, enc_out=enc_out)
+        return x, aux
+
+    if cfg.remat:
+        group_fn = jax.checkpoint(group_fn)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.layer_mode == "scan" and num_groups > 1:
+        def body(carry, gp):
+            x, aux = carry
+            x, aux = group_fn(x, aux, gp)
+            return (x, aux), None
+        (x, aux), _ = jax.lax.scan(body, (x, aux), layers)
+    else:
+        for g in range(num_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[g], layers)
+            x, aux = group_fn(x, aux, gp)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Params, inputs: Array, cfg: ModelConfig,
+                 mesh) -> Array:
+    """Token ids (B, S) -> embeddings, or pass through stub embeddings."""
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = jnp.take(params["embed"], inputs, axis=0)
+    else:
+        x = inputs  # precomputed frontend embeddings (VLM / audio stub)
+    x = x.astype(common.dtype_of(cfg.dtype_compute))
+    if cfg.pos_embedding == "absolute":
+        pos = common.sinusoidal_positions(x.shape[1], cfg.d_model)
+        x = x + pos[None].astype(x.dtype)
+    return rules.residual_constrain(x, mesh, cfg.sequence_sharding)
+
+
+def lm_logits(params: Params, x: Array, cfg: ModelConfig, mesh) -> Array:
+    x = common.apply_norm(params["final_norm"], x, cfg.norm_type,
+                          cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    if cfg.logits_softcap > 0.0:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return rules.constrain(logits, mesh, "batch", None, "tensor")
+
+
+def default_positions(inputs: Array, cfg: ModelConfig) -> Array:
+    b = inputs.shape[0]
+    s = inputs.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, b, s))   # text-like M-RoPE
+    return pos
+
+
+def encode(params: Params, embeds: Array, cfg: ModelConfig, mesh) -> Array:
+    """Whisper encoder over stub frame embeddings (non-causal)."""
+    x = embed_inputs(params, embeds, cfg, mesh)
+    enc_pattern = (LayerSpec("attn", "mlp"),)
+    x, _ = _run_stack(params["encoder"]["layers"], x, cfg, mesh,
+                      None, enc_pattern, cfg.encoder_layers, causal=False)
+    return common.apply_norm(params["encoder"]["final_norm"], x,
+                             cfg.norm_type, cfg.norm_eps)
+
+
+def forward(params: Params, inputs: Array, cfg: ModelConfig, mesh=None,
+            positions: Optional[Array] = None,
+            encoder_inputs: Optional[Array] = None,
+            return_hidden: bool = False) -> Tuple[Array, Array]:
+    """Full-sequence logits.  Returns (logits (B,S,V), moe aux loss).
+
+    ``return_hidden=True`` returns the final-norm hidden states instead of
+    logits, so the loss can fold the LM head into a chunked/rematerialized
+    cross-entropy (the (B,S,V) f32 logits never fully materialize — see
+    EXPERIMENTS.md §Perf).
+    """
+    enc_out = None
+    if cfg.is_encdec:
+        assert encoder_inputs is not None, "enc-dec needs encoder inputs"
+        enc_out = encode(params, encoder_inputs, cfg, mesh)
+    x = embed_inputs(params, inputs, cfg, mesh)
+    if positions is None and cfg.pos_embedding == "rope":
+        positions = default_positions(inputs, cfg)
+    x, aux = _run_stack(params["layers"], x, cfg, mesh, positions,
+                        cfg.pattern, cfg.num_groups, enc_out=enc_out)
+    if return_hidden:
+        x = common.apply_norm(params["final_norm"], x, cfg.norm_type,
+                              cfg.norm_eps)
+        return x, aux
+    return lm_logits(params, x, cfg, mesh), aux
+
+
+def head_matrix(params: Params, cfg: ModelConfig) -> Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def _layer_cache_init(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      max_len: int, dtype,
+                      enc_len: Optional[int] = None) -> Dict[str, Array]:
+    if spec.mixer == "attn":
+        size = (min(cfg.sliding_window, max_len)
+                if spec.sliding_window and cfg.sliding_window else max_len)
+        c = attention.init_cache(cfg, batch, size, dtype)
+    elif spec.mixer == "mamba":
+        c = ssm.init_state(cfg, batch, dtype)
+    elif spec.mixer == "mlstm":
+        c = xlstm.mlstm_init_state(cfg, batch)
+    elif spec.mixer == "slstm":
+        c = xlstm.slstm_init_state(cfg, batch)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.cross_attention and enc_len is not None:
+        hd = cfg.resolved_head_dim
+        c = dict(c,
+                 cross_k=jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd),
+                                   dtype),
+                 cross_v=jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd),
+                                   dtype))
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+               enc_len: Optional[int] = None) -> Params:
+    """Stacked (num_groups, ...) decode cache per pattern position."""
+    dtype = dtype or common.dtype_of(cfg.dtype_compute)
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.num_groups,) + a.shape).copy(), tree)
+
+    return {f"pos{i}": stack(_layer_cache_init(spec, cfg, batch, max_len,
+                                               dtype, enc_len))
+            for i, spec in enumerate(cfg.pattern)}
+
+
+def _decode_block(bp: Params, spec: LayerSpec, x: Array, cache, index,
+                  cfg: ModelConfig, mesh):
+    h = common.apply_norm(bp["norm1"], x, cfg.norm_type, cfg.norm_eps)
+    if spec.mixer == "attn":
+        h, new_cache = attention.decode(
+            bp["mixer"], h, {"k": cache["k"], "v": cache["v"]}, index, cfg,
+            mesh, layer_window=spec.sliding_window)
+    elif spec.mixer == "mamba":
+        h, new_cache = ssm.decode(bp["mixer"], h, cache, cfg, mesh)
+    elif spec.mixer == "mlstm":
+        h, new_cache = xlstm.mlstm_decode(bp["mixer"], h, cache, cfg, mesh)
+    elif spec.mixer == "slstm":
+        h, new_cache = xlstm.slstm_decode(bp["mixer"], h, cache, cfg, mesh)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + h
+    if "cross" in bp and "cross_k" in cache:
+        h = common.apply_norm(bp["norm_cross"], x, cfg.norm_type,
+                              cfg.norm_eps)
+        h, _ = attention.decode(bp["cross"], h, {}, index, cfg, mesh,
+                                layer_window=False,
+                                cross_cache=(cache["cross_k"],
+                                             cache["cross_v"]))
+        x = x + h
+        new_cache = dict(new_cache, cross_k=cache["cross_k"],
+                         cross_v=cache["cross_v"])
+    if spec.ffn != "none":
+        h = common.apply_norm(bp["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        if spec.ffn == "moe":
+            h, _ = moe.moe_apply(bp["ffn"], h, cfg, mesh)
+        else:
+            h = moe.mlp_apply(bp["ffn"], h, cfg, mesh)
+        x = x + h
+    return x, new_cache
+
+
+def decode_step(params: Params, tokens: Array, cache: Params, index: Array,
+                cfg: ModelConfig, mesh=None) -> Tuple[Array, Params]:
+    """One decode step.  tokens: (B, 1) int32; index: scalar position.
+
+    Returns (logits (B, 1, V), new cache).
+    """
+    if cfg.pos_embedding == "absolute":
+        # Embed manually with the position-`index` sinusoid (the batch
+        # path in embed_inputs would add position 0).
+        x = jnp.take(params["embed"], tokens, axis=0).astype(
+            common.dtype_of(cfg.dtype_compute))
+        table = common.sinusoidal_positions(cache_max_len(cache),
+                                            cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            table, jnp.asarray(index, jnp.int32), 1, axis=0
+        )[None].astype(x.dtype)
+    else:
+        x = embed_inputs(params, tokens, cfg, mesh)
+    positions = (jnp.full((3, x.shape[0], 1), index)
+                 if cfg.mrope_sections else
+                 jnp.full((x.shape[0], 1), index))
+
+    new_cache: Params = {}
+    if cfg.layer_mode == "scan" and cfg.num_groups > 1:
+        def body(x, slices):
+            gp, gc = slices
+            caches_out = []
+            for i, spec in enumerate(cfg.pattern):
+                xi, ci = _decode_block_with_positions(
+                    gp[f"pos{i}"], spec, x, gc[f"pos{i}"], index, cfg,
+                    mesh, positions)
+                x = xi
+                caches_out.append(ci)
+            return x, {f"pos{i}": c for i, c in enumerate(caches_out)}
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        new_cache = {f"pos{i}": [] for i in range(len(cfg.pattern))}
+        for g in range(cfg.num_groups):
+            for i, spec in enumerate(cfg.pattern):
+                gp = jax.tree_util.tree_map(
+                    lambda a: a[g], params["layers"][f"pos{i}"])
+                gc = jax.tree_util.tree_map(lambda a: a[g],
+                                            cache[f"pos{i}"])
+                x, ci = _decode_block_with_positions(
+                    gp, spec, x, gc, index, cfg, mesh, positions)
+                new_cache[f"pos{i}"].append(ci)
+        new_cache = {
+            k: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *v)
+            for k, v in new_cache.items()}
+    logits = lm_logits(params, x, cfg, mesh)
+    return logits, new_cache
+
+
+def _decode_block_with_positions(bp, spec, x, cache, index, cfg, mesh,
+                                 positions):
+    # attention.decode derives positions from `index`; recurrent mixers
+    # ignore positions entirely.
+    del positions
+    return _decode_block(bp, spec, x, cache, index, cfg, mesh)
+
+
+def cache_max_len(cache: Params) -> int:
+    for pos in cache.values():
+        if "k" in pos:
+            return int(pos["k"].shape[2])
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def _cache_constrain(x: Array, mesh) -> Array:
+    """Shard prefill K/V like the decode cache: KV heads over `model`
+    when divisible, else head_dim.  Applied INSIDE the layer stack so the
+    scan's stacked cache buffer is sharded (out_shardings alone leaves a
+    replicated temp — §Perf-hillclimb pair C)."""
+    if mesh is None or getattr(mesh, "empty", True):
+        return x
+    kv = x.shape[-2]
+    size = mesh.shape.get("model", 1)
+    if kv % max(size, 1) == 0:
+        return rules.constrain(x, mesh, "batch", None, "tensor", None)
+    return rules.constrain(x, mesh, "batch", None, None, "tensor")
+
+
+def _attn_cache_layout(state: Dict[str, Array], spec: LayerSpec,
+                       cfg: ModelConfig, seq_len: int,
+                       pad_to: Optional[int],
+                       mesh=None) -> Dict[str, Array]:
+    """Re-lay prefill K/V into the decode cache format.
+
+    Full-attention layers: zero-pad the sequence dim to ``pad_to`` so
+    decode has write headroom.  SWA layers: scatter the last ``window``
+    entries into ring-buffer slots ``pos % window``.
+    """
+    if "k" not in state:
+        return state
+    k = _cache_constrain(state["k"], mesh)
+    v = _cache_constrain(state["v"], mesh)
+    out = dict(state)
+    out["k"], out["v"] = k, v
+    if spec.sliding_window and cfg.sliding_window:
+        w = cfg.sliding_window
+        p0 = max(0, seq_len - w)
+        slots = jnp.arange(p0, seq_len) % w
+        ring_k = jnp.zeros((k.shape[0], w) + k.shape[2:], k.dtype)
+        ring_v = jnp.zeros_like(ring_k)
+        out["k"] = ring_k.at[:, slots].set(k[:, p0:])
+        out["v"] = ring_v.at[:, slots].set(v[:, p0:])
+    elif pad_to is not None and pad_to > seq_len:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, pad_to - seq_len)
+        out["k"] = jnp.pad(k, pad)
+        out["v"] = jnp.pad(v, pad)
+    return out
+
+
+def prefill(params: Params, inputs: Array, cfg: ModelConfig, mesh=None,
+            encoder_inputs: Optional[Array] = None,
+            pad_to: Optional[int] = None) -> Tuple[Array, Params]:
+    """Process the prompt; return (last-token logits, decode cache).
+
+    Attention layers keep their K/V re-laid for decode (zero-padded to
+    ``pad_to``, or ring-buffer layout for SWA layers); recurrent layers
+    keep their final state.
+    """
+    enc_out = None
+    if cfg.is_encdec:
+        assert encoder_inputs is not None
+        enc_out = encode(params, encoder_inputs, cfg, mesh)
+    x = embed_inputs(params, inputs, cfg, mesh)
+    positions = (default_positions(inputs, cfg)
+                 if cfg.pos_embedding == "rope" else None)
+
+    caches: Params = {f"pos{i}": [] for i in range(len(cfg.pattern))}
+
+    seq_len = inputs.shape[1]
+
+    def group_fn(x, gp):
+        states = []
+        for i, spec in enumerate(cfg.pattern):
+            x, _, st = _apply_block_full(gp[f"pos{i}"], spec, x, cfg, mesh,
+                                         positions, jnp.zeros(()),
+                                         enc_out=enc_out,
+                                         collect_state=True)
+            states.append(_attn_cache_layout(st, spec, cfg, seq_len,
+                                             pad_to, mesh))
+        return x, states
+
+    if cfg.layer_mode == "scan" and cfg.num_groups > 1:
+        def body(x, gp):
+            x, states = group_fn(x, gp)
+            return x, {f"pos{i}": s for i, s in enumerate(states)}
+        x, stacked = jax.lax.scan(body, x, params["layers"])
+        caches = stacked
+    else:
+        for g in range(cfg.num_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[g], params["layers"])
+            x, states = group_fn(x, gp)
+            for i, st in enumerate(states):
+                caches[f"pos{i}"].append(st)
+        caches = {k: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *v)
+                  for k, v in caches.items()}
+    logits = lm_logits(params, x[:, -1:, :], cfg, mesh)
+    return logits, caches

@@ -1,0 +1,288 @@
+"""xLSTM mixers (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+**mLSTM** is a gated linear-attention recurrence with a matrix state per
+head::
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (d_v x d_k matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t              (normalizer)
+    h_t = (C_t q_t) / max(|n_t^T q_t|, stab)
+
+with exponential input gate ``i = exp(i~)`` and sigmoid-in-log-space
+forget gate, stabilized by the running magnitude ``m_t`` (paper App. A).
+We implement the **chunkwise-parallel form** (like the SSD mixer): within
+a chunk all pairwise terms are one masked matmul in log-stabilized space;
+across chunks the (C, n, m) state is carried.  The chunk loop is unrolled
+for cost-analysis fidelity.  A sequential reference lives in the tests.
+
+**sLSTM** keeps scalar memories with recurrent (block-diagonal per-head)
+hidden mixing, which is inherently sequential -> ``lax.scan`` over time.
+Its per-step cost is tiny (d^2 recurrences at d_model=768); the roofline
+harness applies the documented trip-count correction for this scan.
+
+Both blocks follow the xLSTM residual-block layout with input up-
+projection (mLSTM: expand 2x) — matching the assigned ``xlstm-125m``
+config where ``d_ff = 0`` (no separate FFN).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key: Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din = 2 * d                       # xLSTM mLSTM block expansion = 2
+    nh = cfg.xlstm_heads
+    assert din % nh == 0
+    dt = common.dtype_of(cfg.dtype_params)
+    ks = jax.random.split(key, 8)
+    return {
+        "wup": common.dense_init(ks[0], (d, din), d, dt),
+        "wgate": common.dense_init(ks[1], (d, din), d, dt),
+        "wq": common.dense_init(ks[2], (din, din), din, dt),
+        "wk": common.dense_init(ks[3], (din, din), din, dt),
+        "wv": common.dense_init(ks[4], (din, din), din, dt),
+        "wif": common.dense_init(ks[5], (din, 2 * nh), din, jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros((nh,)),
+                                    3.0 * jnp.ones((nh,))]),  # forget ~ open
+        "norm": jnp.ones((din,), jnp.float32),
+        "wo": common.dense_init(ks[6], (din, d), din, dt),
+    }
+
+
+def _mlstm_chunked(q: Array, k: Array, v: Array, ig: Array, fg: Array,
+                   chunk: int,
+                   state: Optional[Dict[str, Array]] = None
+                   ) -> Tuple[Array, Dict[str, Array]]:
+    """Chunkwise mLSTM.
+
+    q,k,v: (B, S, nh, hd); ig, fg: (B, S, nh) raw gate pre-activations.
+    state: {"C": (B,nh,hd,hd), "n": (B,nh,hd), "m": (B,nh)}.
+    Returns (h (B,S,nh,hd), new state).  Log-space stabilized.
+    """
+    bsz, s, nh, hd = q.shape
+    while s // chunk > 64:   # compile-size guard (see ssm._ssd_chunked)
+        chunk *= 2
+    if s % chunk:
+        chunk = s
+    if state is None:
+        c_st = jnp.zeros((bsz, nh, hd, hd), jnp.float32)
+        n_st = jnp.zeros((bsz, nh, hd), jnp.float32)
+        m_st = jnp.full((bsz, nh), -1e30, jnp.float32)
+    else:
+        c_st, n_st, m_st = (state["C"].astype(jnp.float32),
+                            state["n"].astype(jnp.float32),
+                            state["m"].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))     # (B,S,nh)
+    scale = hd ** -0.5
+    outs = []
+    for start in range(0, s, chunk):
+        sl = slice(start, start + chunk)
+        qc = q[:, sl].astype(jnp.float32) * scale
+        kc = k[:, sl].astype(jnp.float32)
+        vc = v[:, sl].astype(jnp.float32)
+        ic = ig[:, sl].astype(jnp.float32)                # (B,L,nh)
+        fc = logf[:, sl]                                  # (B,L,nh)
+        cum = jnp.cumsum(fc, axis=1)                      # F_t
+        # log weight of source s' at target t: F_t - F_s' + i_s'  (s'<=t)
+        lw = (cum[:, :, None, :] - cum[:, None, :, :]
+              + ic[:, None, :, :])                        # (B,L,L,nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lw = jnp.where(tri[None, :, :, None], lw, -jnp.inf)
+        # inter-chunk log magnitude at t: F_t + m_prev
+        inter_lm = cum + m_st[:, None, :]                 # (B,L,nh)
+        m_t = jnp.maximum(jnp.max(lw, axis=2), inter_lm)  # (B,L,nh)
+        m_t = jnp.maximum(m_t, -1e30)
+        w = jnp.exp(lw - m_t[:, :, None, :])              # (B,L,L,nh)
+        inter_w = jnp.exp(inter_lm - m_t)                 # (B,L,nh)
+        # Scores (q_t . k_s) per head.
+        qk = jnp.einsum("blhd,bshd->blsh", qc, kc)        # (B,L,L,nh)
+        num_intra = jnp.einsum("blsh,blsh,bshd->blhd", qk, w, vc)
+        num_inter = jnp.einsum("blhd,bhde,blh->blhe",
+                               qc, c_st.swapaxes(-1, -2), inter_w)
+        # normalizer: n_t . q_t
+        den_intra = jnp.einsum("blsh,bshd,blhd->blh", w, kc, qc)
+        den_inter = jnp.einsum("bhd,blhd,blh->blh", n_st, qc, inter_w)
+        den = jnp.abs(den_intra + den_inter)
+        den = jnp.maximum(den, jnp.exp(-m_t))
+        h = (num_intra + num_inter) / den[..., None]
+        outs.append(h)
+        # State update to end of chunk.
+        f_total = cum[:, -1]                              # (B,nh)
+        m_new = jnp.maximum(f_total + m_st,
+                            jnp.max(cum[:, -1:, :] - cum + ic, axis=1))
+        w_st = jnp.exp(cum[:, -1:, :] - cum + ic - m_new[:, None, :])
+        c_st = (jnp.exp(f_total + m_st - m_new)[:, :, None, None] * c_st
+                + jnp.einsum("bsh,bshd,bshe->bhde", w_st, vc, kc))
+        n_st = (jnp.exp(f_total + m_st - m_new)[:, :, None] * n_st
+                + jnp.einsum("bsh,bshd->bhd", w_st, kc))
+        m_st = m_new
+    h = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return h, {"C": c_st, "n": n_st, "m": m_st}
+
+
+def mlstm_forward(p: Params, x: Array, cfg: ModelConfig, mesh,
+                  return_state: bool = False):
+    bsz, s, _ = x.shape
+    nh = cfg.xlstm_heads
+    dt = x.dtype
+    up = x @ p["wup"].astype(dt)
+    gate = x @ p["wgate"].astype(dt)
+    din = up.shape[-1]
+    hd = din // nh
+    q = (up @ p["wq"].astype(dt)).reshape(bsz, s, nh, hd)
+    k = (up @ p["wk"].astype(dt)).reshape(bsz, s, nh, hd)
+    v = (up @ p["wv"].astype(dt)).reshape(bsz, s, nh, hd)
+    gif = (up.astype(jnp.float32) @ p["wif"]) + p["if_bias"]
+    ig, fg = gif[..., :nh], gif[..., nh:]
+    h, st = _mlstm_chunked(q, k, v, ig, fg, cfg.ssm_chunk)
+    h = h.reshape(bsz, s, din).astype(dt)
+    h = common.rmsnorm(h, p["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(gate)
+    out = h @ p["wo"].astype(dt)
+    out = rules.residual_constrain(out, mesh, cfg.sequence_sharding)
+    return (out, st) if return_state else (out, None)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    din = 2 * cfg.d_model
+    nh = cfg.xlstm_heads
+    hd = din // nh
+    return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def mlstm_decode(p: Params, x: Array, state: Dict[str, Array],
+                 cfg: ModelConfig, mesh) -> Tuple[Array, Dict[str, Array]]:
+    """Single-token mLSTM step.  x: (B, 1, D)."""
+    bsz = x.shape[0]
+    nh = cfg.xlstm_heads
+    dt = x.dtype
+    xt = x[:, 0]
+    up = xt @ p["wup"].astype(dt)
+    gate = xt @ p["wgate"].astype(dt)
+    din = up.shape[-1]
+    hd = din // nh
+    q = (up @ p["wq"].astype(dt)).reshape(bsz, nh, hd).astype(jnp.float32)
+    k = (up @ p["wk"].astype(dt)).reshape(bsz, nh, hd).astype(jnp.float32)
+    v = (up @ p["wv"].astype(dt)).reshape(bsz, nh, hd).astype(jnp.float32)
+    q = q * hd ** -0.5
+    gif = (up.astype(jnp.float32) @ p["wif"]) + p["if_bias"]
+    ig, fg = gif[..., :nh], gif[..., nh:]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state["m"], ig)
+    f_eff = jnp.exp(logf + state["m"] - m_new)
+    i_eff = jnp.exp(ig - m_new)
+    c_st = (f_eff[:, :, None, None] * state["C"]
+            + i_eff[:, :, None, None] * v[..., :, None] * k[..., None, :])
+    n_st = f_eff[..., None] * state["n"] + i_eff[..., None] * k
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n_st, q))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    h = jnp.einsum("bhde,bhe->bhd", c_st, q) / den[..., None]
+    h = h.reshape(bsz, din).astype(dt)
+    h = common.rmsnorm(h, p["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(gate)
+    out = (h @ p["wo"].astype(dt))[:, None, :]
+    return out, {"C": c_st, "n": n_st, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key: Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    nh = cfg.xlstm_heads
+    hd = d // nh
+    dt = common.dtype_of(cfg.dtype_params)
+    ks = jax.random.split(key, 3)
+    return {
+        # 4 gates (i, f, z, o) from input ...
+        "wx": common.dense_init(ks[0], (d, 4 * d), d, dt),
+        # ... and block-diagonal recurrent mixing per head.
+        "wr": common.dense_init(ks[1], (nh, hd, 4 * hd), hd, dt),
+        "bias": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                                 jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "norm": jnp.ones((d,), jnp.float32),
+        "wo": common.dense_init(ks[2], (d, d), d, dt),
+    }
+
+
+def _slstm_step(p: Params, cfg: ModelConfig, carry, gx_t):
+    """carry: (c, n, h, m) each (B, d) float32; gx_t: (B, 4d) input part."""
+    c, n, h, m = carry
+    d = cfg.d_model
+    nh = cfg.xlstm_heads
+    hd = d // nh
+    hr = h.reshape(h.shape[0], nh, hd)
+    gr = jnp.einsum("bhd,hde->bhe", hr,
+                    p["wr"].astype(jnp.float32)).reshape(h.shape[0], 4 * d)
+    g = gx_t + gr + p["bias"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + m, gi)
+    i_eff = jnp.exp(gi - m_new)
+    f_eff = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f_eff * c + i_eff * z
+    n_new = f_eff * n + i_eff
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p: Params, x: Array, cfg: ModelConfig, mesh,
+                  return_state: bool = False):
+    """Sequential sLSTM over time (lax.scan)."""
+    bsz, s, d = x.shape
+    gx = (x @ p["wx"].astype(x.dtype)).astype(jnp.float32)   # (B,S,4d)
+    carry0 = tuple(jnp.zeros((bsz, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((bsz, d), -1e30, jnp.float32),)
+    carry0 = (carry0[0], carry0[1], carry0[2], carry0[3])
+
+    def step(carry, gx_t):
+        return _slstm_step(p, cfg, carry, gx_t)
+
+    carry, hs = jax.lax.scan(step, carry0, gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                    # (B,S,d)
+    h = common.rmsnorm(h, p["norm"], cfg.norm_eps)
+    out = h @ p["wo"].astype(x.dtype)
+    out = rules.residual_constrain(out, mesh, cfg.sequence_sharding)
+    if return_state:
+        c, n, hh, m = carry
+        return out, {"c": c, "n": n, "h": hh, "m": m}
+    return out, None
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(p: Params, x: Array, state: Dict[str, Array],
+                 cfg: ModelConfig, mesh) -> Tuple[Array, Dict[str, Array]]:
+    gx = (x[:, 0] @ p["wx"].astype(x.dtype)).astype(jnp.float32)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(p, cfg, carry, gx)
+    h = common.rmsnorm(h.astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = (h @ p["wo"].astype(x.dtype))[:, None, :]
+    c, n, hh, m = carry
+    return out, {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (OptimizerConfig, apply_updates,
+                                    global_norm, init_state)
+
+__all__ = ["OptimizerConfig", "apply_updates", "global_norm", "init_state"]

@@ -1,0 +1,128 @@
+"""Pytree optimizers: SGD(+momentum) and AdamW, built from scratch.
+
+AdamW moment dtype is configurable (``state_dtype``): the >300B configs
+(jamba-1.5-large) keep m/v in bf16 to fit HBM per DESIGN.md §5; everything
+else defaults to f32.  Optimizer state shards exactly like the parameters
+(the dry-run passes the same PartitionSpec tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | sgd
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9          # sgd
+    grad_clip: float = 1.0         # global-norm clip; 0 disables
+    state_dtype: str = "float32"   # float32 | bfloat16
+    warmup_steps: int = 100
+    schedule: str = "constant"     # constant | cosine
+    total_steps: int = 10_000
+
+
+def _sdtype(cfg: OptimizerConfig):
+    return jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+
+def init_state(params: Params, cfg: OptimizerConfig) -> dict:
+    if cfg.name == "sgd":
+        if cfg.momentum > 0.0:
+            mu = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, _sdtype(cfg)), params)
+            return {"mu": mu, "count": jnp.zeros((), jnp.int32)}
+        return {"count": jnp.zeros((), jnp.int32)}
+    mu = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, _sdtype(cfg)), params)
+    nu = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, _sdtype(cfg)), params)
+    return {"mu": mu, "nu": nu, "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    lr = jnp.asarray(cfg.learning_rate, jnp.float32)
+    if cfg.warmup_steps > 0:
+        lr = lr * jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return lr
+
+
+def apply_updates(params: Params, grads: Params, state: dict,
+                  cfg: OptimizerConfig) -> Tuple[Params, dict, dict]:
+    """One optimizer step.  Returns (params, state, metrics)."""
+    step = state["count"]
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0.0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+            grads)
+    lr = _lr_at(cfg, step)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+
+    if cfg.name == "sgd":
+        if cfg.momentum > 0.0:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: (cfg.momentum * m.astype(jnp.float32)
+                              + g.astype(jnp.float32)).astype(m.dtype),
+                state["mu"], grads)
+            params = jax.tree_util.tree_map(
+                lambda p, m: (p.astype(jnp.float32)
+                              - lr * m.astype(jnp.float32)).astype(p.dtype),
+                params, mu)
+            return params, {"mu": mu, "count": step + 1}, metrics
+        params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return params, {"count": step + 1}, metrics
+
+    # AdamW
+    b1, b2 = cfg.beta1, cfg.beta2
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                        + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["mu"])
+    flat_v = jax.tree_util.tree_leaves(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "count": step + 1}, metrics

@@ -1,0 +1,123 @@
+"""Parameter PartitionSpec assignment (path + shape based, MaxText-style).
+
+Model-zoo params are nested dicts; ``param_specs`` walks the (shape) tree
+and assigns a PartitionSpec per leaf:
+
+* 2-D projections: contraction-side dim on ``fsdp`` (= pod+data), the
+  wide output dim on ``tensor`` (= model) — standard 2-D (FSDP x TP).
+* MoE expert stacks (E, D, F): expert-parallel over ``tensor`` when E is
+  divisible by the model-axis size; otherwise per-expert tensor parallel
+  on F.
+* Stacked layers carry a leading group dim -> spec gets a ``None`` prefix.
+* Norm scales / biases / gate vectors: replicated.
+
+Everything here returns *specs*; NamedShardings are built in the launcher
+where the mesh is known.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+
+Params = Any
+
+
+def _axis(mesh: Mesh, logical: Optional[str]):
+    return rules.resolve(logical, mesh)
+
+
+def _spec_for(path: str, ndim: int, shape: tuple, cfg: ModelConfig,
+              mesh: Mesh, stacked: bool) -> P:
+    """Spec for one leaf; ``stacked`` = leading layer-group dim present."""
+    lead = (None,) if stacked else ()
+    core_ndim = ndim - len(lead)
+    fsdp = _axis(mesh, "fsdp")
+    tensor = _axis(mesh, "tensor")
+    name = path.rsplit("/", 1)[-1]
+
+    if core_ndim <= 1:
+        return P(*lead, None)
+
+    # MoE expert stacks: (E, D, F) / (E, F, D)
+    if name in ("wi", "wg", "wo") and core_ndim == 3:
+        e = shape[len(lead)]
+        if tensor is not None and rules.divisible(e, mesh, ("model",)):
+            # expert-parallel; shard the other big dim on fsdp
+            return P(*lead, tensor, fsdp, None)
+        return (P(*lead, None, fsdp, tensor) if name in ("wi", "wg")
+                else P(*lead, None, tensor, fsdp))
+
+    # Vocab-dim tensors shard over `model` only: sharding their d_model
+    # side over fsdp makes GSPMD reshard the (batch-sharded) hidden states
+    # against the contraction dim — full-batch temp buffers (see
+    # EXPERIMENTS.md §Perf iteration log).  V/16 keeps them small anyway.
+    if name == "embed":
+        return P(tensor, None)
+    if name == "lm_head":
+        return P(None, tensor)
+    if name == "router":
+        return P(*lead, fsdp, None)
+
+    # sLSTM block-diagonal recurrent weights (nh, hd, 4hd): replicate
+    # (small) .
+    if name == "wr":
+        return P(*lead, None, None, None)
+
+    if core_ndim == 2:
+        # Output-side projections back to d_model: contract dim sharded
+        # on tensor.
+        if name in ("wo",):
+            return P(*lead, tensor, fsdp)
+        # Input-side projections from d_model: wide dim on tensor.
+        if name in ("wq", "wk", "wv", "wi", "wg", "wup", "wgate", "wz",
+                    "wx"):
+            return P(*lead, fsdp, tensor)
+        if name in ("wB", "wC", "wdt", "wif", "wx4"):
+            return P(*lead, fsdp, None)
+        if name == "conv":
+            return P(*lead, None, tensor)
+        return P(*lead, fsdp, None)
+
+    return P(*lead, *([None] * core_ndim))
+
+
+def _sanitize(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop spec axes that do not divide the dim exactly — explicit
+    in_shardings (unlike constraints) cannot be padded by GSPMD.
+    E.g. whisper's vocab 51865 on a 16-way model axis."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        axes = entry if isinstance(entry, tuple) else (
+            (entry,) if entry else ())
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if (size <= 1 or dim % size == 0) else None)
+    return P(*out)
+
+
+def param_specs(shapes: Params, cfg: ModelConfig, mesh: Mesh) -> Params:
+    """Map a params shape-tree -> PartitionSpec tree."""
+
+    def walk(path: str, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{path}/{k}", v) for k, v in node.items()}
+        stacked = "/layers/" in path or path.startswith("layers/")
+        spec = _spec_for(path, len(node.shape), tuple(node.shape), cfg,
+                         mesh, stacked)
+        return _sanitize(spec, tuple(node.shape), mesh)
+
+    return walk("", shapes)
+
+
+def param_shardings(shapes: Params, cfg: ModelConfig,
+                    mesh: Mesh) -> Params:
+    specs = param_specs(shapes, cfg, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,120 @@
+"""Logical-axis sharding rules for the production mesh (DESIGN.md §5).
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod.  Logical axes used by the model zoo:
+
+* ``batch``  -> ("pod", "data")   — data parallel
+* ``fsdp``   -> ("pod", "data")   — parameter/optimizer sharding (2-D with
+                                    ``tensor``)
+* ``tensor`` -> ("model",)        — head / d_ff / expert / vocab dim
+* ``expert`` -> ("model",)        — MoE expert-parallel (when divisible)
+* ``cache_seq`` -> ("data",)      — decode KV-cache sequence sharding for
+                                    batch-1 long-context decode
+* everything else -> replicated
+
+GSPMD handles non-divisible dims by padding (e.g. 40 heads over 16-way
+``model``), which we accept and surface in the roofline notes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical name -> tuple of mesh axis names (subset present in the mesh is
+# used, preserving order).
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "tensor": ("model",),
+    "expert": ("model",),
+    "cache_seq": ("data",),
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks shards its seq dim over the model axis, cutting saved-
+    # activation memory by the TP degree (see EXPERIMENTS.md §Perf).
+    "seq": ("model",),
+}
+
+
+def residual_constrain(x: jax.Array, mesh: Optional[Mesh],
+                       seq_shard: bool) -> jax.Array:
+    """Constrain a (B, S, D) residual-stream tensor between blocks."""
+    return constrain(x, mesh, "batch", "seq" if seq_shard else None, None)
+
+
+def constrain_pad(x: jax.Array, mesh: Optional[Mesh],
+                  *logical: Optional[str]) -> jax.Array:
+    """Like :func:`constrain` but keeps axes whose dim is NOT divisible —
+    GSPMD pads unevenly (e.g. 40 heads over a 16-way model axis -> 3 per
+    shard, 20% padding).  Used for attention head dims, where padding
+    beats replicating the O(S^2) score buffers by far."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(x, named(mesh, *logical))
+
+
+def mesh_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def resolve(logical: Optional[str], mesh: Mesh):
+    """Logical axis name -> mesh axes entry for a PartitionSpec."""
+    if logical is None:
+        return None
+    axes = tuple(a for a in LOGICAL_RULES.get(logical, ())
+                 if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec(mesh: Mesh, *logical: Optional[str]) -> P:
+    """Build a PartitionSpec from logical axis names."""
+    return P(*(resolve(name, mesh) for name in logical))
+
+
+def named(mesh: Mesh, *logical: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, spec(mesh, *logical))
+
+
+def constrain(x: jax.Array, mesh: Optional[Mesh],
+              *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh.
+
+    Axes whose dim is not divisible by the mesh-axis product are dropped
+    (replicated) instead of letting GSPMD pad — avoids silent 2x buffer
+    blow-ups on e.g. batch=1 decode or 12-head models on a 16-way axis.
+    """
+    if mesh is None or mesh.empty:
+        return x
+    names = []
+    for dim, name in zip(x.shape, logical):
+        axes = LOGICAL_RULES.get(name, ()) if name else ()
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if name is not None and size > 1 and dim % size == 0:
+            names.append(name)
+        else:
+            names.append(None)
+    return jax.lax.with_sharding_constraint(x, named(mesh, *names))
+
+
+def tree_spec(tree, fn) -> object:
+    """Map ``fn(path_str, leaf) -> PartitionSpec`` over a pytree."""
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{path}/{k}", v) for k, v in node.items()}
+        return fn(path, node)
+    return walk("", tree)
+
+
+def divisible(n: int, mesh: Mesh, axes: Sequence[str]) -> bool:
+    size = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return size > 0 and n % size == 0

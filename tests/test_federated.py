@@ -1,0 +1,120 @@
+"""FEEL integration tests: Algorithm 1 end-to-end at small scale."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import diversity, federated, scheduler, wireless
+from repro.data import partition, synthetic
+from repro.models import paper_nets
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    imgs, labs = synthetic.generate(0, samples_per_class=600)
+    pspec = partition.PartitionSpec(num_devices=12, num_shards=100,
+                                    shard_size=50)
+    data = partition.partition(imgs, labs, seed=1, spec=pspec)
+    wcfg = wireless.WirelessConfig()
+    net = wireless.sample_network(jax.random.key(0), 12, wcfg)
+    return data, net, wcfg
+
+
+def _run(data, net, wcfg, method, rounds=4, model="mlp", **sch_kw):
+    mspec = paper_nets.PaperNetSpec(kind=model)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    scfg = scheduler.SchedulerConfig(method=method, n_min=2,
+                                     iterations_max=4, **sch_kw)
+    fcfg = federated.FLConfig(num_rounds=rounds, batch_size=50,
+                              learning_rate=0.1)
+    return federated.run_federated(
+        init_params=params,
+        loss_fn=functools.partial(paper_nets.loss_fn, spec=mspec),
+        eval_fn=functools.partial(paper_nets.accuracy, spec=mspec),
+        data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
+        key=jax.random.key(4))
+
+
+def test_fl_learns(small_world):
+    data, net, wcfg = small_world
+    _, hist = _run(data, net, wcfg, "das")
+    assert hist[-1].accuracy > 0.5, \
+        f"FL failed to learn: {hist[-1].accuracy}"
+    assert hist[-1].accuracy > hist[0].accuracy
+
+
+def test_round_accounting(small_world):
+    data, net, wcfg = small_world
+    _, hist = _run(data, net, wcfg, "das", rounds=3)
+    for rec in hist:
+        assert rec.n_selected >= 2              # n_min
+        assert rec.round_time > 0.0
+        assert rec.energy_total > 0.0
+        assert rec.energy_per_device <= rec.energy_total + 1e-9
+
+
+def test_full_baseline_selects_everyone(small_world):
+    data, net, wcfg = small_world
+    _, hist = _run(data, net, wcfg, "full", rounds=2)
+    assert all(r.n_selected == data.num_devices for r in hist)
+
+
+def test_ages_reset_on_selection(small_world):
+    data, net, wcfg = small_world
+    _, hist = _run(data, net, wcfg, "random", rounds=3,
+                   n_fixed=3)
+    # With n_fixed=3, every round selects exactly 3.
+    assert all(r.n_selected == 3 for r in hist)
+
+
+def test_fedavg_aggregate_weighted():
+    stacked = {"w": jnp.stack([jnp.ones((4,)), 3.0 * jnp.ones((4,))])}
+    weights = jnp.asarray([0.25, 0.75])
+    out = federated.fedavg_aggregate(stacked, weights)
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5)
+
+
+def test_fedavg_aggregate_kernel_path():
+    key = jax.random.key(5)
+    stacked = {"w": jax.random.normal(key, (6, 37))}
+    weights = jax.nn.softmax(jax.random.normal(key, (6,)))
+    ref_out = federated.fedavg_aggregate(stacked, weights,
+                                         use_kernel=False)
+    krn_out = federated.fedavg_aggregate(stacked, weights,
+                                         use_kernel=True)
+    np.testing.assert_allclose(np.asarray(krn_out["w"]),
+                               np.asarray(ref_out["w"]), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_das_beats_random_on_noniid(small_world):
+    """The paper's core claim at miniature scale: with few devices
+    schedulable, data-aware selection reaches higher accuracy in equal
+    rounds.  Averaged over 3 seeds to damp run-to-run noise."""
+    data, net, wcfg = small_world
+    gaps = []
+    for seed in range(3):
+        mspec = paper_nets.PaperNetSpec(kind="mlp")
+        params = paper_nets.init(jax.random.key(seed), mspec)
+        accs = {}
+        for method in ("das", "random"):
+            scfg = scheduler.SchedulerConfig(method=method, n_min=2,
+                                             n_fixed=2,
+                                             iterations_max=4)
+            fcfg = federated.FLConfig(num_rounds=4, batch_size=50,
+                                      learning_rate=0.1)
+            _, hist = federated.run_federated(
+                init_params=params,
+                loss_fn=functools.partial(paper_nets.loss_fn,
+                                          spec=mspec),
+                eval_fn=functools.partial(paper_nets.accuracy,
+                                          spec=mspec),
+                data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
+                key=jax.random.key(seed + 40))
+            accs[method] = hist[-1].accuracy
+        gaps.append(accs["das"] - accs["random"])
+    assert float(np.mean(gaps)) > -0.02, \
+        f"DAS under-performs random: gaps={gaps}"

@@ -1,0 +1,85 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k", [1, 3, 17, 64])
+@pytest.mark.parametrize("p", [128, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_agg_sweep(k, p, dtype):
+    key = jax.random.key(k * 1000 + p)
+    u = jax.random.normal(key, (k, p), dtype)
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(1), (k,)))
+    got = ops.fedavg_agg(u, w)
+    want = ref.fedavg_agg(u, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("k,n,c", [(1, 64, 10), (7, 300, 10), (16, 128, 3),
+                                   (5, 1024, 32)])
+def test_diversity_sweep(k, n, c):
+    key = jax.random.key(k + n)
+    labels = jax.random.randint(key, (k, n), 0, c)
+    mask = (jax.random.uniform(jax.random.key(2), (k, n)) > 0.3
+            ).astype(jnp.float32)
+    got = ops.diversity_stats(labels, mask, c)
+    want = ref.diversity(labels, mask, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # Gini-Simpson in [0, 1 - 1/C]
+    assert np.all(np.asarray(got)[:, 0] >= -1e-6)
+    assert np.all(np.asarray(got)[:, 0] <= 1 - 1.0 / c + 1e-6)
+
+
+@pytest.mark.parametrize("seq", [64, 192, 257])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(seq, causal, window, dtype):
+    b, h, kv, hd = 2, 4, 2, 64
+    key = jax.random.key(seq)
+    q = jax.random.normal(key, (b, seq, h, hd), dtype)
+    k = jax.random.normal(jax.random.key(1), (b, seq, kv, hd), dtype)
+    v = jax.random.normal(jax.random.key(2), (b, seq, kv, hd), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    kk = jnp.repeat(k, h // kv, axis=2)
+    vv = jnp.repeat(v, h // kv, axis=2)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, seq, hd)
+
+    want = ref.flash_attention(flat(q), flat(kk), flat(vv), causal=causal,
+                               window=window)
+    want = want.reshape(b, h, seq, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_cross_attention_lengths():
+    """Sq != Skv (cross attention / decode-style)."""
+    b, h, hd = 1, 2, 64
+    q = jax.random.normal(jax.random.key(0), (b, 64, h, hd))
+    k = jax.random.normal(jax.random.key(1), (b, 200, h, hd))
+    v = jax.random.normal(jax.random.key(2), (b, 200, h, hd))
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64,
+                              block_k=64)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+
+    want = ref.flash_attention(flat(q), flat(k), flat(v), causal=False)
+    want = want.reshape(b, h, 64, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

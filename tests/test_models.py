@@ -1,0 +1,163 @@
+"""Model-zoo tests: per-arch smoke (reduced configs), decode parity,
+chunked-vs-sequential oracles, SWA ring-buffer wraparound."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels import ref as kref
+from repro.models import ssm, transformer, xlstm
+from repro.models.config import LayerSpec
+
+
+def _inputs(cfg, key, b, s):
+    if cfg.input_mode == "embeddings":
+        return jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced variant (<=2-layer pattern, d_model<=256, <=4 experts):
+    one forward + one SGD train step on CPU; shapes + finiteness."""
+    cfg = configs.get(arch).reduced()
+    key = jax.random.key(0)
+    params = transformer.init(key, cfg)
+    b, s = 2, 64
+    inputs = _inputs(cfg, key, b, s)
+    enc = (jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+           if cfg.is_encdec else None)
+    logits, aux = transformer.forward(params, inputs, cfg, None,
+                                      encoder_inputs=enc)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    labels = jax.random.randint(jax.random.key(1), (b, s), 0,
+                                cfg.vocab_size)
+
+    def loss(p):
+        lg, ax = transformer.forward(p, inputs, cfg, None,
+                                     encoder_inputs=enc)
+        lp = jax.nn.log_softmax(lg.astype(jnp.float32))
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)
+        return jnp.mean(nll) + 0.01 * ax
+
+    l0, grads = jax.value_and_grad(loss)(params)
+    assert bool(jnp.isfinite(l0))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree_util.tree_leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0
+    params2 = jax.tree_util.tree_map(lambda p, g: p - 0.01 * g, params,
+                                     grads)
+    l1 = loss(params2)
+    assert bool(jnp.isfinite(l1))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_decode_parity(arch):
+    """prefill(S) + decode(S) == forward(S+1) at the last position."""
+    cfg = configs.get(arch).reduced()
+    key = jax.random.key(2)
+    params = transformer.init(key, cfg)
+    b, s = 2, 33
+    if cfg.input_mode == "embeddings":
+        prompt = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+        tok = jnp.full((b, 1), 7, jnp.int32)
+        emb_last = jnp.take(params["embed"], tok[:, 0], axis=0)[:, None]
+        full = jnp.concatenate([prompt, emb_last], axis=1)
+    else:
+        full = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+        prompt, tok = full[:, :s], full[:, s:s + 1]
+    enc = (jax.random.normal(key, (b, 16, cfg.d_model), jnp.float32)
+           if cfg.is_encdec else None)
+    want, _ = transformer.forward(params, full, cfg, None,
+                                  encoder_inputs=enc)
+    _, cache = transformer.prefill(params, prompt, cfg, None,
+                                   encoder_inputs=enc, pad_to=s + 8)
+    got, _ = transformer.decode_step(params, tok, cache, jnp.asarray(s),
+                                     cfg, None)
+    a, b_ = np.asarray(want[:, -1]), np.asarray(got[:, 0])
+    rel = np.max(np.abs(a - b_)) / max(np.max(np.abs(a)), 1e-6)
+    assert rel < 2e-2, f"{arch}: decode parity rel err {rel:.2e}"
+
+
+def test_swa_ring_wraparound():
+    """Decode correctness when the prompt exceeds the SWA window."""
+    cfg = configs.get("h2o_danube_3_4b").reduced(sliding_window=32,
+                                                 num_layers=2)
+    key = jax.random.key(3)
+    params = transformer.init(key, cfg)
+    b, s = 1, 100   # prompt 100 >> window 32
+    full = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    want, _ = transformer.forward(params, full, cfg, None)
+    _, cache = transformer.prefill(params, full[:, :s], cfg, None,
+                                   pad_to=s + 8)
+    got, _ = transformer.decode_step(params, full[:, s:s + 1], cache,
+                                     jnp.asarray(s), cfg, None)
+    rel = (np.max(np.abs(np.asarray(want[:, -1]) - np.asarray(got[:, 0])))
+           / max(np.max(np.abs(np.asarray(want[:, -1]))), 1e-6))
+    assert rel < 2e-2, f"SWA ring wraparound rel err {rel:.2e}"
+
+
+# ---------------------------------------------------------------------------
+# Chunked-vs-sequential recurrence oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_matches_sequential(chunk):
+    b, s, nh, p, n = 2, 64, 3, 8, 4
+    key = jax.random.key(4)
+    xh = jax.random.normal(key, (b, s, nh, p))
+    bm = jax.random.normal(jax.random.key(5), (b, s, n)) * 0.5
+    cm = jax.random.normal(jax.random.key(6), (b, s, n)) * 0.5
+    dt_s = jax.nn.softplus(jax.random.normal(jax.random.key(7),
+                                             (b, s, nh)))
+    log_a = -dt_s * 0.5
+    y_c, h_c = ssm._ssd_chunked(xh, bm, cm, log_a, dt_s, chunk)
+    y_s, h_s = kref.ssd_sequential(xh, bm, cm, log_a, dt_s)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_s),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mlstm_chunked_matches_sequential(chunk):
+    b, s, nh, hd = 2, 64, 2, 16
+    key = jax.random.key(8)
+    q = jax.random.normal(key, (b, s, nh, hd))
+    k = jax.random.normal(jax.random.key(9), (b, s, nh, hd))
+    v = jax.random.normal(jax.random.key(10), (b, s, nh, hd))
+    ig = jax.random.normal(jax.random.key(11), (b, s, nh))
+    fg = jax.random.normal(jax.random.key(12), (b, s, nh)) + 3.0
+    h_c, _ = xlstm._mlstm_chunked(q, k, v, ig, fg, chunk)
+    h_s = kref.mlstm_sequential(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_s),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_long_context_support_flags():
+    assert configs.get("xlstm_125m").supports_long_context()
+    assert configs.get("jamba_1_5_large_398b").supports_long_context()
+    assert configs.get("mixtral_8x22b").supports_long_context()
+    assert configs.get("h2o_danube_3_4b").supports_long_context()
+    assert not configs.get("qwen3_14b").supports_long_context()
+    assert not configs.get("whisper_small").supports_long_context()
+    assert not configs.get("codeqwen1_5_7b").supports_long_context()
+
+
+def test_mrope_equals_rope_for_text():
+    """Equal (t,h,w) positions must reduce M-RoPE to plain RoPE."""
+    from repro.models import common
+    pos = jnp.arange(16)[None]
+    sin_r, cos_r = common.rope_sin_cos(pos, 32, 1e4)
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, 16))
+    sin_m, cos_m = common.mrope_sin_cos(pos3, 32, 1e4, (6, 5, 5))
+    np.testing.assert_allclose(np.asarray(sin_r), np.asarray(sin_m),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cos_r), np.asarray(cos_m),
+                               rtol=1e-6)

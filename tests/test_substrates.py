@@ -1,0 +1,132 @@
+"""Optimizer / checkpoint / data-pipeline / sharding substrate tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import msgpack_ckpt
+from repro.data import partition, synthetic
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def _quad_params():
+    return {"a": jnp.asarray([2.0, -3.0]), "b": {"c": jnp.asarray([1.5])}}
+
+
+@pytest.mark.parametrize("name", ["sgd", "adamw"])
+def test_optimizer_converges_on_quadratic(name):
+    cfg = optim.OptimizerConfig(name=name, learning_rate=0.1,
+                                weight_decay=0.0, warmup_steps=0,
+                                grad_clip=0.0)
+    params = _quad_params()
+    state = optim.init_state(params, cfg)
+    loss = lambda p: (jnp.sum(p["a"] ** 2) + jnp.sum(p["b"]["c"] ** 2))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = optim.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_matches_reference_update():
+    """One AdamW step against the textbook update."""
+    cfg = optim.OptimizerConfig(name="adamw", learning_rate=0.01,
+                                beta1=0.9, beta2=0.999, eps=1e-8,
+                                weight_decay=0.1, warmup_steps=0,
+                                grad_clip=0.0)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.25])}
+    state = optim.init_state(p, cfg)
+    new_p, _, _ = optim.apply_updates(p, g, state, cfg)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = (np.asarray(p["w"]) - 0.01 *
+            (mhat / (np.sqrt(vhat) + 1e-8) + 0.1 * np.asarray(p["w"])))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+
+
+def test_grad_clip():
+    cfg = optim.OptimizerConfig(name="sgd", learning_rate=1.0,
+                                momentum=0.0, grad_clip=1.0,
+                                warmup_steps=0)
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.asarray([30.0, 40.0, 0.0])}   # norm 50 -> scaled by 1/50
+    state = optim.init_state(p, cfg)
+    new_p, _, m = optim.apply_updates(p, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               [-0.6, -0.8, 0.0], rtol=1e-5)
+    assert float(m["grad_norm"]) == pytest.approx(50.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32),
+                  "d": jnp.asarray(2.5, jnp.bfloat16)}}
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    msgpack_ckpt.save(path, tree, meta={"step": 7})
+    restored = msgpack_ckpt.restore(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    _, meta = msgpack_ckpt.load_flat(path)
+    assert meta["step"] == 7
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((2, 3))}
+    path = os.path.join(tmp_path, "c.msgpack")
+    msgpack_ckpt.save(path, tree)
+    with pytest.raises(ValueError):
+        msgpack_ckpt.restore(path, {"a": jnp.zeros((3, 2))})
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_partition_invariants(seed):
+    spec = partition.PartitionSpec(num_devices=10, num_shards=60,
+                                   shard_size=20)
+    imgs, labs = synthetic.generate(seed % 100, samples_per_class=120)
+    data = partition.partition(imgs, labs, seed=seed, spec=spec)
+    sizes = np.asarray(data.sizes)
+    # every device holds at least one shard, in whole-shard multiples
+    assert np.all(sizes >= spec.shard_size)
+    assert np.all(sizes % spec.shard_size == 0)
+    # masks consistent
+    assert np.all(np.asarray(data.mask).sum(axis=1) == sizes)
+    # shards are single-class: count label transitions within shards
+    labels = np.asarray(data.labels)
+    mask = np.asarray(data.mask)
+    for k in range(spec.num_devices):
+        valid = labels[k][mask[k] > 0]
+        for s in range(len(valid) // spec.shard_size):
+            shard = valid[s * spec.shard_size:(s + 1) * spec.shard_size]
+            assert len(np.unique(shard)) == 1, "shard mixes classes"
+
+
+def test_synthetic_learnable_and_class_distinct():
+    imgs, labs = synthetic.generate(0, samples_per_class=200)
+    x = imgs.astype(np.float32) / 255.0
+    # class-mean prototypes are mutually distinguishable
+    means = np.stack([x[labs == c].mean(0) for c in range(10)])
+    d = np.linalg.norm(means[:, None] - means[None], axis=(-1, -2))
+    off_diag = d[~np.eye(10, dtype=bool)]
+    assert off_diag.min() > 1.0, "classes not separable"
