@@ -1,9 +1,16 @@
 """Shared FEEL experiment harness for the paper-figure benchmarks.
 
-One entry point: :func:`run_fl` — builds the synthetic shard-partitioned
-dataset (paper §VI-A protocol), the wireless network, and runs
-``num_rounds`` of Algorithm 1 under a given scheduling method, returning
-the per-round history (accuracy / energy / time / #selected).
+Two entry points:
+
+* :func:`run_fl` — builds the synthetic shard-partitioned dataset (paper
+  §VI-A protocol), the wireless network, and runs ``num_rounds`` of
+  Algorithm 1 under a given scheduling method via the scan-over-rounds
+  driver, returning the per-round history (accuracy / energy / time /
+  #selected).
+* :func:`run_fl_batch` — the Monte-Carlo version: S network/PRNG
+  scenarios through ``federated.run_federated_batch`` as ONE compiled
+  program, returning per-scenario histories.  This is how the paper's
+  Fig. 2-6 averaging should be produced.
 
 ``quick=True`` shrinks the scale (K=40 devices, 300-shard pool, 8 rounds)
 so the whole benchmark suite completes on the CPU container; ``--full``
@@ -17,9 +24,8 @@ import functools
 from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import diversity, federated, scheduler, wireless
+from repro.core import federated, scheduler, wireless
 from repro.data import partition, synthetic
 from repro.models import paper_nets
 
@@ -62,11 +68,9 @@ def _dataset(quick: bool, seed: int):
     return partition.partition(imgs, labs, seed=seed + 1, spec=cfg.pspec)
 
 
-def run_fl(cfg: FLBenchConfig) -> List[federated.RoundRecord]:
+def _experiment(cfg: FLBenchConfig):
     data = _dataset(cfg.quick, cfg.seed)
     wcfg = wireless.WirelessConfig(model_bits=cfg.model_bits)
-    net = wireless.sample_network(jax.random.key(cfg.seed + 7),
-                                  data.num_devices, wcfg)
     mspec = paper_nets.PaperNetSpec(kind=cfg.model)
     params = paper_nets.init(jax.random.key(cfg.seed + 11), mspec)
     scfg = scheduler.SchedulerConfig(
@@ -75,13 +79,34 @@ def run_fl(cfg: FLBenchConfig) -> List[federated.RoundRecord]:
     fcfg = federated.FLConfig(
         num_rounds=cfg.rounds, local_epochs=cfg.local_epochs,
         batch_size=50, learning_rate=0.1 if cfg.model == "mlp" else 0.05)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    return data, wcfg, params, scfg, fcfg, loss, ev
+
+
+def run_fl(cfg: FLBenchConfig) -> List[federated.RoundRecord]:
+    data, wcfg, params, scfg, fcfg, loss, ev = _experiment(cfg)
+    net = wireless.sample_network(jax.random.key(cfg.seed + 7),
+                                  data.num_devices, wcfg)
     _, hist = federated.run_federated(
-        init_params=params,
-        loss_fn=functools.partial(paper_nets.loss_fn, spec=mspec),
-        eval_fn=functools.partial(paper_nets.accuracy, spec=mspec),
+        init_params=params, loss_fn=loss, eval_fn=ev,
         data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
         key=jax.random.key(cfg.seed + 13))
     return hist
+
+
+def run_fl_batch(cfg: FLBenchConfig, num_scenarios: int
+                 ) -> List[List[federated.RoundRecord]]:
+    """S Monte-Carlo scenarios (network realization x PRNG stream) as one
+    vmapped scan; returns per-scenario histories."""
+    data, wcfg, params, scfg, fcfg, loss, ev = _experiment(cfg)
+    nets = wireless.sample_networks(jax.random.key(cfg.seed + 7),
+                                    num_scenarios, data.num_devices, wcfg)
+    keys = jax.random.split(jax.random.key(cfg.seed + 13), num_scenarios)
+    _, metrics = federated.run_federated_batch(
+        init_params=params, loss_fn=loss, eval_fn=ev,
+        data=data, nets=nets, wcfg=wcfg, scfg=scfg, fcfg=fcfg, keys=keys)
+    return federated.batch_metrics_to_records(metrics)
 
 
 def rounds_to_accuracy(hist, target: float) -> int:

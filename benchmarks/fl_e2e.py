@@ -1,0 +1,240 @@
+"""End-to-end FEEL simulation throughput: legacy loop vs scan vs batch.
+
+Measures, per device count K:
+
+* ``legacy/invocation`` — one :func:`federated.run_federated_loop` call
+  exactly as the repo's sweep harness uses it: every invocation rebuilds
+  (and therefore recompiles) the round jit, then dispatches 2 jits and
+  >=5 host syncs per round.  This is what a Monte-Carlo sweep actually
+  pays per scenario with the legacy driver.
+* ``legacy/steady`` — the legacy loop's per-round cost with all jits
+  prebuilt and warm (its floor: per-round dispatch + compute).
+* ``scan/*`` — the device-resident scan driver: one compile, then whole
+  simulations as single dispatches; invocations reuse the compiled sim
+  (net/key are traced arguments, so a sweep compiles once).
+* ``batch/*`` (at ``batch_devices``) — ``run_federated_batch``: S
+  scenarios as one vmapped scan; one compile, one dispatch for the whole
+  Monte-Carlo average.
+
+The legacy driver is measured with the reference Sub2 allocator preset
+it shipped with; the scan/batch drivers use ``Sub2Params.fast()`` — the
+throughput preset this refactor introduces for simulation sweeps
+(allocation within ~1% of the reference objective; see
+``core/bandwidth.py``).  A same-preset legacy row (``legacy_fast``) is
+reported so the protocol is transparent about how much comes from the
+driver vs the preset.
+
+Results go to stdout as CSV rows and to ``BENCH_fl_e2e.json``.  Targets
+(ISSUE 1): >=5x per-scenario vs legacy invocations at K=100, >=20x
+aggregate at S=16.  Measured numbers on the 2-core CPU container are
+recorded as-is — see EXPERIMENTS.md §Perf for the analysis of where the
+container falls short of the many-core targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bandwidth as bw
+from repro.core import diversity, federated, scheduler, wireless
+from repro.data import partition, synthetic
+from repro.models import paper_nets
+
+Row = Tuple[str, float, str]
+
+BENCH_JSON = "BENCH_fl_e2e.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class E2EConfig:
+    device_counts: Tuple[int, ...] = (50, 100, 200)
+    rounds: int = 8
+    batch_scenarios: int = 16
+    batch_devices: int = 100
+    batch_size: int = 5           # small local batches: simulation regime
+    max_shards: int = 1           # one shard per device -> 1 step/round
+    mlp_hidden: int = 16
+    method: str = "das"
+    iterations_max: int = 4
+    repeats: int = 3
+
+
+def _world(k: int, cfg: E2EConfig):
+    spc = max(120, (2 * k * 50) // 10 + 50)
+    imgs, labs = synthetic.generate(0, samples_per_class=spc)
+    pspec = partition.PartitionSpec(num_devices=k, num_shards=2 * k,
+                                    shard_size=50, min_shards=1,
+                                    max_shards=cfg.max_shards)
+    data = partition.partition(imgs, labs, seed=1, spec=pspec)
+    wcfg = wireless.WirelessConfig()
+    net = wireless.sample_network(jax.random.key(0), k, wcfg)
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=cfg.mlp_hidden)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    fcfg = federated.FLConfig(num_rounds=cfg.rounds,
+                              batch_size=cfg.batch_size,
+                              learning_rate=0.1)
+    return data, net, wcfg, params, loss, ev, fcfg
+
+
+def _scfg(cfg: E2EConfig, fast: bool) -> scheduler.SchedulerConfig:
+    sub2 = bw.Sub2Params.fast() if fast else bw.Sub2Params.reference()
+    return scheduler.SchedulerConfig(method=cfg.method, n_min=1,
+                                     iterations_max=cfg.iterations_max,
+                                     sub2=sub2)
+
+
+def _median(fn: Callable[[], None], repeats: int) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def _bench_single(k: int, cfg: E2EConfig) -> Dict[str, float]:
+    data, net, wcfg, params, loss, ev, fcfg = _world(k, cfg)
+    rounds = fcfg.num_rounds
+    out: Dict[str, float] = {"devices": k, "rounds": rounds}
+
+    # Legacy driver, as shipped (reference allocator, recompiles the
+    # round jit inside every invocation).
+    for label, fast in (("legacy", False), ("legacy_fast", True)):
+        kw = dict(init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+                  net=net, wcfg=wcfg, scfg=_scfg(cfg, fast), fcfg=fcfg,
+                  key=jax.random.key(4), eval_every=rounds)
+        federated.run_federated_loop(**kw)   # warm the global schedule jit
+        out[f"{label}_invocation_s"] = _median(
+            lambda: federated.run_federated_loop(**kw), cfg.repeats)
+
+    # Legacy steady state: prebuilt jits, per-round dispatch only.
+    scfg_ref = _scfg(cfg, False)
+    round_fn = federated.make_round_fn(loss, fcfg, data.capacity)
+    hists = federated._client_histograms(data, fcfg.num_classes)
+    sch = dataclasses.replace(scfg_ref, local_epochs=fcfg.local_epochs)
+
+    def legacy_steady():
+        ages = jnp.zeros((k,), jnp.int32)
+        p = params
+        key = jax.random.key(4)
+        for _ in range(rounds):
+            key, k_fade, k_sched, k_train = jax.random.split(key, 4)
+            index = diversity.diversity_index(
+                label_hists=hists, data_sizes=data.sizes, ages=ages,
+                weights=fcfg.index_weights, measure=fcfg.measure)
+            gains = wireless.sample_fading(k_fade, net)
+            res = scheduler.schedule(k_sched, index, ages, data.sizes,
+                                     gains, net, wcfg, sch)
+            p = round_fn(p, data.images, data.labels, data.mask,
+                         data.sizes, res.selected, k_train)
+            ages = jnp.where(res.selected > 0.0, 0, ages + 1)
+            _ = float(res.round_time), int(jnp.sum(res.selected))
+        jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+
+    legacy_steady()
+    out["legacy_steady_s"] = _median(legacy_steady, cfg.repeats)
+
+    # Scan driver: compile once, reuse across invocations (net and key
+    # are traced arguments — a sweep pays one compile).
+    sim = federated.make_feel_sim(
+        loss_fn=loss, eval_fn=ev, wcfg=wcfg, scfg=_scfg(cfg, True),
+        fcfg=fcfg, capacity=data.capacity, eval_every=rounds)
+    test_x = synthetic.to_float(data.test_images)
+    args = (params, data.images, data.labels, data.mask, data.sizes,
+            hists, test_x, data.test_labels, net, jax.random.key(4))
+    t0 = time.perf_counter()
+    jax.block_until_ready(sim(*args))
+    out["scan_first_call_s"] = time.perf_counter() - t0
+    out["scan_invocation_s"] = _median(
+        lambda: jax.block_until_ready(sim(*args)), cfg.repeats)
+
+    out["legacy_rounds_per_s"] = rounds / out["legacy_invocation_s"]
+    out["scan_rounds_per_s"] = rounds / out["scan_invocation_s"]
+    out["speedup_vs_legacy_invocation"] = (
+        out["legacy_invocation_s"] / out["scan_invocation_s"])
+    out["speedup_vs_legacy_steady"] = (
+        out["legacy_steady_s"] / out["scan_invocation_s"])
+    return out
+
+
+def _bench_batch(cfg: E2EConfig,
+                 single: Dict[str, float]) -> Dict[str, float]:
+    k, s = cfg.batch_devices, cfg.batch_scenarios
+    data, _, wcfg, params, loss, ev, fcfg = _world(k, cfg)
+    rounds = fcfg.num_rounds
+    nets = wireless.sample_networks(jax.random.key(7), s, k, wcfg)
+    keys = jax.random.split(jax.random.key(4), s)
+    simb = federated.make_feel_sim_batch(
+        loss_fn=loss, eval_fn=ev, wcfg=wcfg, scfg=_scfg(cfg, True),
+        fcfg=fcfg, capacity=data.capacity, eval_every=rounds)
+    hists = federated._client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    args = (params, data.images, data.labels, data.mask, data.sizes,
+            hists, test_x, data.test_labels, nets, keys)
+    t0 = time.perf_counter()
+    jax.block_until_ready(simb(*args))
+    first = time.perf_counter() - t0
+    exec_s = _median(lambda: jax.block_until_ready(simb(*args)),
+                     cfg.repeats)
+    legacy_seq = s * single["legacy_invocation_s"]
+    return {
+        "devices": k, "rounds": rounds, "scenarios": s,
+        "batch_first_call_s": first,
+        "batch_exec_s": exec_s,
+        "scenarios_per_s": s / exec_s,
+        "scenario_rounds_per_s": s * rounds / exec_s,
+        "legacy_sequential_s": legacy_seq,
+        "aggregate_speedup_vs_legacy": legacy_seq / exec_s,
+        "aggregate_speedup_vs_legacy_steady":
+            s * single["legacy_steady_s"] / exec_s,
+    }
+
+
+def run(quick: bool = True) -> List[Row]:
+    cfg = E2EConfig(rounds=5 if quick else 15, repeats=5)
+    results: Dict[str, object] = {"quick": quick,
+                                  "config": dataclasses.asdict(cfg)}
+    rows: List[Row] = []
+    singles: Dict[int, Dict[str, float]] = {}
+    for k in cfg.device_counts:
+        r = _bench_single(k, cfg)
+        singles[k] = r
+        results[f"single_K{k}"] = r
+        rows.append((f"fl_e2e/K{k}/legacy_rounds_per_s",
+                     round(r["legacy_rounds_per_s"], 2),
+                     f"invocation={r['legacy_invocation_s']:.3f}s"))
+        rows.append((f"fl_e2e/K{k}/scan_rounds_per_s",
+                     round(r["scan_rounds_per_s"], 2),
+                     f"compile={r['scan_first_call_s']:.1f}s"))
+        rows.append((f"fl_e2e/K{k}/speedup_vs_legacy_invocation",
+                     round(r["speedup_vs_legacy_invocation"], 2),
+                     "target >=5 at K=100"))
+        rows.append((f"fl_e2e/K{k}/speedup_vs_legacy_steady",
+                     round(r["speedup_vs_legacy_steady"], 2),
+                     "prebuilt-jit legacy floor"))
+    b = _bench_batch(cfg, singles[cfg.batch_devices])
+    results["batch"] = b
+    rows.append((f"fl_e2e/batch_S{cfg.batch_scenarios}/scenarios_per_s",
+                 round(b["scenarios_per_s"], 3),
+                 f"K={cfg.batch_devices}"))
+    rows.append((f"fl_e2e/batch_S{cfg.batch_scenarios}/aggregate_speedup",
+                 round(b["aggregate_speedup_vs_legacy"], 2),
+                 "vs sequential legacy invocations; target >=20"))
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    rows.append(("fl_e2e/json_written", 1.0, BENCH_JSON))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row[0]},{row[1]},{row[2]}")

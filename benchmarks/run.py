@@ -6,10 +6,12 @@ Prints ``name,value,derived`` CSV rows.  Default (quick) mode shrinks the
 FL scale so the whole suite runs on the CPU container; ``--full`` is the
 paper's K=100 / 1200x50-shard / 15-round configuration.
 
-Suites: fig2 (limited devices), fig3 (local epochs), fig45 (model size),
-fig67 (energy/time vs baseline+ABS), divergence (selected-fraction
-probe), sched (scheduler latency), kernels (Pallas micro), roofline
-(requires dryrun_results.json from repro.launch.dryrun).
+Suites: fig2 (limited devices, scenario-averaged via the vmapped batch
+driver), fig3 (local epochs), fig45 (model size), fig67 (energy/time vs
+baseline+ABS), divergence (selected-fraction probe), fl_e2e (legacy loop
+vs scan vs batch simulation throughput; writes BENCH_fl_e2e.json), sched
+(scheduler latency), kernels (Pallas micro), roofline (requires
+dryrun_results.json from repro.launch.dryrun).
 """
 
 from __future__ import annotations
@@ -53,6 +55,11 @@ def main() -> None:
         if want("divergence"):
             for r in paper_figs.selection_fraction_sweep(quick):
                 _emit(r)
+
+    if want("fl_e2e"):
+        from benchmarks import fl_e2e
+        for r in fl_e2e.run(quick):
+            _emit(r)
 
     if want("sched"):
         from benchmarks import sched_micro

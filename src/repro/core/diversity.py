@@ -132,8 +132,13 @@ class IndexWeights:
 
 
 def normalize_metric(values: Array) -> Array:
-    """v_i = value / max_k value (Eq. just above Eq. 4); 0 if all zero."""
-    m = jnp.max(values)
+    """v_i = value / max_k value (Eq. just above Eq. 4); 0 if all zero.
+
+    The max runs over the trailing (device) axis only, so explicitly
+    batched ``(S, K)`` inputs normalize per scenario — matching what a
+    ``vmap`` over the scenario axis produces lane-by-lane.
+    """
+    m = jnp.max(values, axis=-1, keepdims=True)
     return jnp.where(m > 0.0, values / jnp.maximum(m, 1e-12), 0.0)
 
 
@@ -160,6 +165,10 @@ def diversity_index(
       measure:     'gini_simpson' | 'shannon'.
 
     Returns: (K,) index values in [0, sum_i gamma_i].
+
+    Batched path: every op reduces over trailing axes only, so stacking a
+    scenario axis in front of each argument — ``(S, K, C)`` / ``(S, K)``
+    — yields per-scenario indices ``(S, K)`` without a vmap.
     """
     probs = class_probs(label_hists)
     if measure == "gini_simpson":

@@ -14,6 +14,27 @@ Each round:
    line 12) — optionally through the ``fedavg_agg`` Pallas kernel path.
 5. Ages update (selected -> 0, others += 1); energy/time accumulate.
 
+Drivers (DESIGN.md §3):
+
+* :func:`run_federated` — the device-resident driver: the entire
+  ``num_rounds`` simulation (diversity index, fading draw, scheduling,
+  masked local training, FedAvg, age update, folded evaluation, metric
+  accumulation) is ONE ``jax.lax.scan`` over rounds inside one jit.
+  Per-round metrics come back as stacked arrays (:class:`RoundMetrics`)
+  and a thin host adapter converts them to the historical
+  :class:`RoundRecord` list, so callers of the old per-round loop keep
+  working unchanged.
+* :func:`run_federated_batch` — ``vmap`` of the scanned simulation over
+  a leading scenario axis (PRNG key x :class:`wireless.NetworkState`
+  realization): S independent FEEL runs execute as one SPMD program.
+  Every scheduling policy is vmap-deterministic (``core.scheduler``),
+  so scenario ``i`` of a batch is bit-for-bit the single run with
+  ``nets[i]``/``keys[i]``.
+* :func:`run_federated_loop` — the legacy host-side Python loop (two
+  jit dispatches + >=5 host syncs per round), kept as the reference
+  implementation for the parity tests and the ``fl_e2e`` old-vs-new
+  benchmark.
+
 The client axis is shardable: on a pod, ``client_batch_spec`` places
 clients over the ``data`` mesh axis so K local trainings run as one SPMD
 program — the cross-silo mapping described in DESIGN.md §3.
@@ -23,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +82,36 @@ class RoundRecord:
     selected: np.ndarray
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RoundMetrics:
+    """Per-round simulation outputs as stacked device arrays.
+
+    Leaves carry a leading ``(num_rounds,)`` axis — and an additional
+    leading scenario axis when produced by :func:`run_federated_batch`.
+    ``accuracy`` is NaN on rounds where evaluation was skipped
+    (``eval_every`` stride), matching the legacy record semantics.
+    """
+
+    accuracy: Array      # (R,)
+    n_selected: Array    # (R,) int32
+    round_time: Array    # (R,)
+    energy: Array        # (R, K) per-device joules (0 if unselected)
+    energy_total: Array  # (R,)
+    selected: Array      # (R, K) {0,1}
+    iterations: Array    # (R,) int32 DAS outer iterations
+
+    def tree_flatten(self):
+        return ((self.accuracy, self.n_selected, self.round_time,
+                 self.energy, self.energy_total, self.selected,
+                 self.iterations), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
 # ---------------------------------------------------------------------------
 # Local training (vmapped over clients)
 # ---------------------------------------------------------------------------
@@ -79,8 +130,6 @@ def make_local_trainer(loss_fn: Callable[[Params, Array, Array, Array],
     def local_sgd(params: Params, images: Array, labels: Array,
                   mask: Array, steps_active: Array, key: Array) -> Params:
         cap = images.shape[0]
-        max_steps = steps_active.shape[0]
-        del max_steps
 
         def step(carry, inp):
             p, vel = carry
@@ -114,22 +163,64 @@ def fedavg_aggregate(client_params: Params, weights: Array,
 
     ``weights`` must already be normalized over the selected set (zeros
     for unselected clients).
+
+    The kernel path flattens the whole pytree once — every leaf reshaped
+    to ``(K, -1)`` and concatenated — so the Pallas ``fedavg_agg`` kernel
+    launches once per round instead of once per parameter leaf (leaves
+    must share a dtype, which stacked model params do).
     """
     if use_kernel:
         from repro.kernels import ops as kernel_ops
-        return jax.tree_util.tree_map(
-            lambda stacked: kernel_ops.fedavg_agg(
-                stacked.reshape(stacked.shape[0], -1), weights
-            ).reshape(stacked.shape[1:]),
-            client_params)
+        leaves, treedef = jax.tree_util.tree_flatten(client_params)
+        dtypes = {leaf.dtype for leaf in leaves}
+        if len(dtypes) != 1:
+            # concatenate would silently promote mixed-dtype leaves,
+            # diverging from the dtype-preserving tensordot path.
+            raise TypeError(
+                f"kernel FedAvg path needs uniform leaf dtype, got "
+                f"{sorted(map(str, dtypes))}")
+        k = leaves[0].shape[0]
+        sizes = [int(np.prod(leaf.shape[1:])) for leaf in leaves]
+        flat = jnp.concatenate(
+            [leaf.reshape(k, -1) for leaf in leaves], axis=1)
+        agg = kernel_ops.fedavg_agg(flat, weights)
+        outs, offset = [], 0
+        for leaf, size in zip(leaves, sizes):
+            outs.append(agg[offset:offset + size].reshape(leaf.shape[1:]))
+            offset += size
+        return jax.tree_util.tree_unflatten(treedef, outs)
     return jax.tree_util.tree_map(
         lambda stacked: jnp.tensordot(weights, stacked, axes=1),
         client_params)
 
 
 # ---------------------------------------------------------------------------
-# One federated round (jit)
+# One federated round (shared by the scan driver and the legacy loop)
 # ---------------------------------------------------------------------------
+
+def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
+                 params: Params, images: Array, labels: Array, mask: Array,
+                 sizes: Array, selected: Array, key: Array) -> Params:
+    """Masked local training for all K clients + FedAvg. Pure, traceable."""
+    k = images.shape[0]
+    # Per-client active step schedule: E * ceil(size_k / B) steps.
+    steps_k = cfg.local_epochs * jnp.ceil(
+        sizes.astype(jnp.float32) / cfg.batch_size)
+    step_idx = jnp.arange(max_steps, dtype=jnp.float32)[None, :]
+    active = (step_idx < steps_k[:, None]).astype(jnp.float32)
+    active = active * selected[:, None]             # frozen if unselected
+    keys = jax.random.split(key, k)
+    client_params = trainer(params, images, labels, mask, active, keys)
+    # FedAvg weights D_k / D_r over the selected set.
+    w = sizes.astype(jnp.float32) * selected
+    w = w / jnp.maximum(jnp.sum(w), 1.0)
+    return fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
+
+
+def _max_local_steps(cfg: FLConfig, capacity: int) -> int:
+    steps_per_epoch = max(1, -(-capacity // cfg.batch_size))
+    return cfg.local_epochs * steps_per_epoch
+
 
 def make_round_fn(loss_fn: Callable, cfg: FLConfig,
                   capacity: int) -> Callable:
@@ -137,34 +228,154 @@ def make_round_fn(loss_fn: Callable, cfg: FLConfig,
 
     ``selected``/``weights`` come from the scheduler (host side); the round
     body — local training for all K clients, masked FedAvg — is one SPMD
-    program.
+    program.  Used by the legacy per-round loop; the scan driver inlines
+    the same :func:`_train_round` body.
     """
     trainer = make_local_trainer(loss_fn, cfg)
-    steps_per_epoch = max(1, -(-capacity // cfg.batch_size))
-    max_steps = cfg.local_epochs * steps_per_epoch
-
-    @jax.jit
-    def round_fn(params: Params, images: Array, labels: Array, mask: Array,
-                 sizes: Array, selected: Array, key: Array) -> Params:
-        k = images.shape[0]
-        # Per-client active step schedule: E * ceil(size_k / B) steps.
-        steps_k = cfg.local_epochs * jnp.ceil(
-            sizes.astype(jnp.float32) / cfg.batch_size)
-        step_idx = jnp.arange(max_steps, dtype=jnp.float32)[None, :]
-        active = (step_idx < steps_k[:, None]).astype(jnp.float32)
-        active = active * selected[:, None]             # frozen if unselected
-        keys = jax.random.split(key, k)
-        client_params = trainer(params, images, labels, mask, active, keys)
-        # FedAvg weights D_k / D_r over the selected set.
-        w = sizes.astype(jnp.float32) * selected
-        w = w / jnp.maximum(jnp.sum(w), 1.0)
-        return fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
-
-    return round_fn
+    max_steps = _max_local_steps(cfg, capacity)
+    return jax.jit(functools.partial(_train_round, trainer, max_steps, cfg))
 
 
 # ---------------------------------------------------------------------------
-# Full training driver (Alg. 1)
+# Device-resident simulation: scan over rounds, one jit
+# ---------------------------------------------------------------------------
+
+def _eval_mask(num_rounds: int, eval_every: int) -> np.ndarray:
+    """Static per-round evaluate-or-skip schedule (legacy semantics)."""
+    mask = np.zeros((num_rounds,), np.bool_)
+    mask[::max(eval_every, 1)] = True
+    mask[-1] = True
+    return mask
+
+
+def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
+              capacity: int, eval_every: int) -> Callable:
+    """Build the traceable whole-simulation function (no jit applied).
+
+    The returned ``sim(params, images, labels, mask, sizes, hists,
+    test_x, test_labels, net, key)`` runs all ``fcfg.num_rounds`` rounds
+    as a single ``lax.scan`` and returns ``(final_params, RoundMetrics)``.
+    Evaluation is folded into the scan at the static ``eval_every``
+    stride via ``lax.cond`` on a per-round flag carried as scan inputs —
+    the flag is un-batched under the scenario vmap, so skipped rounds
+    skip the eval computation in the batched program too.
+    """
+    trainer = make_local_trainer(loss_fn, fcfg)
+    max_steps = _max_local_steps(fcfg, capacity)
+    sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
+    do_eval = jnp.asarray(_eval_mask(fcfg.num_rounds, eval_every))
+
+    def sim(params: Params, images: Array, labels: Array, mask: Array,
+            sizes: Array, hists: Array, test_x: Array, test_labels: Array,
+            net: wireless.NetworkState, key: Array
+            ) -> Tuple[Params, RoundMetrics]:
+        k_dev = sizes.shape[0]
+
+        def body(carry, do_ev):
+            params, ages, key = carry
+            key, k_fade, k_sched, k_train = jax.random.split(key, 4)
+            index = diversity.diversity_index(
+                label_hists=hists, data_sizes=sizes, ages=ages,
+                weights=fcfg.index_weights, measure=fcfg.measure)
+            gains = wireless.sample_fading(k_fade, net)
+            result = scheduler.schedule_impl(k_sched, index, ages, sizes,
+                                             gains, net, wcfg, sch)
+            selected = result.selected
+            params = _train_round(trainer, max_steps, fcfg, params, images,
+                                  labels, mask, sizes, selected, k_train)
+            ages = jnp.where(selected > 0.0, 0, ages + 1)
+            acc = jax.lax.cond(
+                do_ev,
+                lambda p: jnp.asarray(eval_fn(p, test_x, test_labels),
+                                      jnp.float32),
+                lambda p: jnp.full((), jnp.nan, jnp.float32),
+                params)
+            met = RoundMetrics(
+                accuracy=acc,
+                n_selected=jnp.sum(selected).astype(jnp.int32),
+                round_time=result.round_time,
+                energy=result.energy,
+                energy_total=jnp.sum(result.energy),
+                selected=selected,
+                iterations=result.iterations,
+            )
+            return (params, ages, key), met
+
+        ages0 = jnp.zeros((k_dev,), jnp.int32)
+        (params, _, _), metrics = jax.lax.scan(
+            body, (params, ages0, key), do_eval)
+        return params, metrics
+
+    return sim
+
+
+def make_feel_sim(*, loss_fn: Callable, eval_fn: Callable,
+                  wcfg: wireless.WirelessConfig,
+                  scfg: scheduler.SchedulerConfig, fcfg: FLConfig,
+                  capacity: int, eval_every: int = 1) -> Callable:
+    """Jitted single-scenario simulation (see :func:`_make_sim`)."""
+    return jax.jit(_make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg,
+                             capacity, eval_every))
+
+
+def make_feel_sim_batch(*, loss_fn: Callable, eval_fn: Callable,
+                        wcfg: wireless.WirelessConfig,
+                        scfg: scheduler.SchedulerConfig, fcfg: FLConfig,
+                        capacity: int, eval_every: int = 1) -> Callable:
+    """Jitted S-scenario simulation: vmap over (net, key) only.
+
+    Dataset and initial params broadcast; each scenario sees its own
+    network realization and PRNG stream — the paper's Monte-Carlo
+    averaging (Figs. 2-6) as one SPMD program.
+    """
+    sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
+                    eval_every)
+    return jax.jit(jax.vmap(sim, in_axes=(None, None, None, None, None,
+                                          None, None, None, 0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Host-side adapters: stacked metrics -> RoundRecord list
+# ---------------------------------------------------------------------------
+
+def metrics_to_records(metrics: RoundMetrics) -> List[RoundRecord]:
+    """One device->host transfer for the whole run's records."""
+    m = jax.device_get(metrics)
+    history: List[RoundRecord] = []
+    for r in range(m.selected.shape[0]):
+        n_sel = int(m.n_selected[r])
+        e_total = float(m.energy_total[r])
+        history.append(RoundRecord(
+            round=r, accuracy=float(m.accuracy[r]), n_selected=n_sel,
+            round_time=float(m.round_time[r]),
+            energy_total=e_total,
+            energy_per_device=e_total / max(n_sel, 1),
+            selected=np.asarray(m.selected[r]),
+        ))
+    return history
+
+
+def batch_metrics_to_records(metrics: RoundMetrics
+                             ) -> List[List[RoundRecord]]:
+    """Per-scenario record lists from (S, R, ...) stacked metrics."""
+    num_scenarios = metrics.selected.shape[0]
+    return [
+        metrics_to_records(jax.tree_util.tree_map(lambda a, s=s: a[s],
+                                                  metrics))
+        for s in range(num_scenarios)
+    ]
+
+
+def _client_histograms(data: partition_lib.ClientDataset,
+                       num_classes: int) -> Array:
+    """On-device statistics reported to the server (Alg. 1 line 5)."""
+    return jax.vmap(
+        lambda lab, m: diversity.label_histogram(lab, m, num_classes)
+    )(data.labels, data.mask)
+
+
+# ---------------------------------------------------------------------------
+# Full training drivers (Alg. 1)
 # ---------------------------------------------------------------------------
 
 def run_federated(
@@ -180,14 +391,78 @@ def run_federated(
     key: Array,
     eval_every: int = 1,
 ) -> tuple[Params, List[RoundRecord]]:
-    """Run ``num_rounds`` of FEEL; returns final params + per-round records."""
+    """Run ``num_rounds`` of FEEL; returns final params + per-round records.
+
+    Scan-over-rounds driver: the whole simulation compiles to one XLA
+    program (no per-round dispatch or host syncs).  Bit-for-bit
+    consistent with :func:`run_federated_loop` for the same key.
+    """
+    sim = make_feel_sim(loss_fn=loss_fn, eval_fn=eval_fn, wcfg=wcfg,
+                        scfg=scfg, fcfg=fcfg, capacity=data.capacity,
+                        eval_every=eval_every)
+    hists = _client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    params, metrics = sim(init_params, data.images, data.labels, data.mask,
+                          data.sizes, hists, test_x, data.test_labels,
+                          net, key)
+    return params, metrics_to_records(metrics)
+
+
+def run_federated_batch(
+    *,
+    init_params: Params,
+    loss_fn: Callable,
+    eval_fn: Callable[[Params, Array, Array], Array],
+    data: partition_lib.ClientDataset,
+    nets: wireless.NetworkState,
+    wcfg: wireless.WirelessConfig,
+    scfg: scheduler.SchedulerConfig,
+    fcfg: FLConfig,
+    keys: Array,
+    eval_every: int = 1,
+) -> tuple[Params, RoundMetrics]:
+    """Run S independent FEEL scenarios as one vmapped scan.
+
+    Args:
+      nets: stacked :class:`wireless.NetworkState` with leading ``(S,)``
+        leaf axis (see :func:`wireless.sample_networks`).
+      keys: ``(S,)`` PRNG keys, one stream per scenario.
+
+    Returns:
+      (params, metrics): final params stacked ``(S, ...)`` per leaf and
+      :class:`RoundMetrics` with leading ``(S, R, ...)`` axes.  Use
+      :func:`batch_metrics_to_records` for per-scenario record lists.
+    """
+    sim = make_feel_sim_batch(loss_fn=loss_fn, eval_fn=eval_fn, wcfg=wcfg,
+                              scfg=scfg, fcfg=fcfg, capacity=data.capacity,
+                              eval_every=eval_every)
+    hists = _client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    return sim(init_params, data.images, data.labels, data.mask,
+               data.sizes, hists, test_x, data.test_labels, nets, keys)
+
+
+def run_federated_loop(
+    *,
+    init_params: Params,
+    loss_fn: Callable,
+    eval_fn: Callable[[Params, Array, Array], Array],
+    data: partition_lib.ClientDataset,
+    net: wireless.NetworkState,
+    wcfg: wireless.WirelessConfig,
+    scfg: scheduler.SchedulerConfig,
+    fcfg: FLConfig,
+    key: Array,
+    eval_every: int = 1,
+) -> tuple[Params, List[RoundRecord]]:
+    """Legacy host-side per-round loop (reference implementation).
+
+    Dispatches two jits and forces several host syncs per round; kept for
+    the scan-parity tests and the ``fl_e2e`` old-vs-new benchmark.
+    """
     k_dev = data.num_devices
     round_fn = make_round_fn(loss_fn, fcfg, data.capacity)
-
-    # On-device statistics reported to the server (Alg. 1 line 5).
-    hists = jax.vmap(
-        lambda lab, m: diversity.label_histogram(lab, m, fcfg.num_classes)
-    )(data.labels, data.mask)
+    hists = _client_histograms(data, fcfg.num_classes)
 
     ages = jnp.zeros((k_dev,), jnp.int32)
     params = init_params

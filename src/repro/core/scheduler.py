@@ -17,6 +17,14 @@ Implements:
 All policies share one jit-able entry point, :func:`schedule`, returning a
 :class:`ScheduleResult` with the realized per-round time/energy so the FL
 driver (``core.federated``) can account costs identically across policies.
+:func:`schedule_impl` is the un-jitted body for callers that already trace
+(the scan-over-rounds driver, vmapped scenario batches).
+
+Every policy is scan/vmap-safe: no data-dependent Python control flow,
+and the DAS outer loop freezes its carry on convergence, so batch lanes
+that converge early stop updating even while vmap keeps the loop alive
+for their peers — ``vmap(das) == stack(das)`` bit-for-bit, and single
+runs still exit early.
 """
 
 from __future__ import annotations
@@ -111,13 +119,13 @@ def das_schedule(index: Array, data_sizes: Array, gains: Array,
     x0 = jnp.ones((k,), jnp.float32)                 # Alg. 2 line 1
     alpha0 = jnp.full((k,), 1.0 / k, jnp.float32)    # line 2: uniform
 
-    def cond(carry):
+    def active(carry):
         x, alpha, x_prev, alpha_prev, it = carry
         changed = (jnp.sum(jnp.abs(x - x_prev)) >= sch.x_tol) | \
                   (jnp.max(jnp.abs(alpha - alpha_prev)) >= sch.alpha_tol)
-        return (it < sch.iterations_max) & ((it == 0) | changed)
+        return (it == 0) | changed
 
-    def body(carry):
+    def alg2_iter(carry):
         x, alpha, _, _, it = carry
         if sch.reentry == "mean":
             # Hypothetical share for currently-unselected devices.
@@ -137,6 +145,20 @@ def das_schedule(index: Array, data_sizes: Array, gains: Array,
         alpha_new, _ = bw.pgd_allocation(x_new, t_train, gains,
                                          net.tx_power, cfg, sch.sub2)
         return x_new, alpha_new, x, alpha, it + 1
+
+    def cond(carry):
+        return (carry[4] < sch.iterations_max) & active(carry)
+
+    def body(carry):
+        # Freeze-on-convergence carry: a single run exits the while_loop
+        # as soon as it converges (the legacy early-exit behavior), while
+        # under vmap — where the loop continues until EVERY batch lane's
+        # cond is false — converged lanes stop moving instead of being
+        # dragged through extra iterations by unconverged peers.  Result:
+        # vmap(das) == stack(das) bit-for-bit, at early-exit cost.
+        live = active(carry)
+        nxt = alg2_iter(carry)
+        return tuple(jnp.where(live, n, c) for n, c in zip(nxt, carry))
 
     init = (x0, alpha0, jnp.zeros_like(x0), jnp.zeros_like(alpha0),
             jnp.asarray(0, jnp.int32))
@@ -233,12 +255,17 @@ def full_schedule(data_sizes: Array, gains: Array,
 # Unified entry point
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg", "sch"))
-def schedule(key: Array, index: Array, ages: Array, data_sizes: Array,
-             gains: Array, net: wireless.NetworkState,
-             cfg: wireless.WirelessConfig,
-             sch: SchedulerConfig) -> ScheduleResult:
-    """Dispatch on ``sch.method``; one jit for the whole round's decision."""
+def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
+                  gains: Array, net: wireless.NetworkState,
+                  cfg: wireless.WirelessConfig,
+                  sch: SchedulerConfig) -> ScheduleResult:
+    """Un-jitted :func:`schedule` body.
+
+    Call this from code that is already inside a trace — the
+    scan-over-rounds FEEL driver and its vmapped scenario batch
+    (``core.federated``) — so the decision inlines into the surrounding
+    program instead of nesting a jit call.
+    """
     if sch.method == "das":
         if sch.n_fixed is not None:
             return topn_schedule(index, sch.n_fixed, data_sizes, gains, net,
@@ -251,3 +278,12 @@ def schedule(key: Array, index: Array, ages: Array, data_sizes: Array,
     if sch.method == "full":
         return full_schedule(data_sizes, gains, net, cfg, sch)
     raise ValueError(f"unknown scheduling method: {sch.method!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "sch"))
+def schedule(key: Array, index: Array, ages: Array, data_sizes: Array,
+             gains: Array, net: wireless.NetworkState,
+             cfg: wireless.WirelessConfig,
+             sch: SchedulerConfig) -> ScheduleResult:
+    """Dispatch on ``sch.method``; one jit for the whole round's decision."""
+    return schedule_impl(key, index, ages, data_sizes, gains, net, cfg, sch)

@@ -99,12 +99,27 @@ def sample_network(key: Array, num_devices: int,
     return NetworkState(dist, pathloss, tx_power, cpu_freq, cycles)
 
 
+def sample_networks(key: Array, num_scenarios: int, num_devices: int,
+                    cfg: WirelessConfig) -> NetworkState:
+    """Draw ``S`` independent network realizations as one stacked pytree.
+
+    Returns a :class:`NetworkState` whose leaves carry a leading
+    ``(num_scenarios,)`` axis — the scenario axis the batched FEEL driver
+    (``core.federated.run_federated_batch``) vmaps over.  Each scenario
+    is distributed identically to a single :func:`sample_network` draw.
+    """
+    keys = jax.random.split(key, num_scenarios)
+    return jax.vmap(lambda k: sample_network(k, num_devices, cfg))(keys)
+
+
 def sample_fading(key: Array, net: NetworkState) -> Array:
     """Per-round channel gains ``|g_k|^2 = d^-beta * |h|^2`` with Rayleigh h.
 
-    ``|h|^2`` for a unit Rayleigh variable is Exp(1)-distributed.
+    ``|h|^2`` for a unit Rayleigh variable is Exp(1)-distributed.  Shape
+    follows ``net.pathloss`` — under a scenario vmap each lane draws its
+    own independent fading from its own key.
     """
-    h2 = jax.random.exponential(key, (net.num_devices,))
+    h2 = jax.random.exponential(key, net.pathloss.shape)
     return net.pathloss * h2
 
 

@@ -144,6 +144,12 @@ class ModelConfig:
                      self.resolved_head_dim,
             num_experts=min(self.num_experts, 4),
             num_experts_per_tok=min(self.num_experts_per_tok, 2),
+            # Dropless dispatch at smoke scale: the decode-parity oracle
+            # (prefill+decode == forward) only holds exactly when no
+            # assignment is dropped, and with e<=4 experts a capacity
+            # factor of e makes even the all-tokens-on-one-expert worst
+            # case fit (cap = gs*k*e/e = gs*k).
+            moe_capacity_factor=4.0,
             encoder_layers=min(self.encoder_layers, 2),
             sliding_window=min(self.sliding_window, 128)
             if self.sliding_window else 0,

@@ -1,0 +1,67 @@
+"""Offline fallback for ``hypothesis`` (optional test dependency).
+
+The tier-1 suite must collect and run in containers without the optional
+``hypothesis`` package.  When the real library is available we re-export
+it untouched; otherwise we provide a minimal deterministic stand-in:
+
+* ``st.integers(lo, hi)`` — a strategy that draws uniform ints.
+* ``@given(*strategies)`` — replays the wrapped test ``FALLBACK_EXAMPLES``
+  times with draws from a fixed-seed ``numpy`` generator, so the property
+  still gets exercised over a spread of inputs, reproducibly.
+* ``@settings(...)`` — accepted and ignored (the fallback has no
+  shrinking, deadlines, or example databases).
+
+Only the strategy surface the suite uses (``st.integers``) is
+implemented; extend here before reaching for new strategies in tests.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    FALLBACK_EXAMPLES = 5
+
+    class _IntegerStrategy:
+        def __init__(self, min_value: int, max_value: int):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def sample(self, rng) -> int:
+            return int(rng.integers(self.min_value, self.max_value + 1))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> "_IntegerStrategy":
+            return _IntegerStrategy(min_value, max_value)
+
+    strategies = _Strategies()
+
+    def given(*strats):
+        """Replay the test over deterministic draws (positional args only,
+        matching how this suite invokes ``@given``).  The wrapper takes no
+        parameters — pytest must not mistake strategy-drawn arguments for
+        fixtures — so ``functools.wraps`` (which exposes the wrapped
+        signature via ``__wrapped__``) is deliberately not used."""
+
+        def decorate(fn):
+            def runner():
+                rng = np.random.default_rng(0)
+                for _ in range(FALLBACK_EXAMPLES):
+                    fn(*(s.sample(rng) for s in strats))
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return decorate
+
+    def settings(**_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate

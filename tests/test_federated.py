@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import diversity, federated, scheduler, wireless
+from repro.core import federated, scheduler, wireless
 from repro.data import partition, synthetic
 from repro.models import paper_nets
 
@@ -88,6 +88,156 @@ def test_fedavg_aggregate_kernel_path():
     np.testing.assert_allclose(np.asarray(krn_out["w"]),
                                np.asarray(ref_out["w"]), rtol=1e-5,
                                atol=1e-5)
+
+
+def test_fedavg_aggregate_kernel_multi_leaf_pytree():
+    """Kernel path flattens the whole pytree into ONE launch; parity with
+    the tensordot path across heterogeneous leaf shapes."""
+    key = jax.random.key(6)
+    k = 5
+    stacked = {
+        "fc1": {"w": jax.random.normal(key, (k, 7, 11)),
+                "b": jax.random.normal(jax.random.key(7), (k, 11))},
+        "fc2": {"w": jax.random.normal(jax.random.key(8), (k, 11, 3))},
+    }
+    weights = jax.nn.softmax(jax.random.normal(jax.random.key(9), (k,)))
+    ref = federated.fedavg_aggregate(stacked, weights, use_kernel=False)
+    krn = federated.fedavg_aggregate(stacked, weights, use_kernel=True)
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(krn)):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_agg_driver_parity(small_world):
+    """use_kernel_agg=True runs the whole scan driver through the Pallas
+    aggregation and must match the tensordot path."""
+    data, net, wcfg = small_world
+    mspec = paper_nets.PaperNetSpec(kind="mlp")
+    params = paper_nets.init(jax.random.key(3), mspec)
+    scfg = scheduler.SchedulerConfig(method="random", n_min=2, n_fixed=2,
+                                     iterations_max=2)
+    outs = {}
+    for use_kernel in (False, True):
+        fcfg = federated.FLConfig(num_rounds=2, batch_size=50,
+                                  learning_rate=0.1,
+                                  use_kernel_agg=use_kernel)
+        p, hist = federated.run_federated(
+            init_params=params,
+            loss_fn=functools.partial(paper_nets.loss_fn, spec=mspec),
+            eval_fn=functools.partial(paper_nets.accuracy, spec=mspec),
+            data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
+            key=jax.random.key(4))
+        outs[use_kernel] = (p, hist)
+    for a, b in zip(jax.tree_util.tree_leaves(outs[False][0]),
+                    jax.tree_util.tree_leaves(outs[True][0])):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-5, atol=1e-6)
+    assert all(np.array_equal(x.selected, y.selected)
+               for x, y in zip(outs[False][1], outs[True][1]))
+
+
+# ---------------------------------------------------------------------------
+# Scan driver vs legacy loop; vmapped scenario batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["das", "random", "full"])
+def test_scan_driver_matches_legacy_loop(small_world, method):
+    """The device-resident scan driver must be bit-for-bit consistent
+    with the legacy per-round loop: selection masks, round times,
+    per-device energies, accuracies and final params (energy *totals*
+    are compared at float tolerance — the fused in-scan reduction may
+    sum in a different order than the legacy eager ``jnp.sum``)."""
+    data, net, wcfg = small_world
+    mspec = paper_nets.PaperNetSpec(kind="mlp")
+    params = paper_nets.init(jax.random.key(3), mspec)
+    scfg = scheduler.SchedulerConfig(method=method, n_min=2,
+                                     iterations_max=4)
+    fcfg = federated.FLConfig(num_rounds=3, batch_size=50,
+                              learning_rate=0.1)
+    kw = dict(init_params=params,
+              loss_fn=functools.partial(paper_nets.loss_fn, spec=mspec),
+              eval_fn=functools.partial(paper_nets.accuracy, spec=mspec),
+              data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
+              key=jax.random.key(4))
+    p_scan, h_scan = federated.run_federated(**kw)
+    p_loop, h_loop = federated.run_federated_loop(**kw)
+    assert len(h_scan) == len(h_loop)
+    for a, b in zip(h_scan, h_loop):
+        assert np.array_equal(a.selected, b.selected)
+        assert a.n_selected == b.n_selected
+        assert a.round_time == b.round_time
+        np.testing.assert_allclose(a.energy_total, b.energy_total,
+                                   rtol=1e-6)
+        if b.accuracy == b.accuracy:        # not NaN
+            assert a.accuracy == b.accuracy
+        else:
+            assert a.accuracy != a.accuracy
+    for a, b in zip(jax.tree_util.tree_leaves(p_scan),
+                    jax.tree_util.tree_leaves(p_loop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scan_eval_stride(small_world):
+    """eval_every > 1 skips evaluation (NaN accuracy) on the same rounds
+    as the legacy loop: multiples of the stride plus the final round."""
+    data, net, wcfg = small_world
+    mspec = paper_nets.PaperNetSpec(kind="mlp")
+    params = paper_nets.init(jax.random.key(3), mspec)
+    scfg = scheduler.SchedulerConfig(method="random", n_min=2, n_fixed=2)
+    fcfg = federated.FLConfig(num_rounds=4, batch_size=50,
+                              learning_rate=0.1)
+    _, hist = federated.run_federated(
+        init_params=params,
+        loss_fn=functools.partial(paper_nets.loss_fn, spec=mspec),
+        eval_fn=functools.partial(paper_nets.accuracy, spec=mspec),
+        data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
+        key=jax.random.key(4), eval_every=3)
+    want_eval = [True, False, False, True]   # rounds 0, 3(final)
+    got_eval = [r.accuracy == r.accuracy for r in hist]
+    assert got_eval == want_eval
+
+
+def test_batch_matches_independent_runs(small_world):
+    """S=3 scenarios through run_federated_batch reproduce, scenario by
+    scenario and bit-for-bit, three independent run_federated calls with
+    the matching (net, key) pair — shape check + determinism."""
+    data, net, wcfg = small_world
+    del net
+    num_scenarios, rounds = 3, 3
+    nets = wireless.sample_networks(jax.random.key(21),
+                                    num_scenarios, data.num_devices,
+                                    wireless.WirelessConfig())
+    keys = jax.random.split(jax.random.key(22), num_scenarios)
+    mspec = paper_nets.PaperNetSpec(kind="mlp")
+    params = paper_nets.init(jax.random.key(3), mspec)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    fcfg = federated.FLConfig(num_rounds=rounds, batch_size=50,
+                              learning_rate=0.1)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    p_b, metrics = federated.run_federated_batch(
+        init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+        nets=nets, wcfg=wcfg, scfg=scfg, fcfg=fcfg, keys=keys)
+    assert metrics.selected.shape == (num_scenarios, rounds,
+                                      data.num_devices)
+    assert metrics.accuracy.shape == (num_scenarios, rounds)
+    hists_b = federated.batch_metrics_to_records(metrics)
+    for s in range(num_scenarios):
+        net_s = jax.tree_util.tree_map(lambda a, s=s: a[s], nets)
+        p_s, hist_s = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net_s, wcfg=wcfg, scfg=scfg, fcfg=fcfg, key=keys[s])
+        for a, b in zip(hists_b[s], hist_s):
+            assert np.array_equal(a.selected, b.selected)
+            assert a.round_time == b.round_time
+            if b.accuracy == b.accuracy:
+                assert a.accuracy == b.accuracy
+        for a, b in zip(jax.tree_util.tree_leaves(p_b),
+                        jax.tree_util.tree_leaves(p_s)):
+            np.testing.assert_array_equal(np.asarray(a[s]), np.asarray(b))
 
 
 def test_das_beats_random_on_noniid(small_world):

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import bandwidth as bw
 from repro.core import diversity, scheduler, selection, wireless
@@ -96,7 +96,7 @@ def test_min_time_allocation_feasible(k, seed):
 
 
 def test_pgd_matches_scipy():
-    from scipy.optimize import minimize
+    minimize = pytest.importorskip("scipy.optimize").minimize
     k = 8
     net, gains = _network(7, k)
     sizes = jnp.full((k,), 500)
