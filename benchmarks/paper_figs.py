@@ -5,6 +5,12 @@ Fig. 3/8/9 — local epochs E in {1,2,3}, DAS vs random (+ baseline)
 Fig. 4/5 — model-size sweep: rounds to goal accuracy, DAS vs ABS vs full
 Fig. 6/7/10/11 — energy/device + completion time at goal accuracy
 
+Every figure family is scenario-averaged through the vmapped batch
+driver (``federated.run_federated_batch``) — the paper averages over
+channel realizations, and the batch driver runs the S Monte-Carlo
+scenarios as one compiled program (``num_scenarios=0`` picks 2/4 for
+quick/full).
+
 Each function returns CSV rows: (name, value, derived-notes).
 The claims validated per row are annotated in EXPERIMENTS.md §Repro.
 """
@@ -19,13 +25,22 @@ from benchmarks import common
 Row = Tuple[str, float, str]
 
 
+def _mean(xs) -> float:
+    xs = list(xs)
+    return sum(xs) / max(len(xs), 1)
+
+
+def _scenario_count(num_scenarios: int, quick: bool) -> int:
+    return num_scenarios or (2 if quick else 4)
+
+
 def fig2_limited_devices(quick: bool = True, model: str = "mlp",
                          num_scenarios: int = 0) -> List[Row]:
     """Accuracy vs limited device counts, averaged over Monte-Carlo
     scenarios via the vmapped batch driver (paper Fig. 2 averages over
     channel realizations; ``num_scenarios=0`` picks 2/4 for quick/full).
     """
-    scenarios = num_scenarios or (2 if quick else 4)
+    scenarios = _scenario_count(num_scenarios, quick)
     rows: List[Row] = []
     for n in (3, 5, 7):
         accs = {}
@@ -35,7 +50,7 @@ def fig2_limited_devices(quick: bool = True, model: str = "mlp",
                                      method=method, n_fixed=n),
                 scenarios)
             finals = [h[-1].accuracy for h in hists]
-            accs[method] = sum(finals) / len(finals)
+            accs[method] = _mean(finals)
             rows.append((f"fig2/{model}/n{n}/{method}/final_acc",
                          round(accs[method], 4),
                          f"rounds={len(hists[0])} S={scenarios} "
@@ -46,57 +61,68 @@ def fig2_limited_devices(quick: bool = True, model: str = "mlp",
     return rows
 
 
-def fig3_local_epochs(quick: bool = True, model: str = "mlp"
-                      ) -> List[Row]:
+def fig3_local_epochs(quick: bool = True, model: str = "mlp",
+                      num_scenarios: int = 0) -> List[Row]:
+    scenarios = _scenario_count(num_scenarios, quick)
     rows: List[Row] = []
     for epochs in (1, 2, 3):
         for method in ("das", "random"):
-            hist = common.run_fl(common.FLBenchConfig(
+            hists = common.run_fl_batch(common.FLBenchConfig(
                 quick=quick, model=model, method=method, n_fixed=7,
-                local_epochs=epochs))
+                local_epochs=epochs), scenarios)
+            finals = [h[-1].accuracy for h in hists]
             rows.append((f"fig3/{model}/E{epochs}/{method}/final_acc",
-                         round(hist[-1].accuracy, 4),
-                         "paper: more E -> higher acc; DAS >= random"))
+                         round(_mean(finals), 4),
+                         f"S={scenarios} min={min(finals):.3f} "
+                         f"max={max(finals):.3f}; paper: more E -> "
+                         f"higher acc; DAS >= random"))
     return rows
 
 
 def fig45_model_size(quick: bool = True, model: str = "mlp",
-                     target: float = 0.85) -> List[Row]:
+                     target: float = 0.85,
+                     num_scenarios: int = 0) -> List[Row]:
+    scenarios = _scenario_count(num_scenarios, quick)
     rows: List[Row] = []
     for s_bits in (1e5, 5e5, 1e6):
         for method in ("das", "abs", "full"):
-            hist = common.run_fl(common.FLBenchConfig(
+            hists = common.run_fl_batch(common.FLBenchConfig(
                 quick=quick, model=model, method=method,
-                model_bits=s_bits))
-            r = common.rounds_to_accuracy(hist, target)
-            t = common.totals(hist)
+                model_bits=s_bits), scenarios)
+            reached = [common.rounds_to_accuracy(h, target) for h in hists]
+            hit = [r for r in reached if r > 0]
+            r_mean = round(_mean(hit), 2) if hit else -1
+            tot = [common.totals(h) for h in hists]
             rows.append((f"fig45/{model}/s{int(s_bits)}/{method}/"
-                         f"rounds_to_{target}", r,
-                         f"final={t['final_accuracy']:.3f} "
-                         f"sel={t['mean_selected']:.1f}"))
+                         f"rounds_to_{target}", r_mean,
+                         f"S={scenarios} reached={len(hit)}/{scenarios} "
+                         f"final={_mean(t['final_accuracy'] for t in tot):.3f} "
+                         f"sel={_mean(t['mean_selected'] for t in tot):.1f}"))
     return rows
 
 
-def fig67_energy_time(quick: bool = True, model: str = "mlp"
-                      ) -> List[Row]:
+def fig67_energy_time(quick: bool = True, model: str = "mlp",
+                      num_scenarios: int = 0) -> List[Row]:
+    scenarios = _scenario_count(num_scenarios, quick)
     rows: List[Row] = []
-    ref = None
+    ref_energy = None
     for method in ("full", "abs", "das"):
-        hist = common.run_fl(common.FLBenchConfig(quick=quick,
-                                                  model=model,
-                                                  method=method))
-        t = common.totals(hist)
+        hists = common.run_fl_batch(common.FLBenchConfig(
+            quick=quick, model=model, method=method), scenarios)
+        tot = [common.totals(h) for h in hists]
+        energy = _mean(t["energy_per_device_j"] for t in tot)
         rows.append((f"fig67/{model}/{method}/energy_per_device_j",
-                     round(t["energy_per_device_j"], 4),
-                     f"acc={t['final_accuracy']:.3f}"))
+                     round(energy, 4),
+                     f"S={scenarios} "
+                     f"acc={_mean(t['final_accuracy'] for t in tot):.3f}"))
         rows.append((f"fig67/{model}/{method}/completion_time_s",
-                     round(t["time_total_s"], 4),
-                     f"sel/round={t['mean_selected']:.1f}"))
+                     round(_mean(t["time_total_s"] for t in tot), 4),
+                     f"sel/round="
+                     f"{_mean(t['mean_selected'] for t in tot):.1f}"))
         if method == "full":
-            ref = t
+            ref_energy = energy
         else:
-            gain = 1.0 - (t["energy_per_device_j"]
-                          / max(ref["energy_per_device_j"], 1e-12))
+            gain = 1.0 - energy / max(ref_energy, 1e-12)
             rows.append((f"fig67/{model}/{method}/energy_gain_vs_baseline",
                          round(gain, 4),
                          "paper: ~69-85% (ABS) / 79-97% (DAS)"))

@@ -25,9 +25,14 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick mode (the default; used by the "
+                         "CI smoke step)")
     ap.add_argument("--only", default="")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
     args = ap.parse_args()
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 

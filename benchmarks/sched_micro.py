@@ -1,8 +1,15 @@
 """Scheduler micro-benchmark: jitted DAS/ABS/random decision latency vs K.
 
 Systems-level table (no paper analogue): the per-round scheduling cost a
-MEC server (or pod controller) pays.  DAS = iterative Sub1/Sub2 with the
-tangent-PGD allocator; everything jit-compiled once per K.
+MEC server (or pod controller) pays.  DAS = iterative Sub1/Sub2 through
+the registered allocator; everything jit-compiled once per K.
+
+The ``alloc/*`` rows isolate a single Sub2 solve per allocator stage:
+``nested_bisect`` (the pre-refactor reference deadline solve),
+``fused_bisect`` (joint bisection + Newton carry), ``pgd`` (tangent PGD
+on top of the fused bisection) and ``fused_pgd`` (the Pallas kernel —
+interpret mode off-TPU, so its CPU number measures the interpreter, not
+the fused launch; see EXPERIMENTS.md §Perf).
 """
 
 from __future__ import annotations
@@ -13,6 +20,8 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import allocator as alloc_lib
+from repro.core import bandwidth as bw
 from repro.core import diversity, scheduler, wireless
 
 
@@ -39,6 +48,38 @@ def bench(method: str, k: int, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _alloc_instance(k: int):
+    wcfg = wireless.WirelessConfig()
+    net = wireless.sample_network(jax.random.key(0), k, wcfg)
+    gains = wireless.sample_fading(jax.random.key(1), net)
+    sizes = jax.random.randint(jax.random.key(2), (k,), 50, 1500)
+    t_train = wireless.train_time(sizes, net, wcfg)
+    sel = (jax.random.uniform(jax.random.key(3), (k,)) > 0.5
+           ).astype(jnp.float32).at[0].set(1.0)
+    return wcfg, net, gains, t_train, sel
+
+
+def bench_alloc(stage: str, k: int, iters: int = 20) -> float:
+    """Latency of ONE Sub2 solve for the given allocator stage (us)."""
+    wcfg, net, gains, t_train, sel = _alloc_instance(k)
+    params = bw.Sub2Params()
+    if stage == "nested_bisect":
+        fn = jax.jit(lambda s, t, g, p: bw.min_time_allocation_reference(
+            s, t, g, p, wcfg, params))
+    elif stage == "fused_bisect":
+        fn = jax.jit(lambda s, t, g, p: bw.min_time_allocation(
+            s, t, g, p, wcfg, params))
+    else:
+        alloc = alloc_lib.get(stage, params)
+        fn = jax.jit(lambda s, t, g, p: alloc.solve(s, t, g, p, wcfg))
+    args = (sel, t_train, gains, net.tx_power)
+    jax.block_until_ready(fn(*args))      # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
 def run(quick: bool = True) -> List[Tuple[str, float, str]]:
     rows = []
     ks = (50, 100) if quick else (50, 100, 200, 400)
@@ -47,4 +88,10 @@ def run(quick: bool = True) -> List[Tuple[str, float, str]]:
             us = bench(method, k)
             rows.append((f"sched/{method}/K{k}", round(us, 1),
                          "us_per_decision"))
+    for k in ks:
+        for stage in ("nested_bisect", "fused_bisect", "pgd",
+                      "fused_pgd"):
+            us = bench_alloc(stage, k)
+            rows.append((f"alloc/{stage}/K{k}", round(us, 1),
+                         "us_per_sub2_solve"))
     return rows

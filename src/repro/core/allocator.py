@@ -1,0 +1,153 @@
+"""Allocator subsystem — the one interface every policy solves Sub2 through.
+
+The paper's round decision (Alg. 2) alternates Sub1 selection with the
+Sub2 bandwidth solve (Eq. 15); the baselines (ABS / random / top-n /
+full) run Sub2 once over their fixed selection.  This module makes that
+inner solve a pluggable component instead of a hard-coded call:
+
+* :class:`Allocator` — the protocol:
+  ``solve(selected, t_train, gains, tx_power, cfg, alpha0=None)
+  -> (alpha, objective)``.  ``alpha0`` is the warm-start contract: the
+  caller's best prior allocation (``das_schedule`` passes the previous
+  outer iteration's alpha), or ``None`` on a cold call.  Implementations
+  must be traceable (fixed-trip interiors) so policies stay scan/vmap
+  safe, and must return a feasible alpha (sum <= 1, zero off-selection).
+* :class:`WaterFilling` — the rho -> 0 limit: fused joint-bisection
+  min-time solve (``bandwidth.min_time_allocation``).
+* :class:`PGD` — tangent-space projected gradient with the water-filling
+  + warm-start/uniform double descent (``bandwidth.pgd_allocation``).
+* :class:`FusedPGD` — the same double descent executed by the Pallas
+  kernel ``kernels/sub2_pgd.py``: one launch fuses gradient -> tangent
+  projection -> cosine-lr step -> simplex projection -> objective
+  tracking for the whole descent (interpret-mode on CPU, compiled on
+  TPU).
+
+New objectives (e.g. importance-weighted energy pricing) plug in via
+:func:`register` without touching any scheduling policy; policies pick
+an implementation by name through ``SchedulerConfig.allocator``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bandwidth as bw
+from repro.core import wireless
+
+Array = jax.Array
+
+
+@runtime_checkable
+class Allocator(Protocol):
+    """Sub2 solver interface consumed by every scheduling policy."""
+
+    params: bw.Sub2Params
+
+    def solve(self, selected: Array, t_train: Array, gains: Array,
+              tx_power: Array, cfg: wireless.WirelessConfig,
+              alpha0: Optional[Array] = None) -> tuple[Array, Array]:
+        """Return (alpha, objective) for the given selection.
+
+        ``alpha0`` optionally warm-starts the solver with the caller's
+        previous allocation; implementations must accept ``None``.
+        """
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class WaterFilling:
+    """rho -> 0 limit: every selected device finishes at T* (Eq. 15 with
+    the energy term dropped).  Objective reported at the caller's rho so
+    allocators are comparable."""
+
+    params: bw.Sub2Params = bw.Sub2Params()
+
+    def solve(self, selected: Array, t_train: Array, gains: Array,
+              tx_power: Array, cfg: wireless.WirelessConfig,
+              alpha0: Optional[Array] = None) -> tuple[Array, Array]:
+        alpha, _ = bw.min_time_allocation(selected, t_train, gains,
+                                          tx_power, cfg, self.params,
+                                          alpha0=alpha0)
+        obj = bw.sub2_objective(alpha, selected, t_train, gains, tx_power,
+                                cfg, self.params.rho)
+        return alpha, obj
+
+
+@dataclasses.dataclass(frozen=True)
+class PGD:
+    """Tangent-space projected gradient (the jnp reference solver)."""
+
+    params: bw.Sub2Params = bw.Sub2Params()
+
+    def solve(self, selected: Array, t_train: Array, gains: Array,
+              tx_power: Array, cfg: wireless.WirelessConfig,
+              alpha0: Optional[Array] = None) -> tuple[Array, Array]:
+        return bw.pgd_allocation(selected, t_train, gains, tx_power, cfg,
+                                 self.params, alpha0=alpha0)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPGD:
+    """PGD descent fused into one Pallas launch per decision.
+
+    The joint-bisection water-filling solve supplies the first starting
+    point (and consumes the warm start); the kernel then runs the entire
+    double descent in VMEM.  ``interpret=None`` follows the backend
+    (interpret on CPU, compiled on TPU) like the other kernel wrappers.
+    """
+
+    params: bw.Sub2Params = bw.Sub2Params()
+    interpret: Optional[bool] = None
+
+    def solve(self, selected: Array, t_train: Array, gains: Array,
+              tx_power: Array, cfg: wireless.WirelessConfig,
+              alpha0: Optional[Array] = None) -> tuple[Array, Array]:
+        from repro.kernels import ops as kernel_ops
+        mask = (selected > 0.0).astype(jnp.float32)
+        n_act = jnp.maximum(jnp.sum(mask), 1.0)
+        # alpha0 seeds the water-filling Newton carry only; the descent
+        # keeps both distinct basins (wf, uniform) like pgd_allocation.
+        wf, _ = bw.min_time_allocation(selected, t_train, gains, tx_power,
+                                       cfg, self.params, alpha0=alpha0)
+        starts = jnp.stack([wf, mask / n_act])
+        p = self.params
+        return kernel_ops.sub2_pgd(
+            mask, t_train, gains, tx_power, starts, rho=p.rho,
+            lr=p.pgd_lr, tau=p.smooth_tau, iters=p.pgd_iters,
+            bandwidth_hz=cfg.bandwidth_hz, noise_psd=cfg.noise_psd,
+            model_bits=cfg.model_bits, min_alpha=cfg.min_alpha,
+            interpret=self.interpret)
+
+
+_REGISTRY: Dict[str, Callable[[bw.Sub2Params], Allocator]] = {}
+
+
+def register(name: str, factory: Callable[[bw.Sub2Params], Allocator],
+             overwrite: bool = False) -> None:
+    """Register an allocator factory (``Sub2Params -> Allocator``)."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"allocator {name!r} already registered")
+    _REGISTRY[name] = factory
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str, params: bw.Sub2Params = bw.Sub2Params()) -> Allocator:
+    """Build the named allocator around ``params``."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown allocator {name!r}; registered: {names()}") from None
+    return factory(params)
+
+
+register("waterfilling", WaterFilling)
+register("pgd", PGD)
+register("fused_pgd", FusedPGD)

@@ -312,26 +312,43 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
 def make_feel_sim(*, loss_fn: Callable, eval_fn: Callable,
                   wcfg: wireless.WirelessConfig,
                   scfg: scheduler.SchedulerConfig, fcfg: FLConfig,
-                  capacity: int, eval_every: int = 1) -> Callable:
-    """Jitted single-scenario simulation (see :func:`_make_sim`)."""
-    return jax.jit(_make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg,
-                             capacity, eval_every))
+                  capacity: int, eval_every: int = 1,
+                  donate_params: bool = False) -> Callable:
+    """Jitted single-scenario simulation (see :func:`_make_sim`).
+
+    ``donate_params=True`` donates the initial-params argument to the
+    scan carry, letting XLA alias the global model's input buffer with
+    the returned final params instead of holding both across the whole
+    scan — at paper scale (CNN params x K client replicas inside the
+    round body) that is the difference between 2x and 1x of the global
+    model at peak.  The caller must not reuse the donated arrays after
+    the call (pass a fresh copy per invocation in sweeps); CPU-backend
+    JAX may decline the donation with a warning, which is harmless.
+    """
+    sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
+                    eval_every)
+    return jax.jit(sim, donate_argnums=(0,) if donate_params else ())
 
 
 def make_feel_sim_batch(*, loss_fn: Callable, eval_fn: Callable,
                         wcfg: wireless.WirelessConfig,
                         scfg: scheduler.SchedulerConfig, fcfg: FLConfig,
-                        capacity: int, eval_every: int = 1) -> Callable:
+                        capacity: int, eval_every: int = 1,
+                        donate_params: bool = False) -> Callable:
     """Jitted S-scenario simulation: vmap over (net, key) only.
 
     Dataset and initial params broadcast; each scenario sees its own
     network realization and PRNG stream — the paper's Monte-Carlo
-    averaging (Figs. 2-6) as one SPMD program.
+    averaging (Figs. 2-6) as one SPMD program.  ``donate_params`` as in
+    :func:`make_feel_sim` (the broadcast input may be declined when the
+    stacked (S, ...) output cannot alias it — still safe, just a
+    warning).
     """
     sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
                     eval_every)
-    return jax.jit(jax.vmap(sim, in_axes=(None, None, None, None, None,
-                                          None, None, None, 0, 0)))
+    vsim = jax.vmap(sim, in_axes=(None, None, None, None, None,
+                                  None, None, None, 0, 0))
+    return jax.jit(vsim, donate_argnums=(0,) if donate_params else ())
 
 
 # ---------------------------------------------------------------------------
@@ -357,18 +374,27 @@ def metrics_to_records(metrics: RoundMetrics) -> List[RoundRecord]:
 
 def batch_metrics_to_records(metrics: RoundMetrics
                              ) -> List[List[RoundRecord]]:
-    """Per-scenario record lists from (S, R, ...) stacked metrics."""
-    num_scenarios = metrics.selected.shape[0]
+    """Per-scenario record lists from (S, R, ...) stacked metrics.
+
+    One device->host transfer for the whole batch; scenario slicing
+    happens on the host copies.
+    """
+    host = jax.device_get(metrics)
+    num_scenarios = host.selected.shape[0]
     return [
         metrics_to_records(jax.tree_util.tree_map(lambda a, s=s: a[s],
-                                                  metrics))
+                                                  host))
         for s in range(num_scenarios)
     ]
 
 
-def _client_histograms(data: partition_lib.ClientDataset,
-                       num_classes: int) -> Array:
-    """On-device statistics reported to the server (Alg. 1 line 5)."""
+def client_histograms(data: partition_lib.ClientDataset,
+                      num_classes: int) -> Array:
+    """On-device statistics reported to the server (Alg. 1 line 5).
+
+    Public because sweep harnesses (``benchmarks/fl_e2e.py``) need the
+    same histograms to feed ``make_feel_sim(_batch)`` directly.
+    """
     return jax.vmap(
         lambda lab, m: diversity.label_histogram(lab, m, num_classes)
     )(data.labels, data.mask)
@@ -390,17 +416,21 @@ def run_federated(
     fcfg: FLConfig,
     key: Array,
     eval_every: int = 1,
+    donate_params: bool = False,
 ) -> tuple[Params, List[RoundRecord]]:
     """Run ``num_rounds`` of FEEL; returns final params + per-round records.
 
     Scan-over-rounds driver: the whole simulation compiles to one XLA
     program (no per-round dispatch or host syncs).  Bit-for-bit
     consistent with :func:`run_federated_loop` for the same key.
+    ``donate_params=True`` hands ``init_params`` to the scan carry (the
+    caller must not reuse those arrays afterwards — see
+    :func:`make_feel_sim`).
     """
     sim = make_feel_sim(loss_fn=loss_fn, eval_fn=eval_fn, wcfg=wcfg,
                         scfg=scfg, fcfg=fcfg, capacity=data.capacity,
-                        eval_every=eval_every)
-    hists = _client_histograms(data, fcfg.num_classes)
+                        eval_every=eval_every, donate_params=donate_params)
+    hists = client_histograms(data, fcfg.num_classes)
     test_x = synthetic.to_float(data.test_images)
     params, metrics = sim(init_params, data.images, data.labels, data.mask,
                           data.sizes, hists, test_x, data.test_labels,
@@ -420,6 +450,7 @@ def run_federated_batch(
     fcfg: FLConfig,
     keys: Array,
     eval_every: int = 1,
+    donate_params: bool = False,
 ) -> tuple[Params, RoundMetrics]:
     """Run S independent FEEL scenarios as one vmapped scan.
 
@@ -427,6 +458,8 @@ def run_federated_batch(
       nets: stacked :class:`wireless.NetworkState` with leading ``(S,)``
         leaf axis (see :func:`wireless.sample_networks`).
       keys: ``(S,)`` PRNG keys, one stream per scenario.
+      donate_params: donate ``init_params`` to the compiled sim (see
+        :func:`make_feel_sim_batch`).
 
     Returns:
       (params, metrics): final params stacked ``(S, ...)`` per leaf and
@@ -435,8 +468,9 @@ def run_federated_batch(
     """
     sim = make_feel_sim_batch(loss_fn=loss_fn, eval_fn=eval_fn, wcfg=wcfg,
                               scfg=scfg, fcfg=fcfg, capacity=data.capacity,
-                              eval_every=eval_every)
-    hists = _client_histograms(data, fcfg.num_classes)
+                              eval_every=eval_every,
+                              donate_params=donate_params)
+    hists = client_histograms(data, fcfg.num_classes)
     test_x = synthetic.to_float(data.test_images)
     return sim(init_params, data.images, data.labels, data.mask,
                data.sizes, hists, test_x, data.test_labels, nets, keys)
@@ -462,7 +496,7 @@ def run_federated_loop(
     """
     k_dev = data.num_devices
     round_fn = make_round_fn(loss_fn, fcfg, data.capacity)
-    hists = _client_histograms(data, fcfg.num_classes)
+    hists = client_histograms(data, fcfg.num_classes)
 
     ages = jnp.zeros((k_dev,), jnp.int32)
     params = init_params

@@ -20,6 +20,12 @@ driver (``core.federated``) can account costs identically across policies.
 :func:`schedule_impl` is the un-jitted body for callers that already trace
 (the scan-over-rounds driver, vmapped scenario batches).
 
+Every policy solves Sub2 through the :class:`repro.core.allocator`
+interface — ``SchedulerConfig.allocator`` names the implementation
+(``pgd`` default, ``waterfilling``, ``fused_pgd`` for the Pallas-fused
+descent) and the DAS loop warm-starts it with the previous outer
+iteration's allocation.  Swapping allocators never touches policy code.
+
 Every policy is scan/vmap-safe: no data-dependent Python control flow,
 and the DAS outer loop freezes its carry on convergence, so batch lanes
 that converge early stop updating even while vmap keeps the loop alive
@@ -36,6 +42,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import allocator as alloc_lib
 from repro.core import bandwidth as bw
 from repro.core import selection as sel
 from repro.core import wireless
@@ -52,6 +59,7 @@ class SchedulerConfig:
     local_epochs: int = 1            # E, enters t_train (Eq. 8)
     sub1: sel.Sub1Params = sel.Sub1Params()
     sub2: bw.Sub2Params = bw.Sub2Params()
+    allocator: str = "pgd"           # Sub2 solver (core.allocator registry)
     x_tol: float = 0.5               # convergence: selection unchanged
     alpha_tol: float = 1e-4          # convergence: allocation stable
     # Alg. 2 under-specifies how Sub1 prices a currently-unselected
@@ -105,14 +113,21 @@ def _finalize(selected: Array, alpha: Array, t_train: Array, gains: Array,
 
 def das_schedule(index: Array, data_sizes: Array, gains: Array,
                  net: wireless.NetworkState, cfg: wireless.WirelessConfig,
-                 sch: SchedulerConfig) -> ScheduleResult:
+                 sch: SchedulerConfig,
+                 alloc: Optional[alloc_lib.Allocator] = None
+                 ) -> ScheduleResult:
     """Data-aware scheduling: iterate Sub1 <-> Sub2 (paper Alg. 2).
 
     Sub1 needs per-device energies at *some* bandwidth point.  Selected
     devices use their current alpha; unselected devices are evaluated at
     the mean selected share (a hypothetical re-entry allocation), so the
-    selection can both shrink and grow across iterations.
+    selection can both shrink and grow across iterations.  Sub2 runs
+    through ``alloc`` (default: the config's registered allocator),
+    warm-started with the previous outer iteration's allocation — the
+    fixed point barely moves between Alg. 2 iterations, so the solver's
+    Newton/PGD interiors start next to their solution.
     """
+    alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     k = index.shape[0]
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
 
@@ -141,9 +156,10 @@ def das_schedule(index: Array, data_sizes: Array, gains: Array,
         x_new, _, _ = sel.solve_sub1(energy, t_train + t_up, index,
                                      dataclasses.replace(
                                          sch.sub1, n_min=sch.n_min))
-        # Sub2: allocate bandwidth over the new selection.
-        alpha_new, _ = bw.pgd_allocation(x_new, t_train, gains,
-                                         net.tx_power, cfg, sch.sub2)
+        # Sub2: allocate bandwidth over the new selection, warm-started
+        # from the allocation this iteration is refining.
+        alpha_new, _ = alloc.solve(x_new, t_train, gains, net.tx_power,
+                                   cfg, alpha0=alpha)
         return x_new, alpha_new, x, alpha, it + 1
 
     def cond(carry):
@@ -177,19 +193,23 @@ def _topn_by_priority(priority: Array, n: int) -> Array:
 
 def topn_schedule(priority: Array, n: int, data_sizes: Array, gains: Array,
                   net: wireless.NetworkState, cfg: wireless.WirelessConfig,
-                  sch: SchedulerConfig) -> ScheduleResult:
+                  sch: SchedulerConfig,
+                  alloc: Optional[alloc_lib.Allocator] = None
+                  ) -> ScheduleResult:
     """Select exactly ``n`` devices by ``priority``, then run Sub2."""
+    alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     x = _topn_by_priority(priority, n)
-    alpha, _ = bw.pgd_allocation(x, t_train, gains, net.tx_power, cfg,
-                                 sch.sub2)
+    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg)
     return _finalize(x, alpha, t_train, gains, net, cfg)
 
 
 def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
                  net: wireless.NetworkState, cfg: wireless.WirelessConfig,
                  sch: SchedulerConfig, key: Optional[Array] = None,
-                 deadline: Optional[float] = None) -> ScheduleResult:
+                 deadline: Optional[float] = None,
+                 alloc: Optional[alloc_lib.Allocator] = None
+                 ) -> ScheduleResult:
     """Age-based scheduling (paper §VI baselines, Yang et al. f(k)).
 
     Priority is ``log(1 + age)`` with a small random tiebreak (all-zero
@@ -198,13 +218,14 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
     priority order while the deadline's minimal bandwidth fits the budget
     — mirroring "collect as many aged updates as fit" from [9, 10].
     """
+    alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     priority = jnp.log1p(ages.astype(jnp.float32))
     if key is not None:
         priority = priority + 1e-4 * jax.random.uniform(key, priority.shape)
     if sch.n_fixed is not None:
         return topn_schedule(priority, sch.n_fixed, data_sizes, gains, net,
-                             cfg, sch)
+                             cfg, sch, alloc)
     # Greedy admission under a deadline: per-device minimal alpha at the
     # deadline is independent across devices -> sort + cumsum.
     if deadline is None:
@@ -217,37 +238,56 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
         deadline_arr = jnp.asarray(deadline, jnp.float32)
     ones = jnp.ones_like(priority)
     a_min = bw.alpha_for_deadline(deadline_arr, ones, t_train, gains,
-                                  net.tx_power, cfg)
+                                  net.tx_power, cfg,
+                                  rate_iters=sch.sub2.newton_iters)
     order = jnp.argsort(-priority)
-    csum = jnp.cumsum(a_min[order])
-    admit_sorted = (csum <= 1.0)
-    # Guarantee the minimum count even if the deadline is tight.
-    admit_sorted = admit_sorted | (jnp.arange(priority.shape[0]) < sch.n_min)
+    a_sorted = a_min[order]
+    # n_min backstop (13e): the top-n_min devices are admitted regardless
+    # of deadline feasibility — but a forced admit that *cannot* meet the
+    # deadline (share sentinel/share > the whole band) must have its
+    # share clamped out of the budget accounting before the final Sub2
+    # call.  Cumsum'ing the sentinel would permanently blow the budget
+    # and silently lock every feasible lower-priority device out of
+    # admission, collapsing the selection to the top-n_min sort order.
+    # The forced straggler blows the deadline whichever way the band is
+    # split, so it contributes zero to the deadline packing; the final
+    # Sub2 solve reallocates real bandwidth over everything admitted.
+    # (A *feasible* forced admit keeps its true share — it genuinely
+    # consumes that much band at the deadline.  An infeasible non-forced
+    # row still blocks itself and everyone behind it: ordered greedy
+    # admission, unchanged.)
+    forced = jnp.arange(priority.shape[0]) < sch.n_min
+    a_budget = jnp.where(forced & (a_sorted > 1.0), 0.0, a_sorted)
+    admit_sorted = (jnp.cumsum(a_budget) <= 1.0) | forced
     x = jnp.zeros_like(priority).at[order].set(
         admit_sorted.astype(jnp.float32))
-    alpha, _ = bw.pgd_allocation(x, t_train, gains, net.tx_power, cfg,
-                                 sch.sub2)
+    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg)
     return _finalize(x, alpha, t_train, gains, net, cfg)
 
 
 def random_schedule(key: Array, data_sizes: Array, gains: Array,
                     net: wireless.NetworkState,
                     cfg: wireless.WirelessConfig,
-                    sch: SchedulerConfig) -> ScheduleResult:
+                    sch: SchedulerConfig,
+                    alloc: Optional[alloc_lib.Allocator] = None
+                    ) -> ScheduleResult:
     """Uniform-random selection baseline (paper §VI-B)."""
     priority = jax.random.uniform(key, data_sizes.shape)
     n = sch.n_fixed if sch.n_fixed is not None else sch.n_min
-    return topn_schedule(priority, n, data_sizes, gains, net, cfg, sch)
+    return topn_schedule(priority, n, data_sizes, gains, net, cfg, sch,
+                         alloc)
 
 
 def full_schedule(data_sizes: Array, gains: Array,
                   net: wireless.NetworkState, cfg: wireless.WirelessConfig,
-                  sch: SchedulerConfig) -> ScheduleResult:
+                  sch: SchedulerConfig,
+                  alloc: Optional[alloc_lib.Allocator] = None
+                  ) -> ScheduleResult:
     """Paper's baseline: all devices participate; Sub2 optimizes alpha."""
+    alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     x = jnp.ones_like(data_sizes, dtype=jnp.float32)
-    alpha, _ = bw.pgd_allocation(x, t_train, gains, net.tx_power, cfg,
-                                 sch.sub2)
+    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg)
     return _finalize(x, alpha, t_train, gains, net, cfg)
 
 
@@ -264,19 +304,23 @@ def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
     Call this from code that is already inside a trace — the
     scan-over-rounds FEEL driver and its vmapped scenario batch
     (``core.federated``) — so the decision inlines into the surrounding
-    program instead of nesting a jit call.
+    program instead of nesting a jit call.  The Sub2 allocator is built
+    once here (from ``sch.allocator``/``sch.sub2``) and threaded through
+    whichever policy dispatches.
     """
+    alloc = alloc_lib.get(sch.allocator, sch.sub2)
     if sch.method == "das":
         if sch.n_fixed is not None:
             return topn_schedule(index, sch.n_fixed, data_sizes, gains, net,
-                                 cfg, sch)
-        return das_schedule(index, data_sizes, gains, net, cfg, sch)
+                                 cfg, sch, alloc)
+        return das_schedule(index, data_sizes, gains, net, cfg, sch, alloc)
     if sch.method == "abs":
-        return abs_schedule(ages, data_sizes, gains, net, cfg, sch, key)
+        return abs_schedule(ages, data_sizes, gains, net, cfg, sch, key,
+                            alloc=alloc)
     if sch.method == "random":
-        return random_schedule(key, data_sizes, gains, net, cfg, sch)
+        return random_schedule(key, data_sizes, gains, net, cfg, sch, alloc)
     if sch.method == "full":
-        return full_schedule(data_sizes, gains, net, cfg, sch)
+        return full_schedule(data_sizes, gains, net, cfg, sch, alloc)
     raise ValueError(f"unknown scheduling method: {sch.method!r}")
 
 

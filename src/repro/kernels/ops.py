@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import diversity as _div
 from repro.kernels import fedavg_agg as _agg
 from repro.kernels import flash_attention as _fa
+from repro.kernels import sub2_pgd as _pgd
 
 
 def _default_interpret() -> bool:
@@ -44,6 +45,38 @@ def fedavg_agg(updates: jax.Array, weights: jax.Array,
     out = _agg.fedavg_agg_kernel(padded, weights, block_p=bp,
                                  interpret=interpret)
     return out[:p] if pad else out
+
+
+def sub2_pgd(selected: jax.Array, t_train: jax.Array, gains: jax.Array,
+             tx_power: jax.Array, alpha0: jax.Array, *, rho: float,
+             lr: float, tau: float, iters: int, bandwidth_hz: float,
+             noise_psd: float, model_bits: float, min_alpha: float,
+             proj_iters: int = _pgd.DEFAULT_PROJ_ITERS,
+             interpret: bool | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """Fused Sub2 PGD solve: whole descent in one kernel launch.
+
+    Single instance: ``selected``/``t_train``/``gains``/``tx_power`` of
+    (K,) with ``alpha0`` (2, K) -> ((K,) alpha, () objective).  Batched
+    scenario lane: (S, K) rows with ``alpha0`` (S, 2, K) -> ((S, K),
+    (S,)).  ``alpha0`` stacks the two starting points (water-filling, uniform); gains/power fold into the SNR coefficient
+    c = g*P/(B*N0) here so the kernel sees one coefficient row.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    batched = selected.ndim == 2
+    if not batched:
+        selected, t_train, gains, tx_power, alpha0 = (
+            x[None] for x in (selected, t_train, gains, tx_power, alpha0))
+    c = gains * tx_power / (bandwidth_hz * noise_psd)
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    alpha, obj = _pgd.sub2_pgd_kernel(
+        f32(selected), f32(t_train), f32(c), f32(tx_power), f32(alpha0),
+        rho=rho, lr=lr, tau=tau, iters=iters, bandwidth_hz=bandwidth_hz,
+        model_bits=model_bits, min_alpha=min_alpha,
+        proj_iters=proj_iters, interpret=interpret)
+    if not batched:
+        return alpha[0], obj[0]
+    return alpha, obj
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "interpret"))

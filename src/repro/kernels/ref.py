@@ -31,6 +31,96 @@ def diversity(labels: jax.Array, mask: jax.Array,
     return jnp.stack([gini, shannon, total], axis=-1)
 
 
+def sub2_pgd(selected: jax.Array, t_train: jax.Array,
+             snr_coeff: jax.Array, tx_power: jax.Array,
+             alpha0: jax.Array, *, rho: float, lr: float, tau: float,
+             iters: int, bandwidth_hz: float, min_alpha: float,
+             model_bits: float,
+             proj_iters: int = 32) -> tuple[jax.Array, jax.Array]:
+    """Single-instance fused-PGD oracle: (K,) rows + (2, K) starts ->
+    ((K,) alpha, () objective).
+
+    Same contract as ``sub2_pgd_kernel`` (tangent step with cosine lr,
+    theta-bisection simplex projection, exact-objective best tracking
+    over both starting points), but the gradient is derived
+    *independently*: ``jax.grad`` of the logsumexp-smoothed objective,
+    evaluated at the floored point — so a sign/derivative error in the
+    kernel's hand-written analytic gradient fails the sweep test instead
+    of being mirrored by the oracle.
+    """
+    import math
+    mask = selected
+    tt, c, pw = t_train, snr_coeff, tx_power
+    n_act = jnp.maximum(jnp.sum(mask), 1.0)
+    any_act = jnp.sum(mask) > 0.5
+    scale = bandwidth_hz / math.log(2.0)
+
+    def upload(av):
+        rate = scale * av * jnp.log1p(c / av)
+        return jnp.where(mask > 0.0,
+                         model_bits / jnp.maximum(rate, 1e-12), 0.0)
+
+    def exact_obj(av):
+        tu = upload(jnp.maximum(av, min_alpha))
+        tot = jnp.where(mask > 0.0, tt + tu, 0.0)
+        return rho * jnp.sum(pw * tu) + (1.0 - rho) * jnp.max(tot)
+
+    def smooth_obj(av):
+        tu = upload(av)
+        tot = jnp.where(mask > 0.0, tt + tu, 0.0)
+        return (rho * jnp.sum(pw * tu)
+                + (1.0 - rho) * tau * jax.nn.logsumexp(tot / tau))
+
+    grad_fn = jax.grad(smooth_obj)
+
+    def tangent_grad(av):
+        # The kernel evaluates its analytic slope at the floored point;
+        # feeding the floored point to autodiff matches that semantics.
+        g = grad_fn(jnp.maximum(av, min_alpha)) * mask
+        return (g - jnp.sum(g) / n_act) * mask
+
+    def project(v):
+        vm = jnp.where(mask > 0.0, v, 0.0)
+        act = mask > 0.0
+        lo = jnp.min(jnp.where(act, vm, jnp.inf)) - 1.0
+        hi = jnp.max(jnp.where(act, vm, -jnp.inf))
+
+        def pbody(_, lohi):
+            plo, phi = lohi
+            mid = 0.5 * (plo + phi)
+            s = jnp.sum(jnp.where(act, jnp.maximum(vm - mid, 0.0), 0.0))
+            over = s >= 1.0
+            return jnp.where(over, mid, plo), jnp.where(over, phi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, proj_iters, pbody, (lo, hi))
+        out = jnp.maximum(vm - 0.5 * (lo + hi), 0.0)
+        out = jnp.where(act, out, 0.0)
+        return jnp.where(any_act, out, jnp.zeros_like(out))
+
+    def descend(a0_row):
+        def body(i, carry):
+            a, best_a, best_o = carry
+            gt = tangent_grad(a)
+            gmax = jnp.max(jnp.abs(gt))
+            frac = i.astype(jnp.float32) / iters
+            lr_i = lr * (0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+            a = project(a - lr_i * gt / jnp.maximum(gmax, 1e-12))
+            o = exact_obj(a)
+            better = o < best_o
+            return (a, jnp.where(better, a, best_a),
+                    jnp.where(better, o, best_o))
+
+        a = project(a0_row)
+        _, best_a, best_o = jax.lax.fori_loop(0, iters, body,
+                                              (a, a, exact_obj(a)))
+        return best_a, best_o
+
+    best_a, best_o = jax.vmap(descend)(alpha0)
+    pick = best_o[0] <= best_o[1]
+    return (jnp.where(pick, best_a[0], best_a[1]),
+            jnp.where(pick, best_o[0], best_o[1]))
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0) -> jax.Array:
     """(BH, Sq, hd) x (BH, Skv, hd) -> (BH, Sq, hd), f32 softmax."""

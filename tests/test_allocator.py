@@ -1,0 +1,343 @@
+"""Allocator subsystem: fused solvers, Pallas PGD kernel, policy routing.
+
+Contracts under test:
+
+* fused joint bisection == nested reference bisection to <1e-3 on
+  random instances (alpha vector and T*), warm-started or cold
+* Newton rate inversion == bisection reference
+* ``project_simplex`` edge cases: empty mask, single active device,
+  radius != 1
+* Pallas ``sub2_pgd`` kernel == pure-jnp oracle (``kernels/ref.py``) in
+  interpret mode — single instance, batched (S, K) lane, and vmap of
+  the single-instance entry (the scenario-driver path)
+* ``FusedPGD`` produces feasible allocations with objectives matching
+  the tangent-PGD reference allocator
+* every policy routes Sub2 through the registry (spy allocator), and
+  the DAS/scan/batch parity contract holds with ``fused_pgd`` swapped in
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import allocator
+from repro.core import bandwidth as bw
+from repro.core import federated, scheduler, wireless
+from repro.data import partition, synthetic
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import paper_nets
+
+WCFG = wireless.WirelessConfig()
+
+
+def _instance(seed: int, k: int, sel_p: float = 0.5):
+    net = wireless.sample_network(jax.random.key(seed), k, WCFG)
+    gains = wireless.sample_fading(jax.random.key(seed + 1), net)
+    sizes = jax.random.randint(jax.random.key(seed + 2), (k,), 50, 1500)
+    t_train = wireless.train_time(sizes, net, WCFG)
+    sel = (jax.random.uniform(jax.random.key(seed + 3), (k,)) > sel_p
+           ).astype(jnp.float32).at[0].set(1.0)
+    return net, gains, t_train, sel
+
+
+# ---------------------------------------------------------------------------
+# Fused joint bisection vs nested reference
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 60), st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_fused_min_time_matches_nested_reference(k, seed):
+    net, gains, t_train, sel = _instance(seed % 1000, k)
+    a_ref, t_ref = bw.min_time_allocation_reference(
+        sel, t_train, gains, net.tx_power, WCFG)
+    a_fus, t_fus = bw.min_time_allocation(
+        sel, t_train, gains, net.tx_power, WCFG)
+    np.testing.assert_allclose(np.asarray(a_fus), np.asarray(a_ref),
+                               atol=1e-3)
+    assert abs(float(t_fus) - float(t_ref)) <= 1e-3 * max(float(t_ref),
+                                                          1.0)
+
+
+@given(st.integers(2, 40), st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_fused_min_time_warm_start_agrees(k, seed):
+    """Any positive warm start must land on the same solution (Newton on
+    concave f converges globally)."""
+    net, gains, t_train, sel = _instance(seed % 1000, k)
+    cold, t_cold = bw.min_time_allocation(sel, t_train, gains,
+                                          net.tx_power, WCFG)
+    warm_seed = jax.random.uniform(jax.random.key(seed + 9), (k,),
+                                   minval=0.01, maxval=1.0)
+    warm, t_warm = bw.min_time_allocation(sel, t_train, gains,
+                                          net.tx_power, WCFG,
+                                          alpha0=warm_seed)
+    np.testing.assert_allclose(np.asarray(warm), np.asarray(cold),
+                               atol=1e-4)
+    assert float(t_warm) == pytest.approx(float(t_cold), rel=1e-5)
+
+
+def test_newton_invert_rate_matches_bisect():
+    k = 32
+    net, gains, _, _ = _instance(17, k)
+    r_req = jnp.logspace(3, 5.5, k)
+    a_newton = bw.invert_rate(r_req, gains, net.tx_power, WCFG)
+    a_bisect = bw.invert_rate_bisect(r_req, gains, net.tx_power, WCFG)
+    np.testing.assert_allclose(np.asarray(a_newton), np.asarray(a_bisect),
+                               atol=1e-6)
+
+
+def test_newton_invert_rate_infeasible_hits_ceiling():
+    """Requirements beyond the band saturate at the same sentinel the
+    bisection used, so budget checks see the same overflow."""
+    k = 8
+    net, gains, _, _ = _instance(23, k)
+    a = bw.invert_rate(jnp.full((k,), 1e30), gains, net.tx_power, WCFG)
+    np.testing.assert_allclose(np.asarray(a), bw.ALPHA_CEIL)
+
+
+# ---------------------------------------------------------------------------
+# project_simplex edge cases
+# ---------------------------------------------------------------------------
+
+def test_project_simplex_empty_mask():
+    v = jnp.asarray([0.3, -0.2, 0.9])
+    out = bw.project_simplex(v, jnp.zeros(3))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_project_simplex_single_active():
+    v = jnp.asarray([0.3, -5.0, 0.9])
+    mask = jnp.asarray([0.0, 1.0, 0.0])
+    out = np.asarray(bw.project_simplex(v, mask))
+    np.testing.assert_allclose(out, [0.0, 1.0, 0.0], atol=1e-6)
+
+
+def test_project_simplex_radius():
+    v = jnp.asarray([0.5, 0.8, -0.1, 0.3])
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    for radius in (0.25, 2.0):
+        p = np.asarray(bw.project_simplex(v, mask, radius=radius))
+        assert p[2] == 0.0
+        assert p.sum() == pytest.approx(radius, abs=1e-5)
+        assert np.all(p >= 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Pallas PGD kernel vs oracle
+# ---------------------------------------------------------------------------
+
+_PGD_KW = dict(rho=0.5, lr=0.05, tau=1e-3, iters=60,
+               bandwidth_hz=WCFG.bandwidth_hz, model_bits=WCFG.model_bits,
+               min_alpha=WCFG.min_alpha)
+
+
+def _starts(sel, t_train, gains, tx_power):
+    mask = (sel > 0.0).astype(jnp.float32)
+    wf, _ = bw.min_time_allocation(sel, t_train, gains, tx_power, WCFG)
+    uniform = mask / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.stack([wf, uniform])
+
+
+@given(st.integers(2, 48), st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_sub2_pgd_kernel_matches_oracle(k, seed):
+    """The oracle's gradient comes from ``jax.grad`` of the smoothed
+    objective (independent of the kernel's hand-written analytic one),
+    so the two trajectories agree to float-noise amplification rather
+    than bitwise: tight on the objective, loose on near-flat alpha
+    directions.  A sign/derivative error in the kernel diverges by
+    orders of magnitude more than these tolerances."""
+    net, gains, t_train, sel = _instance(seed % 1000, k)
+    a0 = _starts(sel, t_train, gains, net.tx_power)
+    c = gains * net.tx_power / (WCFG.bandwidth_hz * WCFG.noise_psd)
+    a_ref, o_ref = kernel_ref.sub2_pgd(sel, t_train, c, net.tx_power, a0,
+                                       **_PGD_KW)
+    a_krn, o_krn = kernel_ops.sub2_pgd(sel, t_train, gains, net.tx_power,
+                                       a0, noise_psd=WCFG.noise_psd,
+                                       **_PGD_KW)
+    np.testing.assert_allclose(np.asarray(a_krn), np.asarray(a_ref),
+                               atol=1e-2)
+    assert float(o_krn) == pytest.approx(float(o_ref), rel=1e-3)
+
+
+def test_sub2_pgd_kernel_batched_lane():
+    """The (S, K) lane equals per-row single launches, and vmap of the
+    single-instance entry (the vmapped-driver path) equals the batch."""
+    k, s = 20, 4
+    rows = [_instance(100 + 3 * i, k) for i in range(s)]
+    sel = jnp.stack([r[3] for r in rows])
+    tt = jnp.stack([r[2] for r in rows])
+    gains = jnp.stack([r[1] for r in rows])
+    power = jnp.stack([r[0].tx_power for r in rows])
+    a0 = jnp.stack([_starts(rows[i][3], rows[i][2], rows[i][1],
+                            rows[i][0].tx_power) for i in range(s)])
+    kw = dict(noise_psd=WCFG.noise_psd, **_PGD_KW)
+    a_b, o_b = kernel_ops.sub2_pgd(sel, tt, gains, power, a0, **kw)
+    assert a_b.shape == (s, k) and o_b.shape == (s,)
+    for i in range(s):
+        a_i, o_i = kernel_ops.sub2_pgd(sel[i], tt[i], gains[i], power[i],
+                                       a0[i], **kw)
+        np.testing.assert_array_equal(np.asarray(a_b[i]), np.asarray(a_i))
+        assert float(o_b[i]) == float(o_i)
+    a_v, o_v = jax.vmap(
+        lambda *xs: kernel_ops.sub2_pgd(*xs, **kw))(sel, tt, gains, power,
+                                                    a0)
+    np.testing.assert_allclose(np.asarray(a_v), np.asarray(a_b),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(o_v), np.asarray(o_b),
+                               rtol=1e-6)
+
+
+def test_sub2_pgd_kernel_empty_selection():
+    k = 8
+    net, gains, t_train, _ = _instance(31, k)
+    sel = jnp.zeros((k,), jnp.float32)
+    a0 = jnp.zeros((2, k), jnp.float32)
+    a, o = kernel_ops.sub2_pgd(sel, t_train, gains, net.tx_power, a0,
+                               noise_psd=WCFG.noise_psd, **_PGD_KW)
+    np.testing.assert_array_equal(np.asarray(a), 0.0)
+    assert float(o) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Allocator implementations + registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["waterfilling", "pgd", "fused_pgd"])
+def test_allocator_feasibility(name):
+    k = 30
+    net, gains, t_train, sel = _instance(41, k)
+    alloc = allocator.get(name, bw.Sub2Params.fast())
+    alpha, obj = alloc.solve(sel, t_train, gains, net.tx_power, WCFG)
+    alpha = np.asarray(alpha)
+    assert alpha.sum() <= 1.0 + 1e-4
+    assert np.all(alpha >= 0.0)
+    assert np.all(alpha[np.asarray(sel) == 0.0] == 0.0)
+    assert np.isfinite(float(obj))
+
+
+def test_fused_pgd_objective_matches_reference_pgd():
+    """The Pallas descent must land within a few percent of the tangent
+    PGD reference (they run the same algorithm; only the simplex
+    projection's theta solve and the alpha flooring differ)."""
+    params = bw.Sub2Params.fast()
+    for seed in (3, 11, 29):
+        net, gains, t_train, sel = _instance(seed, 24)
+        _, o_ref = allocator.PGD(params).solve(sel, t_train, gains,
+                                               net.tx_power, WCFG)
+        _, o_fus = allocator.FusedPGD(params).solve(sel, t_train, gains,
+                                                    net.tx_power, WCFG)
+        assert float(o_fus) <= float(o_ref) * 1.03 + 1e-9
+
+
+def test_registry_contents_and_errors():
+    assert {"waterfilling", "pgd", "fused_pgd"} <= set(allocator.names())
+    with pytest.raises(ValueError, match="unknown allocator"):
+        allocator.get("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        allocator.register("pgd", allocator.PGD)
+
+
+def test_policies_route_through_registry():
+    """A spy allocator registered under a fresh name must be the one every
+    policy's Sub2 solve goes through (equal shares are its fingerprint)."""
+
+    @dataclasses.dataclass(frozen=True)
+    class EqualShare:
+        params: bw.Sub2Params = bw.Sub2Params()
+
+        def solve(self, selected, t_train, gains, tx_power, cfg,
+                  alpha0=None):
+            mask = (selected > 0.0).astype(jnp.float32)
+            alpha = mask / jnp.maximum(jnp.sum(mask), 1.0)
+            return alpha, jnp.asarray(0.0, jnp.float32)
+
+    allocator.register("equal_share_spy", EqualShare, overwrite=True)
+    k = 16
+    net, gains, _, _ = _instance(53, k)
+    sizes = jax.random.randint(jax.random.key(54), (k,), 50, 1500)
+    ages = jnp.zeros((k,), jnp.int32)
+    idx = jnp.linspace(0.1, 0.9, k)
+    for method in ("das", "abs", "random", "full"):
+        sch = scheduler.SchedulerConfig(method=method, n_min=2,
+                                        iterations_max=3,
+                                        allocator="equal_share_spy")
+        res = scheduler.schedule(jax.random.key(55), idx, ages, sizes,
+                                 gains, net, WCFG, sch)
+        sel = np.asarray(res.selected)
+        alpha = np.asarray(res.alpha)
+        n_sel = sel.sum()
+        assert n_sel >= 2
+        np.testing.assert_allclose(alpha[sel > 0], 1.0 / n_sel, rtol=1e-6)
+        assert np.all(alpha[sel == 0] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Driver parity with FusedPGD swapped in
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    imgs, labs = synthetic.generate(0, samples_per_class=400)
+    pspec = partition.PartitionSpec(num_devices=10, num_shards=80,
+                                    shard_size=50)
+    data = partition.partition(imgs, labs, seed=1, spec=pspec)
+    net = wireless.sample_network(jax.random.key(0), 10, WCFG)
+    mspec = paper_nets.PaperNetSpec(kind="mlp")
+    params = paper_nets.init(jax.random.key(3), mspec)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    return data, net, params, loss, ev
+
+
+def _fused_cfgs(rounds=2):
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3,
+                                     sub2=bw.Sub2Params.fast(),
+                                     allocator="fused_pgd")
+    fcfg = federated.FLConfig(num_rounds=rounds, batch_size=50,
+                              learning_rate=0.1)
+    return scfg, fcfg
+
+
+def test_scan_matches_legacy_with_fused_pgd(tiny_world):
+    data, net, params, loss, ev = tiny_world
+    scfg, fcfg = _fused_cfgs()
+    kw = dict(init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+              net=net, wcfg=WCFG, scfg=scfg, fcfg=fcfg,
+              key=jax.random.key(4))
+    p_scan, h_scan = federated.run_federated(**kw)
+    p_loop, h_loop = federated.run_federated_loop(**kw)
+    for a, b in zip(h_scan, h_loop):
+        assert np.array_equal(a.selected, b.selected)
+        assert a.round_time == b.round_time
+    for a, b in zip(jax.tree_util.tree_leaves(p_scan),
+                    jax.tree_util.tree_leaves(p_loop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batch_matches_single_with_fused_pgd(tiny_world):
+    data, _, params, loss, ev = tiny_world
+    scfg, fcfg = _fused_cfgs()
+    s = 2
+    nets = wireless.sample_networks(jax.random.key(21), s,
+                                    data.num_devices, WCFG)
+    keys = jax.random.split(jax.random.key(22), s)
+    p_b, metrics = federated.run_federated_batch(
+        init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+        nets=nets, wcfg=WCFG, scfg=scfg, fcfg=fcfg, keys=keys)
+    hists_b = federated.batch_metrics_to_records(metrics)
+    for i in range(s):
+        net_i = jax.tree_util.tree_map(lambda a, i=i: a[i], nets)
+        _, hist_i = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net_i, wcfg=WCFG, scfg=scfg, fcfg=fcfg, key=keys[i])
+        for a, b in zip(hists_b[i], hist_i):
+            assert np.array_equal(a.selected, b.selected)
+            assert a.round_time == b.round_time

@@ -240,6 +240,30 @@ def test_batch_matches_independent_runs(small_world):
             np.testing.assert_array_equal(np.asarray(a[s]), np.asarray(b))
 
 
+def test_donated_params_scan_matches_undonated(small_world):
+    """donate_params=True hands the init-params buffers to the scan carry
+    (peak-memory open item): results must be identical, and the caller's
+    obligation is only to not reuse the donated arrays afterwards."""
+    data, net, wcfg = small_world
+    mspec = paper_nets.PaperNetSpec(kind="mlp")
+    params = paper_nets.init(jax.random.key(3), mspec)
+    scfg = scheduler.SchedulerConfig(method="random", n_min=2, n_fixed=2)
+    fcfg = federated.FLConfig(num_rounds=2, batch_size=50,
+                              learning_rate=0.1)
+    kw = dict(loss_fn=functools.partial(paper_nets.loss_fn, spec=mspec),
+              eval_fn=functools.partial(paper_nets.accuracy, spec=mspec),
+              data=data, net=net, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
+              key=jax.random.key(4))
+    p_ref, h_ref = federated.run_federated(init_params=params, **kw)
+    donated = jax.tree_util.tree_map(jnp.array, params)  # fresh buffers
+    p_don, h_don = federated.run_federated(init_params=donated,
+                                           donate_params=True, **kw)
+    for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                    jax.tree_util.tree_leaves(p_don)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [r.accuracy for r in h_ref] == [r.accuracy for r in h_don]
+
+
 def test_das_beats_random_on_noniid(small_world):
     """The paper's core claim at miniature scale: with few devices
     schedulable, data-aware selection reaches higher accuracy in equal

@@ -17,6 +17,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
+from repro.core import allocator
 from repro.core import bandwidth as bw
 from repro.core import diversity, scheduler, selection, wireless
 
@@ -103,8 +104,8 @@ def test_pgd_matches_scipy():
     t_train = wireless.train_time(sizes, net, WCFG)
     sel = jnp.ones((k,), jnp.float32)
     params = bw.Sub2Params(rho=0.5)
-    alpha_jax, obj_jax = bw.pgd_allocation(sel, t_train, gains,
-                                           net.tx_power, WCFG, params)
+    alpha_jax, obj_jax = allocator.PGD(params).solve(
+        sel, t_train, gains, net.tx_power, WCFG)
 
     def obj_np(a):
         return float(bw.sub2_objective(jnp.asarray(a, jnp.float32), sel,
@@ -199,6 +200,32 @@ def test_schedule_invariants(method):
     t_tr = np.asarray(res.t_train)
     tot = np.where(sel > 0, t_tr + t_up, 0.0)
     assert np.nanmax(tot) <= float(res.round_time) * 1.01 + 1e-6
+
+
+def test_abs_nmin_backstop_does_not_poison_admission():
+    """A forced (n_min) admit that is infeasible at the deadline must not
+    block feasible lower-priority devices: its sentinel share is clamped
+    out of the cumulative budget, so the greedy admission continues past
+    it instead of collapsing the selection to the top-n_min sort order."""
+    k = 12
+    net, gains = _network(19, k)
+    sizes = jnp.full((k,), 200).at[0].set(20000)  # device 0: huge t_train
+    ages = jnp.ones((k,), jnp.int32).at[0].set(50)  # device 0: top priority
+    t_train = wireless.train_time(sizes, net, WCFG)
+    # Deadline every other device can meet at a modest share, but device
+    # 0's training alone overruns it.
+    others = np.asarray(t_train)[1:]
+    a_eq = jnp.full((k,), 1.0 / 4.0)
+    t_up_eq = np.asarray(wireless.upload_time(a_eq, gains, net.tx_power,
+                                              WCFG))
+    deadline = float((others + t_up_eq[1:]).max() * 1.05)
+    assert float(t_train[0]) > deadline
+    sch = scheduler.SchedulerConfig(method="abs", n_min=1)
+    res = scheduler.abs_schedule(ages, sizes, gains, net, WCFG, sch,
+                                 deadline=deadline)
+    sel = np.asarray(res.selected)
+    assert sel[0] == 1.0                      # backstop still honored
+    assert sel.sum() > 1, "sentinel share locked out feasible devices"
 
 
 def test_das_selects_fewer_than_full_at_scale():
