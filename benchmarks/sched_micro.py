@@ -10,10 +10,17 @@ The ``alloc/*`` rows isolate a single Sub2 solve per allocator stage:
 on top of the fused bisection) and ``fused_pgd`` (the Pallas kernel —
 interpret mode off-TPU, so its CPU number measures the interpreter, not
 the fused launch; see EXPERIMENTS.md §Perf).
+
+The ``streaming/*`` rows measure the per-round data-refresh cost the
+streaming subsystem adds to every round (DESIGN.md §7): the fused
+count-delta -> diversity -> staleness pass, pure-jax reference vs the
+Pallas ``stream_update`` kernel, single scenario and the batched
+``(S, K, C)`` lane.
 """
 
 from __future__ import annotations
 
+import functools
 import time
 from typing import List, Tuple
 
@@ -23,6 +30,8 @@ import jax.numpy as jnp
 from repro.core import allocator as alloc_lib
 from repro.core import bandwidth as bw
 from repro.core import diversity, scheduler, wireless
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
 
 
 def bench(method: str, k: int, iters: int = 5) -> float:
@@ -80,6 +89,33 @@ def bench_alloc(stage: str, k: int, iters: int = 20) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def bench_stream(path: str, k: int, c: int = 10, s: int = 1,
+                 iters: int = 50) -> float:
+    """Latency of ONE fused streaming refresh (us): count-delta
+    accumulation -> diversity stats -> staleness decay, for one round's
+    ``(S, K, C)`` state."""
+    shape = (s, k, c) if s > 1 else (k, c)
+    hists = jax.random.uniform(jax.random.key(0), shape, minval=0.0,
+                               maxval=60.0)
+    deltas = jax.random.uniform(jax.random.key(1), shape, minval=-4.0,
+                                maxval=10.0)
+    arrivals = jnp.sum(jnp.maximum(deltas, 0.0), axis=-1)
+    stale = jnp.zeros(shape[:-1])
+    sel = jnp.zeros(shape[:-1])
+    if path == "ref":
+        fn = jax.jit(functools.partial(kernel_ref.stream_update,
+                                       decay=0.8, size_cap=0.0))
+    else:
+        fn = jax.jit(functools.partial(kernel_ops.stream_update,
+                                       decay=0.8, size_cap=0.0))
+    args = (hists, deltas, arrivals, stale, sel)
+    jax.block_until_ready(fn(*args))      # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
 def run(quick: bool = True) -> List[Tuple[str, float, str]]:
     rows = []
     ks = (50, 100) if quick else (50, 100, 200, 400)
@@ -94,4 +130,14 @@ def run(quick: bool = True) -> List[Tuple[str, float, str]]:
             us = bench_alloc(stage, k)
             rows.append((f"alloc/{stage}/K{k}", round(us, 1),
                          "us_per_sub2_solve"))
+    for k in ks:
+        for path in ("ref", "kernel"):
+            us = bench_stream(path, k)
+            rows.append((f"streaming/{path}/K{k}", round(us, 1),
+                         "us_per_refresh"))
+    s_batch = 8 if quick else 16
+    for path in ("ref", "kernel"):
+        us = bench_stream(path, ks[-1], s=s_batch)
+        rows.append((f"streaming/{path}_S{s_batch}/K{ks[-1]}",
+                     round(us, 1), "us_per_batched_refresh"))
     return rows

@@ -3,7 +3,7 @@
     PYTHONPATH=src python examples/federated_mnist.py \
         [--model cnn|mlp] [--method das|abs|random|full] [--rounds 15]
         [--devices 100] [--n-fixed 7] [--epochs 1] [--full-data]
-        [--scenarios 1]
+        [--scenarios 1] [--stream poisson|drift|shift|evict]
 
 Reproduces the §VI setup: K devices with shard-partitioned synthetic
 MNIST-like data, DAS/ABS/random/full scheduling, FedAvg training, and
@@ -14,6 +14,12 @@ The whole multi-round simulation runs as one compiled scan
 the paper's Monte-Carlo averaging — S independent network/PRNG
 realizations as ONE vmapped program (``federated.run_federated_batch``)
 — and reports the mean and spread of the per-scenario results.
+
+``--stream <process>`` turns the scenario non-stationary: per-device
+data arrives/drifts/evicts round by round inside the scan carry and the
+scheduler re-ranks on the refreshed statistics (streaming subsystem,
+DESIGN.md §7).  Combine with ``--scenarios`` to run S independent
+streaming realizations through the batch driver.
 """
 
 import argparse
@@ -21,7 +27,7 @@ import functools
 
 import jax
 
-from repro.core import federated, scheduler, wireless
+from repro.core import federated, scheduler, streaming, wireless
 from repro.data import partition, synthetic
 from repro.models import paper_nets
 
@@ -40,6 +46,15 @@ def main() -> None:
                     help="paper scale: 1200 shards x 50 (else 300x50)")
     ap.add_argument("--scenarios", type=int, default=1,
                     help="Monte-Carlo scenarios run as one vmapped scan")
+    ap.add_argument("--stream", default="",
+                    choices=["", "static", "poisson", "drift", "shift",
+                             "evict"],
+                    help="streaming-data arrival process (default: "
+                         "static data, the paper's frozen partition)")
+    ap.add_argument("--stream-rate", type=float, default=25.0,
+                    help="mean arrivals per device per round")
+    ap.add_argument("--staleness-weight", type=float, default=0.25,
+                    help="gamma_s staleness boost for streaming runs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -57,14 +72,21 @@ def main() -> None:
     print(f"[feel] {args.model} ({paper_nets.num_params(params):,} "
           f"params), K={args.devices}, method={args.method}, "
           f"E={args.epochs}, s={args.model_bits / 1e3:.0f} kbit, "
-          f"S={args.scenarios}")
+          f"S={args.scenarios}"
+          + (f", stream={args.stream}@{args.stream_rate:g}/round"
+             if args.stream else ""))
 
     scfg = scheduler.SchedulerConfig(
         method=args.method, n_min=1,
-        n_fixed=args.n_fixed or None, iterations_max=6)
+        n_fixed=args.n_fixed or None, iterations_max=6,
+        staleness_weight=args.staleness_weight if args.stream else 0.0)
+    stream_cfg = streaming.StreamConfig(
+        process=args.stream, rate=args.stream_rate) if args.stream \
+        else None
     fcfg = federated.FLConfig(
         num_rounds=args.rounds, local_epochs=args.epochs, batch_size=50,
-        learning_rate=0.1 if args.model == "mlp" else 0.05)
+        learning_rate=0.1 if args.model == "mlp" else 0.05,
+        stream=stream_cfg)
     loss_fn = functools.partial(paper_nets.loss_fn, spec=mspec)
     eval_fn = functools.partial(paper_nets.accuracy, spec=mspec)
 

@@ -21,10 +21,13 @@ inner solve a pluggable component instead of a hard-coded call:
   projection -> cosine-lr step -> simplex projection -> objective
   tracking for the whole descent (interpret-mode on CPU, compiled on
   TPU).
+* :class:`ImportanceWeighted` — the Ren et al.-style objective: per-device
+  energy priced by gradient importance x channel cost
+  (:func:`importance_weights`), solved with the same tangent PGD.
 
-New objectives (e.g. importance-weighted energy pricing) plug in via
-:func:`register` without touching any scheduling policy; policies pick
-an implementation by name through ``SchedulerConfig.allocator``.
+New objectives plug in via :func:`register` without touching any
+scheduling policy; policies pick an implementation by name through
+``SchedulerConfig.allocator``.
 """
 
 from __future__ import annotations
@@ -49,11 +52,15 @@ class Allocator(Protocol):
 
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
-              alpha0: Optional[Array] = None) -> tuple[Array, Array]:
+              alpha0: Optional[Array] = None,
+              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
         """Return (alpha, objective) for the given selection.
 
         ``alpha0`` optionally warm-starts the solver with the caller's
         previous allocation; implementations must accept ``None``.
+        ``data_sizes`` is the per-device |D_k| the policies already hold
+        — data-aware objectives (``ImportanceWeighted``) consume it;
+        plain time/energy objectives ignore it.
         """
         ...
 
@@ -68,7 +75,9 @@ class WaterFilling:
 
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
-              alpha0: Optional[Array] = None) -> tuple[Array, Array]:
+              alpha0: Optional[Array] = None,
+              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+        del data_sizes
         alpha, _ = bw.min_time_allocation(selected, t_train, gains,
                                           tx_power, cfg, self.params,
                                           alpha0=alpha0)
@@ -85,7 +94,9 @@ class PGD:
 
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
-              alpha0: Optional[Array] = None) -> tuple[Array, Array]:
+              alpha0: Optional[Array] = None,
+              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+        del data_sizes
         return bw.pgd_allocation(selected, t_train, gains, tx_power, cfg,
                                  self.params, alpha0=alpha0)
 
@@ -105,7 +116,9 @@ class FusedPGD:
 
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
-              alpha0: Optional[Array] = None) -> tuple[Array, Array]:
+              alpha0: Optional[Array] = None,
+              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+        del data_sizes
         from repro.kernels import ops as kernel_ops
         mask = (selected > 0.0).astype(jnp.float32)
         n_act = jnp.maximum(jnp.sum(mask), 1.0)
@@ -121,6 +134,71 @@ class FusedPGD:
             bandwidth_hz=cfg.bandwidth_hz, noise_psd=cfg.noise_psd,
             model_bits=cfg.model_bits, min_alpha=cfg.min_alpha,
             interpret=self.interpret)
+
+
+def importance_weights(selected: Array, t_train: Array, gains: Array,
+                       tx_power: Array, cfg: wireless.WirelessConfig,
+                       beta: float = 1.0,
+                       data_sizes: Optional[Array] = None) -> Array:
+    """Per-device energy prices w_k: gradient-importance x channel pricing.
+
+    Gradient importance follows FedAvg's own weighting: the aggregate
+    update weights device k by ``|D_k|``, so a device carrying more of
+    the round's data carries more of the aggregate gradient (the Ren et
+    al. reading) — ``data_sizes`` is that |D_k|, passed through from the
+    policies.  When a caller outside the scheduling stack omits it, the
+    workload time ``t_train`` stands in (proportional to ``|D_k| * C_k /
+    f_k``, i.e. data share confounded with hardware speed — acceptable
+    for a fallback, not for the primary path).  Channel pricing divides
+    by the device's spectral efficiency at full band: a weak channel
+    pays more energy per uploaded bit, so its energy term is priced up
+    and the solver compensates with bandwidth.  Both factors are
+    normalized to mean 1 over the selected set, exponentiated by
+    ``beta`` and clipped, so ``beta = 0`` recovers the unweighted
+    objective exactly and the weights stay O(1).
+    """
+    mask = (selected > 0.0).astype(jnp.float32)
+    n_act = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+
+    def mean_norm(v):
+        m = jnp.sum(v * mask, axis=-1, keepdims=True) / n_act
+        return v / jnp.maximum(m, 1e-12)
+
+    volume = t_train if data_sizes is None \
+        else data_sizes.astype(jnp.float32)
+    imp = mean_norm(volume)
+    snr_full = gains * tx_power / (cfg.bandwidth_hz * cfg.noise_psd)
+    spectral_eff = jnp.log1p(snr_full)
+    price = 1.0 / jnp.maximum(mean_norm(spectral_eff), 1e-6)
+    w = jnp.clip((imp * price) ** beta, 0.05, 20.0)
+    return jnp.where(mask > 0.0, w, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ImportanceWeighted:
+    """Importance-weighted Sub2 objective (Ren et al. / Taik et al. style).
+
+    Solves ``min rho * sum_k w_k E_k + (1-rho) T`` with per-device energy
+    prices ``w_k`` from :func:`importance_weights` — devices whose updates
+    matter more (larger workload share) or whose channels are costlier
+    are priced up, pulling bandwidth toward them relative to the plain
+    ``pgd`` objective.  Same tangent-PGD machinery as :class:`PGD`
+    (``bandwidth.pgd_allocation`` with ``energy_weights``), so it keeps
+    the feasibility and scan/vmap-safety invariants.
+    """
+
+    params: bw.Sub2Params = bw.Sub2Params()
+    beta: float = 1.0
+
+    def solve(self, selected: Array, t_train: Array, gains: Array,
+              tx_power: Array, cfg: wireless.WirelessConfig,
+              alpha0: Optional[Array] = None,
+              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+        w = importance_weights(selected, t_train, gains, tx_power, cfg,
+                               self.beta, data_sizes=data_sizes)
+        return bw.pgd_allocation(selected, t_train, gains, tx_power, cfg,
+                                 self.params, alpha0=alpha0,
+                                 energy_weights=w)
 
 
 _REGISTRY: Dict[str, Callable[[bw.Sub2Params], Allocator]] = {}
@@ -151,3 +229,4 @@ def get(name: str, params: bw.Sub2Params = bw.Sub2Params()) -> Allocator:
 register("waterfilling", WaterFilling)
 register("pgd", PGD)
 register("fused_pgd", FusedPGD)
+register("importance", ImportanceWeighted)

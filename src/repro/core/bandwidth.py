@@ -352,11 +352,22 @@ def project_simplex(v: Array, mask: Array, radius: float = 1.0) -> Array:
 def sub2_objective(alpha: Array, selected: Array, t_train: Array,
                    gains: Array, tx_power: Array,
                    cfg: wireless.WirelessConfig, rho: float,
-                   smooth_tau: float = 0.0) -> Array:
-    """rho * sum E_k + (1-rho) * T (Eq. 15a); optionally smoothed max."""
+                   smooth_tau: float = 0.0,
+                   energy_weights: Array | None = None) -> Array:
+    """rho * sum w_k E_k + (1-rho) * T (Eq. 15a); optionally smoothed max.
+
+    ``energy_weights`` (default: all ones) prices each device's energy
+    term — the hook the importance-weighted allocator
+    (``allocator.ImportanceWeighted``) uses to bias bandwidth toward
+    devices whose updates matter more (Ren et al.-style pricing).  The
+    realized physical energy is unchanged; only the optimization
+    trade-off moves.
+    """
     t_up = wireless.upload_time(alpha, gains, tx_power, cfg)
     t_up = jnp.where(selected > 0.0, t_up, 0.0)
     energy = jnp.where(selected > 0.0, tx_power * t_up, 0.0)
+    if energy_weights is not None:
+        energy = energy * energy_weights
     total = jnp.where(selected > 0.0, t_train + t_up, 0.0)
     if smooth_tau > 0.0:
         t_round = smooth_tau * jax.nn.logsumexp(total / smooth_tau)
@@ -368,7 +379,9 @@ def sub2_objective(alpha: Array, selected: Array, t_train: Array,
 def pgd_allocation(selected: Array, t_train: Array, gains: Array,
                    tx_power: Array, cfg: wireless.WirelessConfig,
                    params: Sub2Params = Sub2Params(),
-                   alpha0: Array | None = None) -> tuple[Array, Array]:
+                   alpha0: Array | None = None,
+                   energy_weights: Array | None = None
+                   ) -> tuple[Array, Array]:
     """Solve Sub2 for general rho by tangent-space projected gradient.
 
     Two starting points — min-time water-filling (optimal for rho=0) and
@@ -379,19 +392,23 @@ def pgd_allocation(selected: Array, t_train: Array, gains: Array,
     (e.g. the previous DAS iteration's allocation) warm-starts the
     water-filling solve's Newton carry only — the two descent basins are
     kept distinct on purpose, so the best-of-two safeguard still
-    explores the uniform basin on every call.  Returns
-    (alpha, objective).
+    explores the uniform basin on every call.  ``energy_weights``
+    reprices per-device energy in the objective (importance-weighted
+    allocator); the water-filling start ignores it (it is the rho -> 0
+    limit, where the energy term vanishes).  Returns (alpha, objective).
     """
     mask = (selected > 0.0).astype(jnp.float32)
     n_act = jnp.maximum(jnp.sum(mask), 1.0)
 
     def exact_obj(a):
         return sub2_objective(a, selected, t_train, gains, tx_power, cfg,
-                              params.rho, smooth_tau=0.0)
+                              params.rho, smooth_tau=0.0,
+                              energy_weights=energy_weights)
 
     grad_fn = jax.grad(
         lambda a: sub2_objective(a, selected, t_train, gains, tx_power, cfg,
-                                 params.rho, params.smooth_tau))
+                                 params.rho, params.smooth_tau,
+                                 energy_weights=energy_weights))
 
     def descend(alpha0):
         alpha0 = project_simplex(alpha0, mask)

@@ -147,6 +147,49 @@ def age_priority(ages: Array) -> Array:
     return jnp.log1p(ages.astype(jnp.float32))
 
 
+def diversity_index_from_stats(
+    *,
+    div: Array,
+    data_sizes: Array,
+    ages: Array,
+    weights: IndexWeights = IndexWeights(),
+) -> Array:
+    """Incremental form of :func:`diversity_index` (Eq. 4).
+
+    Consumes an *already-computed* per-device diversity measure instead of
+    raw label histograms — the streaming subsystem's round path
+    (``core.streaming``), where ``ops.stream_update`` refreshes the
+    class-count matrix and emits ``(gini, shannon, size)`` in one fused
+    pass, feeds those stats straight in here without re-touching the
+    ``(K, C)`` counts.
+
+    Args:
+      div:        (K,) diversity measure values (Gini-Simpson or Shannon).
+      data_sizes: (K,) |D_k| sample counts (float counts are fine).
+      ages:       (K,) rounds since last selection.
+      weights:    gamma_i.
+
+    Returns: (K,) index values in [0, sum_i gamma_i].
+    """
+    terms: Mapping[str, Array] = {
+        "diversity": normalize_metric(div) * weights.diversity,
+        "size": normalize_metric(data_sizes.astype(jnp.float32))
+                * weights.size,
+        "age": normalize_metric(age_priority(ages)) * weights.age,
+    }
+    return terms["diversity"] + terms["size"] + terms["age"]
+
+
+def diversity_measure(label_hists: Array, measure: str) -> Array:
+    """(…, C) histograms -> (…,) diversity values for the named measure."""
+    probs = class_probs(label_hists)
+    if measure == "gini_simpson":
+        return gini_simpson(probs)
+    if measure == "shannon":
+        return shannon_entropy(probs)
+    raise ValueError(f"unknown diversity measure: {measure!r}")
+
+
 def diversity_index(
     *,
     label_hists: Array,
@@ -170,17 +213,6 @@ def diversity_index(
     scenario axis in front of each argument — ``(S, K, C)`` / ``(S, K)``
     — yields per-scenario indices ``(S, K)`` without a vmap.
     """
-    probs = class_probs(label_hists)
-    if measure == "gini_simpson":
-        div = gini_simpson(probs)
-    elif measure == "shannon":
-        div = shannon_entropy(probs)
-    else:
-        raise ValueError(f"unknown diversity measure: {measure!r}")
-    terms: Mapping[str, Array] = {
-        "diversity": normalize_metric(div) * weights.diversity,
-        "size": normalize_metric(data_sizes.astype(jnp.float32))
-                * weights.size,
-        "age": normalize_metric(age_priority(ages)) * weights.age,
-    }
-    return terms["diversity"] + terms["size"] + terms["age"]
+    div = diversity_measure(label_hists, measure)
+    return diversity_index_from_stats(div=div, data_sizes=data_sizes,
+                                      ages=ages, weights=weights)

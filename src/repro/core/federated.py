@@ -38,19 +38,26 @@ Drivers (DESIGN.md §3):
 The client axis is shardable: on a pod, ``client_batch_spec`` places
 clients over the ``data`` mesh axis so K local trainings run as one SPMD
 program — the cross-silo mapping described in DESIGN.md §3.
+
+Streaming data (``FLConfig.stream``, DESIGN.md §7): when set, a
+:class:`repro.core.streaming.StreamState` joins the scan carry — each
+round samples data arrivals, refreshes per-device class counts /
+diversity stats / staleness in one fused pass, and schedules + trains on
+the refreshed statistics.  Both drivers and the legacy loop share the
+sequence, so every parity contract above extends to streaming runs.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, List, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import diversity, scheduler, wireless
+from repro.core import diversity, scheduler, streaming, wireless
 from repro.data import partition as partition_lib
 from repro.data import synthetic
 
@@ -69,6 +76,11 @@ class FLConfig:
     measure: str = "gini_simpson"
     index_weights: diversity.IndexWeights = diversity.IndexWeights()
     use_kernel_agg: bool = False          # route FedAvg through Pallas
+    # Streaming-data subsystem (DESIGN.md §7): when set, per-device data
+    # evolves round by round inside the scan carry and the scheduler
+    # re-ranks on the refreshed statistics.  None = static data,
+    # bit-for-bit the pre-streaming behavior.
+    stream: Optional[streaming.StreamConfig] = None
 
 
 @dataclasses.dataclass
@@ -248,6 +260,60 @@ def _eval_mask(num_rounds: int, eval_every: int) -> np.ndarray:
     return mask
 
 
+def _stream_size_cap(stream: streaming.StreamConfig, capacity: int) -> float:
+    """Effective per-device count cap for a streaming run.
+
+    Streamed sizes drive the local step counts and FedAvg weights, so
+    they must stay within the padded sample buffers; the configured cap
+    (if any) is additionally clipped to the physical capacity.
+    """
+    if stream.size_cap <= 0.0:
+        return float(capacity)
+    return min(float(stream.size_cap), float(capacity))
+
+
+def _stream_setup(fcfg: FLConfig, capacity: int):
+    """(process, size_cap, stats column of ``fcfg.measure``).
+
+    Shared by the scan driver and the legacy loop so their streaming
+    setup cannot drift apart (the parity contract depends on it).
+    """
+    process = streaming.get_process(fcfg.stream.process)
+    size_cap = _stream_size_cap(fcfg.stream, capacity)
+    if fcfg.measure not in ("gini_simpson", "shannon"):
+        raise ValueError(f"unknown diversity measure: {fcfg.measure!r}")
+    return process, size_cap, 0 if fcfg.measure == "gini_simpson" else 1
+
+
+def _stream_round(process, fcfg: FLConfig, size_cap: float,
+                  measure_col: int, k_arr: Array,
+                  st: streaming.StreamState, ages: Array):
+    """One round's data evolution: sample -> fused refresh -> index.
+
+    Returns ``(index, sizes, staleness, refreshed hists, state)``.  The
+    single definition of the streaming round sequence — the scan body
+    and the legacy loop both call it, so the bit-for-bit parity between
+    them cannot be broken by editing one copy.
+    """
+    deltas, arrivals, st = process.sample(k_arr, st, fcfg.stream)
+    hists_r, stats, stale = streaming.refresh(
+        st.hists, deltas, arrivals, st.staleness, st.selected_prev,
+        fcfg.stream, size_cap=size_cap)
+    sizes_r = stats[..., 2]
+    index = diversity.diversity_index_from_stats(
+        div=stats[..., measure_col], data_sizes=sizes_r, ages=ages,
+        weights=fcfg.index_weights)
+    return index, sizes_r, stale, hists_r, st
+
+
+def _stream_advance(st: streaming.StreamState, hists_r: Array,
+                    stale: Array, selected: Array) -> streaming.StreamState:
+    """Post-decision carry update (driver-owned StreamState fields)."""
+    return dataclasses.replace(st, hists=hists_r, staleness=stale,
+                               selected_prev=selected,
+                               round=st.round + 1)
+
+
 def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
               capacity: int, eval_every: int) -> Callable:
     """Build the traceable whole-simulation function (no jit applied).
@@ -259,30 +325,52 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
     stride via ``lax.cond`` on a per-round flag carried as scan inputs —
     the flag is un-batched under the scenario vmap, so skipped rounds
     skip the eval computation in the batched program too.
+
+    With ``fcfg.stream`` set, the scan carry additionally holds a
+    :class:`streaming.StreamState`: each round samples count deltas from
+    the arrival process, refreshes the class-count matrix / diversity
+    stats / staleness in one fused pass (``streaming.refresh``), and
+    feeds the *refreshed* sizes and index — plus the staleness signal —
+    into scheduling and training (DESIGN.md §7).
     """
     trainer = make_local_trainer(loss_fn, fcfg)
     max_steps = _max_local_steps(fcfg, capacity)
     sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
     do_eval = jnp.asarray(_eval_mask(fcfg.num_rounds, eval_every))
+    stream = fcfg.stream
+    if stream is not None:
+        process, size_cap, measure_col = _stream_setup(fcfg, capacity)
 
     def sim(params: Params, images: Array, labels: Array, mask: Array,
             sizes: Array, hists: Array, test_x: Array, test_labels: Array,
             net: wireless.NetworkState, key: Array
             ) -> Tuple[Params, RoundMetrics]:
         k_dev = sizes.shape[0]
+        if stream is not None:
+            key, k_init = jax.random.split(key)
+            state0 = process.init(k_init, hists, stream)
 
         def body(carry, do_ev):
-            params, ages, key = carry
-            key, k_fade, k_sched, k_train = jax.random.split(key, 4)
-            index = diversity.diversity_index(
-                label_hists=hists, data_sizes=sizes, ages=ages,
-                weights=fcfg.index_weights, measure=fcfg.measure)
+            if stream is None:
+                params, ages, key = carry
+                key, k_fade, k_sched, k_train = jax.random.split(key, 4)
+                index = diversity.diversity_index(
+                    label_hists=hists, data_sizes=sizes, ages=ages,
+                    weights=fcfg.index_weights, measure=fcfg.measure)
+                sizes_r, stale = sizes, None
+            else:
+                params, ages, key, st = carry
+                key, k_fade, k_sched, k_train, k_arr = jax.random.split(
+                    key, 5)
+                index, sizes_r, stale, hists_r, st = _stream_round(
+                    process, fcfg, size_cap, measure_col, k_arr, st, ages)
             gains = wireless.sample_fading(k_fade, net)
-            result = scheduler.schedule_impl(k_sched, index, ages, sizes,
-                                             gains, net, wcfg, sch)
+            result = scheduler.schedule_impl(k_sched, index, ages, sizes_r,
+                                             gains, net, wcfg, sch,
+                                             staleness=stale)
             selected = result.selected
             params = _train_round(trainer, max_steps, fcfg, params, images,
-                                  labels, mask, sizes, selected, k_train)
+                                  labels, mask, sizes_r, selected, k_train)
             ages = jnp.where(selected > 0.0, 0, ages + 1)
             acc = jax.lax.cond(
                 do_ev,
@@ -299,12 +387,16 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 selected=selected,
                 iterations=result.iterations,
             )
-            return (params, ages, key), met
+            if stream is None:
+                return (params, ages, key), met
+            st = _stream_advance(st, hists_r, stale, selected)
+            return (params, ages, key, st), met
 
         ages0 = jnp.zeros((k_dev,), jnp.int32)
-        (params, _, _), metrics = jax.lax.scan(
-            body, (params, ages0, key), do_eval)
-        return params, metrics
+        carry0 = (params, ages0, key) if stream is None \
+            else (params, ages0, key, state0)
+        out_carry, metrics = jax.lax.scan(body, carry0, do_eval)
+        return out_carry[0], metrics
 
     return sim
 
@@ -330,6 +422,18 @@ def make_feel_sim(*, loss_fn: Callable, eval_fn: Callable,
     return jax.jit(sim, donate_argnums=(0,) if donate_params else ())
 
 
+def tile_params(params: Params, num_scenarios: int) -> Params:
+    """Stack ``num_scenarios`` copies of ``params`` along a new axis 0.
+
+    Produces the fresh ``(S, ...)`` buffers the donating batch driver
+    consumes (see :func:`make_feel_sim_batch`): the caller's original
+    params stay untouched, and the tiled copies are safe to hand over.
+    """
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (num_scenarios,) + a.shape),
+        params)
+
+
 def make_feel_sim_batch(*, loss_fn: Callable, eval_fn: Callable,
                         wcfg: wireless.WirelessConfig,
                         scfg: scheduler.SchedulerConfig, fcfg: FLConfig,
@@ -339,14 +443,22 @@ def make_feel_sim_batch(*, loss_fn: Callable, eval_fn: Callable,
 
     Dataset and initial params broadcast; each scenario sees its own
     network realization and PRNG stream — the paper's Monte-Carlo
-    averaging (Figs. 2-6) as one SPMD program.  ``donate_params`` as in
-    :func:`make_feel_sim` (the broadcast input may be declined when the
-    stacked (S, ...) output cannot alias it — still safe, just a
-    warning).
+    averaging (Figs. 2-6) as one SPMD program.
+
+    ``donate_params=True`` changes the params contract: pass leaves with
+    a leading ``(S,)`` axis (:func:`tile_params`) and they are donated
+    into the vmapped scan carry.  A *broadcast* input cannot be donated
+    — XLA declines aliasing a ``(P,)`` buffer against the stacked
+    ``(S, P)`` carry/output and silently copies — whereas the pre-tiled
+    buffer is exactly the carry's shape, so the donation is actually
+    usable (asserted in ``tests/test_federated.py``).  The batched carry
+    materializes either way; donating it avoids holding a second copy
+    across the whole scan.
     """
     sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
                     eval_every)
-    vsim = jax.vmap(sim, in_axes=(None, None, None, None, None,
+    vsim = jax.vmap(sim, in_axes=(0 if donate_params else None,
+                                  None, None, None, None,
                                   None, None, None, 0, 0))
     return jax.jit(vsim, donate_argnums=(0,) if donate_params else ())
 
@@ -458,8 +570,10 @@ def run_federated_batch(
       nets: stacked :class:`wireless.NetworkState` with leading ``(S,)``
         leaf axis (see :func:`wireless.sample_networks`).
       keys: ``(S,)`` PRNG keys, one stream per scenario.
-      donate_params: donate ``init_params`` to the compiled sim (see
-        :func:`make_feel_sim_batch`).
+      donate_params: donate the initial params into the vmapped scan
+        carry.  The caller's ``init_params`` stay valid: fresh ``(S,
+        ...)`` tiled buffers (:func:`tile_params`) are built here and
+        those are donated (see :func:`make_feel_sim_batch`).
 
     Returns:
       (params, metrics): final params stacked ``(S, ...)`` per leaf and
@@ -472,6 +586,8 @@ def run_federated_batch(
                               donate_params=donate_params)
     hists = client_histograms(data, fcfg.num_classes)
     test_x = synthetic.to_float(data.test_images)
+    if donate_params:
+        init_params = tile_params(init_params, keys.shape[0])
     return sim(init_params, data.images, data.labels, data.mask,
                data.sizes, hists, test_x, data.test_labels, nets, keys)
 
@@ -493,10 +609,18 @@ def run_federated_loop(
 
     Dispatches two jits and forces several host syncs per round; kept for
     the scan-parity tests and the ``fl_e2e`` old-vs-new benchmark.
+    Honors ``fcfg.stream`` with the same per-round sequence (and key
+    splits) as the scan driver, so streaming runs stay bit-for-bit
+    comparable (``tests/test_streaming.py``).
     """
     k_dev = data.num_devices
     round_fn = make_round_fn(loss_fn, fcfg, data.capacity)
     hists = client_histograms(data, fcfg.num_classes)
+    stream = fcfg.stream
+    if stream is not None:
+        process, size_cap, measure_col = _stream_setup(fcfg, data.capacity)
+        key, k_init = jax.random.split(key)
+        st = process.init(k_init, hists, stream)
 
     ages = jnp.zeros((k_dev,), jnp.int32)
     params = init_params
@@ -504,18 +628,26 @@ def run_federated_loop(
     test_x = synthetic.to_float(data.test_images)
 
     for r in range(fcfg.num_rounds):
-        key, k_fade, k_sched, k_train = jax.random.split(key, 4)
-        index = diversity.diversity_index(
-            label_hists=hists, data_sizes=data.sizes, ages=ages,
-            weights=fcfg.index_weights, measure=fcfg.measure)
+        if stream is None:
+            key, k_fade, k_sched, k_train = jax.random.split(key, 4)
+            index = diversity.diversity_index(
+                label_hists=hists, data_sizes=data.sizes, ages=ages,
+                weights=fcfg.index_weights, measure=fcfg.measure)
+            sizes_r, stale = data.sizes, None
+        else:
+            key, k_fade, k_sched, k_train, k_arr = jax.random.split(key, 5)
+            index, sizes_r, stale, hists_r, st = _stream_round(
+                process, fcfg, size_cap, measure_col, k_arr, st, ages)
         gains = wireless.sample_fading(k_fade, net)
         sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
-        result = scheduler.schedule(k_sched, index, ages, data.sizes,
-                                    gains, net, wcfg, sch)
+        result = scheduler.schedule(k_sched, index, ages, sizes_r,
+                                    gains, net, wcfg, sch, stale)
         selected = result.selected
         params = round_fn(params, data.images, data.labels, data.mask,
-                          data.sizes, selected, k_train)
+                          sizes_r, selected, k_train)
         ages = jnp.where(selected > 0.0, 0, ages + 1)
+        if stream is not None:
+            st = _stream_advance(st, hists_r, stale, selected)
 
         if (r % eval_every) == 0 or r == fcfg.num_rounds - 1:
             acc = float(eval_fn(params, test_x, data.test_labels))

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import allocator as alloc_lib
 from repro.core import bandwidth as bw
+from repro.core import diversity
 from repro.core import selection as sel
 from repro.core import wireless
 
@@ -62,6 +63,12 @@ class SchedulerConfig:
     allocator: str = "pgd"           # Sub2 solver (core.allocator registry)
     x_tol: float = 0.5               # convergence: selection unchanged
     alpha_tol: float = 1e-4          # convergence: allocation stable
+    # Streaming-data hook (DESIGN.md §7): weight gamma_s of the staleness
+    # boost applied to DAS's index and ABS's age priority when the driver
+    # supplies per-device staleness (decayed unseen-arrival mass from
+    # core.streaming).  0 disables the hook — bit-identical to pre-
+    # streaming behavior whether or not staleness is passed.
+    staleness_weight: float = 0.0
     # Alg. 2 under-specifies how Sub1 prices a currently-unselected
     # device's energy.  "strict" uses the current allocation (alpha ~ 0 ->
     # infinite energy -> monotone shrinking selection, the literal
@@ -91,6 +98,24 @@ class ScheduleResult:
     def tree_unflatten(cls, aux, children):
         del aux
         return cls(*children)
+
+
+def staleness_boost(priority: Array, staleness: Optional[Array],
+                    sch: SchedulerConfig) -> Array:
+    """Staleness-aware re-ranking hook (streaming subsystem, DESIGN.md §7).
+
+    Adds ``gamma_s * normalize(log1p(staleness))`` to a selection
+    priority, so devices sitting on a large mass of data the server has
+    not trained on yet rise in the ranking.  Identity when no staleness
+    signal is supplied or the weight is 0 — the static-data round path
+    is untouched.  ``log1p`` matches the age-priority shape (diminishing
+    returns in the backlog); max-normalization keeps the boost on the
+    same [0, gamma_s] scale as the index terms (Eq. 4).
+    """
+    if staleness is None or sch.staleness_weight == 0.0:
+        return priority
+    boost = diversity.normalize_metric(jnp.log1p(staleness))
+    return priority + sch.staleness_weight * boost
 
 
 def _finalize(selected: Array, alpha: Array, t_train: Array, gains: Array,
@@ -159,7 +184,8 @@ def das_schedule(index: Array, data_sizes: Array, gains: Array,
         # Sub2: allocate bandwidth over the new selection, warm-started
         # from the allocation this iteration is refining.
         alpha_new, _ = alloc.solve(x_new, t_train, gains, net.tx_power,
-                                   cfg, alpha0=alpha)
+                                   cfg, alpha0=alpha,
+                                   data_sizes=data_sizes)
         return x_new, alpha_new, x, alpha, it + 1
 
     def cond(carry):
@@ -200,7 +226,8 @@ def topn_schedule(priority: Array, n: int, data_sizes: Array, gains: Array,
     alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     x = _topn_by_priority(priority, n)
-    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg)
+    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg,
+                           data_sizes=data_sizes)
     return _finalize(x, alpha, t_train, gains, net, cfg)
 
 
@@ -208,8 +235,8 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
                  net: wireless.NetworkState, cfg: wireless.WirelessConfig,
                  sch: SchedulerConfig, key: Optional[Array] = None,
                  deadline: Optional[float] = None,
-                 alloc: Optional[alloc_lib.Allocator] = None
-                 ) -> ScheduleResult:
+                 alloc: Optional[alloc_lib.Allocator] = None,
+                 staleness: Optional[Array] = None) -> ScheduleResult:
     """Age-based scheduling (paper §VI baselines, Yang et al. f(k)).
 
     Priority is ``log(1 + age)`` with a small random tiebreak (all-zero
@@ -217,10 +244,14 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
     it is a top-n policy; otherwise devices are admitted greedily in
     priority order while the deadline's minimal bandwidth fits the budget
     — mirroring "collect as many aged updates as fit" from [9, 10].
+    Under streaming data, ``staleness`` re-ranks through
+    :func:`staleness_boost` (model age and data backlog both measure how
+    overdue a device's contribution is).
     """
     alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     priority = jnp.log1p(ages.astype(jnp.float32))
+    priority = staleness_boost(priority, staleness, sch)
     if key is not None:
         priority = priority + 1e-4 * jax.random.uniform(key, priority.shape)
     if sch.n_fixed is not None:
@@ -261,7 +292,8 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
     admit_sorted = (jnp.cumsum(a_budget) <= 1.0) | forced
     x = jnp.zeros_like(priority).at[order].set(
         admit_sorted.astype(jnp.float32))
-    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg)
+    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg,
+                           data_sizes=data_sizes)
     return _finalize(x, alpha, t_train, gains, net, cfg)
 
 
@@ -287,7 +319,8 @@ def full_schedule(data_sizes: Array, gains: Array,
     alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     x = jnp.ones_like(data_sizes, dtype=jnp.float32)
-    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg)
+    alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg,
+                           data_sizes=data_sizes)
     return _finalize(x, alpha, t_train, gains, net, cfg)
 
 
@@ -298,7 +331,8 @@ def full_schedule(data_sizes: Array, gains: Array,
 def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
                   gains: Array, net: wireless.NetworkState,
                   cfg: wireless.WirelessConfig,
-                  sch: SchedulerConfig) -> ScheduleResult:
+                  sch: SchedulerConfig,
+                  staleness: Optional[Array] = None) -> ScheduleResult:
     """Un-jitted :func:`schedule` body.
 
     Call this from code that is already inside a trace — the
@@ -306,17 +340,21 @@ def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
     (``core.federated``) — so the decision inlines into the surrounding
     program instead of nesting a jit call.  The Sub2 allocator is built
     once here (from ``sch.allocator``/``sch.sub2``) and threaded through
-    whichever policy dispatches.
+    whichever policy dispatches.  ``staleness`` (streaming subsystem)
+    re-ranks DAS's index and ABS's age priority via
+    :func:`staleness_boost`; random/full ignore it by design (they are
+    the data-agnostic baselines).
     """
     alloc = alloc_lib.get(sch.allocator, sch.sub2)
     if sch.method == "das":
+        index = staleness_boost(index, staleness, sch)
         if sch.n_fixed is not None:
             return topn_schedule(index, sch.n_fixed, data_sizes, gains, net,
                                  cfg, sch, alloc)
         return das_schedule(index, data_sizes, gains, net, cfg, sch, alloc)
     if sch.method == "abs":
         return abs_schedule(ages, data_sizes, gains, net, cfg, sch, key,
-                            alloc=alloc)
+                            alloc=alloc, staleness=staleness)
     if sch.method == "random":
         return random_schedule(key, data_sizes, gains, net, cfg, sch, alloc)
     if sch.method == "full":
@@ -328,6 +366,8 @@ def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
 def schedule(key: Array, index: Array, ages: Array, data_sizes: Array,
              gains: Array, net: wireless.NetworkState,
              cfg: wireless.WirelessConfig,
-             sch: SchedulerConfig) -> ScheduleResult:
+             sch: SchedulerConfig,
+             staleness: Optional[Array] = None) -> ScheduleResult:
     """Dispatch on ``sch.method``; one jit for the whole round's decision."""
-    return schedule_impl(key, index, ages, data_sizes, gains, net, cfg, sch)
+    return schedule_impl(key, index, ages, data_sizes, gains, net, cfg, sch,
+                         staleness)

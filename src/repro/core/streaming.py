@@ -1,0 +1,337 @@
+"""Streaming-data FEEL subsystem (DESIGN.md §7).
+
+The paper computes the diversity index once from a frozen partition,
+but the data FEEL actually schedules over "depends on the local
+environment and usage pattern" — it drifts while training runs.  This
+module makes every scenario non-stationary: traceable data-arrival
+processes live inside the ``lax.scan`` carry of the FEEL drivers
+(``core.federated``), so per-device dataset sizes and ``(K, C)``
+class-count matrices evolve round by round under jit *and* under the
+scenario ``vmap``, and the scheduler re-ranks on *current* data
+richness instead of the round-0 snapshot (Hu et al. 2305.01238,
+Taik et al. 2201.11247).
+
+Three pieces:
+
+* :class:`StreamConfig` — static process/selection knobs, carried on
+  ``FLConfig.stream`` (``None`` = legacy static-data behavior,
+  bit-for-bit).
+* :class:`StreamState` — the per-round carry: the live class-count
+  matrix, the staleness signal (decayed mass of not-yet-trained-on
+  arrivals), the previous round's selection, and the process-owned
+  fields (arrival affinity/rates, drift class, round counter).  One
+  uniform pytree for every process, so the scan carry structure never
+  depends on which process runs.
+* the **arrival-process protocol** — ``init(key, hists0, cfg) ->
+  StreamState`` and ``sample(key, state, cfg) -> (deltas, arrivals,
+  state)``, both traceable (fixed shapes, no data-dependent Python
+  control flow, §1 invariant).  ``deltas`` is a ``(K, C)`` count
+  change: positive entries are arrivals, negative entries evictions.
+  ``arrivals`` is the ``(K,)`` nonnegative mass of *new* data — the
+  process must report it explicitly because it is not derivable from
+  the net deltas (an eviction can cancel an arrival in the same class,
+  which would silently starve the staleness signal).  Implementations
+  register by name (:func:`register_process`), mirroring the allocator
+  registry, so new workloads plug in without touching the drivers.
+
+Built-in processes: ``static`` (zero deltas — the degenerate check),
+``poisson`` (per-class Poisson arrivals along each device's shard
+affinity), ``drift`` (bursty label drift: all arrivals land on a
+per-device class that re-draws at random rounds), ``shift`` (a global
+class-distribution wave rotating through label space), ``evict``
+(Poisson arrivals + proportional buffer eviction).
+
+The per-round refresh — count-delta accumulation -> diversity-index
+refresh -> staleness decay — is one fused pass (:func:`refresh`):
+the pure-jnp reference ``kernels/ref.py::stream_update`` by default,
+or the Pallas kernel ``kernels/stream_update.py`` with
+``use_kernel=True`` (grid over the scenario lane).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import partition as partition_lib
+from repro.data import synthetic
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static streaming knobs (hashable; rides on ``FLConfig.stream``)."""
+
+    process: str = "poisson"      # arrival-process registry name
+    rate: float = 20.0            # mean arrivals / device / round
+    rate_spread: float = 0.5      # per-device rate heterogeneity (+- frac)
+    mix_uniform: float = 0.1      # affinity floor (partition.arrival_affinity)
+    burst_prob: float = 0.15      # drift: per-round class re-draw prob
+    evict_frac: float = 0.05      # evict: buffer fraction dropped / round
+    shift_period: float = 8.0     # shift: rounds per class-wave step
+    shift_sharpness: float = 2.0  # shift: wave concentration (kappa)
+    staleness_decay: float = 0.8  # lambda: backlog decay per round
+    size_cap: float = 0.0         # per-device count cap (0: buffer capacity)
+    use_kernel: bool = False      # refresh via the Pallas stream_update
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StreamState:
+    """Scan-carried streaming state (leaves gain an (S,) axis under vmap).
+
+    ``hists``/``staleness``/``selected_prev`` are driver-owned (updated
+    by :func:`refresh` + the round's scheduling decision); ``affinity``/
+    ``rates``/``drift_class``/``round`` belong to the arrival process.
+    """
+
+    hists: Array          # (K, C) live class-count matrix
+    staleness: Array      # (K,)   decayed not-yet-trained-on arrival mass
+    selected_prev: Array  # (K,)   previous round's selection {0,1}
+    round: Array          # ()     int32 rounds elapsed
+    affinity: Array       # (K, C) arrival class distribution
+    rates: Array          # (K,)   mean arrivals / round
+    drift_class: Array    # (K,)   int32 current drift class
+
+    def tree_flatten(self):
+        return ((self.hists, self.staleness, self.selected_prev,
+                 self.round, self.affinity, self.rates,
+                 self.drift_class), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def base_state(hists0: Array, affinity: Array | None = None,
+               rates: Array | None = None,
+               drift_class: Array | None = None) -> StreamState:
+    """Fresh :class:`StreamState` around the round-0 histograms.
+
+    Helper for process ``init`` implementations (including custom test
+    processes): fills driver-owned fields with their zero start and
+    process fields with inert defaults unless given.
+    """
+    hists0 = hists0.astype(jnp.float32)
+    zeros_k = jnp.zeros(hists0.shape[:-1], jnp.float32)
+    if affinity is None:
+        affinity = jnp.full_like(hists0, 1.0 / hists0.shape[-1])
+    if rates is None:
+        rates = zeros_k
+    if drift_class is None:
+        drift_class = jnp.zeros(hists0.shape[:-1], jnp.int32)
+    return StreamState(hists=hists0, staleness=zeros_k,
+                       selected_prev=zeros_k,
+                       round=jnp.zeros((), jnp.int32),
+                       affinity=affinity, rates=rates,
+                       drift_class=drift_class)
+
+
+@runtime_checkable
+class ArrivalProcess(Protocol):
+    """The arrival-process protocol consumed by the FEEL drivers."""
+
+    def init(self, key: Array, hists0: Array,
+             cfg: StreamConfig) -> StreamState:
+        """Build the round-0 carry from the initial histograms."""
+        ...
+
+    def sample(self, key: Array, state: StreamState,
+               cfg: StreamConfig
+               ) -> Tuple[Array, Array, StreamState]:
+        """One round's ``(K, C)`` count deltas, the ``(K,)`` nonnegative
+        arrival mass, and the updated process fields.
+
+        Must not touch the driver-owned fields (``hists``,
+        ``staleness``, ``selected_prev``) — :func:`refresh` and the
+        scheduling decision own those.
+        """
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Static:
+    """Zero deltas: streaming plumbing on, data frozen (parity checks)."""
+
+    def init(self, key: Array, hists0: Array,
+             cfg: StreamConfig) -> StreamState:
+        del key
+        return base_state(hists0)
+
+    def sample(self, key: Array, state: StreamState,
+               cfg: StreamConfig) -> Tuple[Array, Array, StreamState]:
+        del key, cfg
+        return (jnp.zeros_like(state.hists),
+                jnp.zeros_like(state.rates), state)
+
+
+def _rates_and_affinity(key: Array, hists0: Array,
+                        cfg: StreamConfig) -> Tuple[Array, Array]:
+    rates = synthetic.sample_arrival_rates(key, hists0.shape[-2],
+                                           cfg.rate, cfg.rate_spread)
+    affinity = partition_lib.arrival_affinity(hists0, cfg.mix_uniform)
+    return rates, affinity
+
+
+@dataclasses.dataclass(frozen=True)
+class Poisson:
+    """Per-class Poisson arrivals along each device's shard affinity."""
+
+    def init(self, key: Array, hists0: Array,
+             cfg: StreamConfig) -> StreamState:
+        rates, affinity = _rates_and_affinity(key, hists0, cfg)
+        return base_state(hists0, affinity=affinity, rates=rates)
+
+    def sample(self, key: Array, state: StreamState,
+               cfg: StreamConfig) -> Tuple[Array, Array, StreamState]:
+        del cfg
+        lam = state.rates[..., None] * state.affinity
+        deltas = jax.random.poisson(key, lam).astype(jnp.float32)
+        return deltas, jnp.sum(deltas, axis=-1), state
+
+
+@dataclasses.dataclass(frozen=True)
+class Drift:
+    """Bursty label drift: arrivals pile onto one per-device class that
+    re-draws uniformly with probability ``burst_prob`` each round —
+    a device's environment snaps to a new mode, not a smooth blend."""
+
+    def init(self, key: Array, hists0: Array,
+             cfg: StreamConfig) -> StreamState:
+        # No affinity: arrivals land on the drift class, nothing else.
+        rates = synthetic.sample_arrival_rates(key, hists0.shape[-2],
+                                               cfg.rate, cfg.rate_spread)
+        drift_class = jnp.argmax(hists0, axis=-1).astype(jnp.int32)
+        return base_state(hists0, rates=rates, drift_class=drift_class)
+
+    def sample(self, key: Array, state: StreamState,
+               cfg: StreamConfig) -> Tuple[Array, Array, StreamState]:
+        k_burst, k_class, k_count = jax.random.split(key, 3)
+        num_classes = state.hists.shape[-1]
+        shape = state.drift_class.shape
+        redraw = jax.random.bernoulli(k_burst, cfg.burst_prob, shape)
+        fresh = jax.random.randint(k_class, shape, 0, num_classes,
+                                   jnp.int32)
+        drift_class = jnp.where(redraw, fresh, state.drift_class)
+        counts = jax.random.poisson(k_count,
+                                    state.rates).astype(jnp.float32)
+        onehot = jax.nn.one_hot(drift_class, num_classes,
+                                dtype=jnp.float32)
+        deltas = counts[..., None] * onehot
+        return deltas, counts, dataclasses.replace(
+            state, drift_class=drift_class)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shift:
+    """Global class-distribution shift: a von-Mises-style wave rotates
+    through label space, advancing one class every ``shift_period``
+    rounds — every device's arrivals follow the same moving mixture."""
+
+    def init(self, key: Array, hists0: Array,
+             cfg: StreamConfig) -> StreamState:
+        # No affinity: every device's arrivals follow the global wave.
+        rates = synthetic.sample_arrival_rates(key, hists0.shape[-2],
+                                               cfg.rate, cfg.rate_spread)
+        return base_state(hists0, rates=rates)
+
+    def sample(self, key: Array, state: StreamState,
+               cfg: StreamConfig) -> Tuple[Array, Array, StreamState]:
+        num_classes = state.hists.shape[-1]
+        classes = jnp.arange(num_classes, dtype=jnp.float32)
+        centre = state.round.astype(jnp.float32) / cfg.shift_period
+        phase = 2.0 * jnp.pi * (classes - centre) / num_classes
+        wave = jax.nn.softmax(cfg.shift_sharpness * jnp.cos(phase))
+        lam = state.rates[..., None] * wave
+        deltas = jax.random.poisson(key, lam).astype(jnp.float32)
+        return deltas, jnp.sum(deltas, axis=-1), state
+
+
+@dataclasses.dataclass(frozen=True)
+class Evict:
+    """Poisson arrivals + proportional buffer eviction: each round a
+    fraction ``evict_frac`` of the held counts ages out, so the live
+    distribution chases the arrival distribution."""
+
+    def init(self, key: Array, hists0: Array,
+             cfg: StreamConfig) -> StreamState:
+        rates, affinity = _rates_and_affinity(key, hists0, cfg)
+        return base_state(hists0, affinity=affinity, rates=rates)
+
+    def sample(self, key: Array, state: StreamState,
+               cfg: StreamConfig) -> Tuple[Array, Array, StreamState]:
+        lam = state.rates[..., None] * state.affinity
+        arrived = jax.random.poisson(key, lam).astype(jnp.float32)
+        deltas = arrived - cfg.evict_frac * state.hists
+        # Arrival mass is the raw arrivals, NOT the positive net deltas:
+        # under heavy eviction the per-class netting cancels arrivals,
+        # but the device's distribution is still turning over — its
+        # staleness must keep accumulating.
+        return deltas, jnp.sum(arrived, axis=-1), state
+
+
+_PROCESSES: Dict[str, Callable[[], ArrivalProcess]] = {}
+
+
+def register_process(name: str, factory: Callable[[], ArrivalProcess],
+                     overwrite: bool = False) -> None:
+    """Register an arrival-process factory (zero-arg -> process)."""
+    if name in _PROCESSES and not overwrite:
+        raise ValueError(f"arrival process {name!r} already registered")
+    _PROCESSES[name] = factory
+
+
+def process_names() -> tuple[str, ...]:
+    return tuple(sorted(_PROCESSES))
+
+
+def get_process(name: str) -> ArrivalProcess:
+    """Build the named arrival process."""
+    try:
+        factory = _PROCESSES[name]
+    except KeyError:
+        raise ValueError(f"unknown arrival process {name!r}; registered: "
+                         f"{process_names()}") from None
+    return factory()
+
+
+register_process("static", Static)
+register_process("poisson", Poisson)
+register_process("drift", Drift)
+register_process("shift", Shift)
+register_process("evict", Evict)
+
+
+def refresh(hists: Array, deltas: Array, arrivals: Array,
+            staleness: Array, selected_prev: Array, cfg: StreamConfig,
+            size_cap: float | None = None,
+            interpret: bool | None = None
+            ) -> Tuple[Array, Array, Array]:
+    """One round's fused data refresh: ``(hists', stats, staleness')``.
+
+    ``stats`` packs ``[gini, shannon, size]`` per device — the inputs of
+    ``diversity.diversity_index_from_stats``; ``arrivals`` is the
+    process-reported ``(K,)`` arrival mass feeding the staleness carry.
+    Dispatches to the Pallas ``stream_update`` kernel when
+    ``cfg.use_kernel`` (grid over the scenario lane), else to the
+    pure-jnp reference — the same function that serves as the kernel's
+    property-test oracle, so both paths share one contract
+    (``kernels/ref.py::stream_update``).  ``size_cap`` overrides
+    ``cfg.size_cap`` (the drivers pass the padded-buffer capacity so the
+    training workload stays within the physical sample buffers).
+    """
+    cap = cfg.size_cap if size_cap is None else size_cap
+    if cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.stream_update(
+            hists, deltas, arrivals, staleness, selected_prev,
+            decay=cfg.staleness_decay, size_cap=cap, interpret=interpret)
+    from repro.kernels import ref as kernel_ref
+    return kernel_ref.stream_update(
+        hists, deltas, arrivals, staleness, selected_prev,
+        decay=cfg.staleness_decay, size_cap=cap)

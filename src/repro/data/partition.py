@@ -53,6 +53,30 @@ class ClientDataset:
         return self.images.shape[1]
 
 
+def arrival_affinity(label_hists: jnp.ndarray,
+                     mix_uniform: float = 0.1) -> jnp.ndarray:
+    """Per-device arrival class distribution for the streaming subsystem.
+
+    A device keeps receiving data shaped like its shard partition — the
+    paper's "depends on the local environment and usage pattern" — so the
+    affinity is its initial class profile, floored by a uniform mixture
+    so every class stays reachable (pure single-shard devices would
+    otherwise never diversify and the drift processes would be inert).
+
+    Args:
+      label_hists: (…, K, C) initial class-count histograms.
+      mix_uniform: weight of the uniform component in [0, 1].
+
+    Returns: (…, K, C) rows summing to 1.
+    """
+    h = label_hists.astype(jnp.float32)
+    num_classes = h.shape[-1]
+    total = jnp.sum(h, axis=-1, keepdims=True)
+    base = jnp.where(total > 0.0, h / jnp.maximum(total, 1.0),
+                     1.0 / num_classes)
+    return (1.0 - mix_uniform) * base + mix_uniform / num_classes
+
+
 def draw_shard_counts(rng: np.random.Generator,
                       spec: PartitionSpec) -> np.ndarray:
     """Per-device shard counts, U[min,max] rescaled to fit the shard pool."""

@@ -95,3 +95,18 @@ def generate(seed: int, samples_per_class: int,
 def to_float(images: Array) -> Array:
     """uint8 -> float32 in [0, 1]."""
     return images.astype(jnp.float32) / 255.0
+
+
+def sample_arrival_rates(key: Array, num_devices: int, rate: float,
+                         spread: float = 0.5) -> Array:
+    """Per-device mean arrivals/round for the streaming subsystem.
+
+    ``rate * U[1 - spread, 1 + spread]`` — heterogeneous device activity
+    (a phone in heavy use collects data faster than an idle one) around
+    the configured mean, mirroring how the partitioner draws unequal
+    shard counts.  Traceable: the streaming processes call this inside
+    their jitted ``init`` with a per-scenario key.
+    """
+    u = jax.random.uniform(key, (num_devices,),
+                           minval=1.0 - spread, maxval=1.0 + spread)
+    return rate * u

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import diversity as _div
 from repro.kernels import fedavg_agg as _agg
 from repro.kernels import flash_attention as _fa
+from repro.kernels import stream_update as _stream
 from repro.kernels import sub2_pgd as _pgd
 
 
@@ -47,6 +48,54 @@ def fedavg_agg(updates: jax.Array, weights: jax.Array,
     return out[:p] if pad else out
 
 
+# Test/observability hook: counts how many times the batched-lane vmap
+# rule below was traced.  A vmap of the single-instance `sub2_pgd` entry
+# (the batched FEEL driver) is wired straight onto the kernel's (S, K)
+# grid through jax.custom_batching — this counter is how tests assert
+# the direct lane, not Pallas's generic batching rule, handled the map.
+BATCHED_LANE_TRACES = 0
+
+
+@functools.lru_cache(maxsize=32)
+def _sub2_pgd_entry(rho: float, lr: float, tau: float, iters: int,
+                    bandwidth_hz: float, model_bits: float,
+                    min_alpha: float, proj_iters: int, interpret: bool):
+    """Single-instance kernel entry with a custom vmap rule.
+
+    The plain path launches the kernel with a length-1 grid.  Under
+    ``jax.vmap`` (one level — the scenario axis of
+    ``federated.run_federated_batch``), the custom rule broadcasts any
+    unbatched operands and launches the batched ``(S, K)`` grid
+    directly, so the scenario axis maps 1:1 onto kernel grid steps
+    instead of being reconstructed by the generic pallas batching rule.
+    Cached per static-parameter tuple so repeat solves reuse one
+    custom-vmap object (and jax's trace cache).
+    """
+    kern = functools.partial(
+        _pgd.sub2_pgd_kernel, rho=rho, lr=lr, tau=tau, iters=iters,
+        bandwidth_hz=bandwidth_hz, model_bits=model_bits,
+        min_alpha=min_alpha, proj_iters=proj_iters, interpret=interpret)
+
+    @jax.custom_batching.custom_vmap
+    def single(selected, t_train, c, tx_power, alpha0):
+        alpha, obj = kern(selected[None], t_train[None], c[None],
+                          tx_power[None], alpha0[None])
+        return alpha[0], obj[0]
+
+    @single.def_vmap
+    def _batched_lane(axis_size, in_batched, selected, t_train, c,
+                      tx_power, alpha0):
+        global BATCHED_LANE_TRACES
+        BATCHED_LANE_TRACES += 1
+        args = [x if b else jnp.broadcast_to(x, (axis_size,) + x.shape)
+                for x, b in zip((selected, t_train, c, tx_power, alpha0),
+                                in_batched)]
+        alpha, obj = kern(*args)
+        return (alpha, obj), (True, True)
+
+    return single
+
+
 def sub2_pgd(selected: jax.Array, t_train: jax.Array, gains: jax.Array,
              tx_power: jax.Array, alpha0: jax.Array, *, rho: float,
              lr: float, tau: float, iters: int, bandwidth_hz: float,
@@ -61,22 +110,24 @@ def sub2_pgd(selected: jax.Array, t_train: jax.Array, gains: jax.Array,
     scenario lane: (S, K) rows with ``alpha0`` (S, 2, K) -> ((S, K),
     (S,)).  ``alpha0`` stacks the two starting points (water-filling, uniform); gains/power fold into the SNR coefficient
     c = g*P/(B*N0) here so the kernel sees one coefficient row.
+
+    The single-instance entry carries a custom vmap rule: a ``vmap``
+    over it (the batched FEEL driver) launches the (S, K) kernel grid
+    directly (see :func:`_sub2_pgd_entry`).
     """
     interpret = _default_interpret() if interpret is None else interpret
-    batched = selected.ndim == 2
-    if not batched:
-        selected, t_train, gains, tx_power, alpha0 = (
-            x[None] for x in (selected, t_train, gains, tx_power, alpha0))
     c = gains * tx_power / (bandwidth_hz * noise_psd)
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
-    alpha, obj = _pgd.sub2_pgd_kernel(
-        f32(selected), f32(t_train), f32(c), f32(tx_power), f32(alpha0),
-        rho=rho, lr=lr, tau=tau, iters=iters, bandwidth_hz=bandwidth_hz,
-        model_bits=model_bits, min_alpha=min_alpha,
-        proj_iters=proj_iters, interpret=interpret)
-    if not batched:
-        return alpha[0], obj[0]
-    return alpha, obj
+    args = (f32(selected), f32(t_train), f32(c), f32(tx_power), f32(alpha0))
+    if selected.ndim == 2:
+        return _pgd.sub2_pgd_kernel(
+            *args, rho=rho, lr=lr, tau=tau, iters=iters,
+            bandwidth_hz=bandwidth_hz, model_bits=model_bits,
+            min_alpha=min_alpha, proj_iters=proj_iters,
+            interpret=interpret)
+    entry = _sub2_pgd_entry(rho, lr, tau, iters, bandwidth_hz, model_bits,
+                            min_alpha, proj_iters, interpret)
+    return entry(*args)
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "interpret"))
@@ -86,6 +137,40 @@ def diversity_stats(labels: jax.Array, mask: jax.Array, num_classes: int,
     interpret = _default_interpret() if interpret is None else interpret
     return _div.diversity_kernel(labels, mask, num_classes,
                                  interpret=interpret)
+
+
+def stream_update(hists: jax.Array, deltas: jax.Array,
+                  arrivals: jax.Array, staleness: jax.Array,
+                  selected: jax.Array, *,
+                  decay: float, size_cap: float = 0.0,
+                  interpret: bool | None = None
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused streaming refresh (one round of in-scan data evolution).
+
+    Count-delta accumulation -> Gini/Shannon/size refresh -> staleness
+    decay in one launch (``kernels/stream_update.py``; exact contract in
+    ``kernels/ref.py::stream_update``).  Single instance: ``(K, C)``
+    counts/deltas + ``(K,)`` arrivals/staleness/selection.  Batched
+    scenario lane: ``(S, K, C)`` / ``(S, K)`` — the grid runs over S.
+    Not jitted here: the caller is the FEEL round body, which is
+    already tracing.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    batched = hists.ndim == 3
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    hists, deltas, arrivals, staleness, selected = (
+        f32(hists), f32(deltas), f32(arrivals), f32(staleness),
+        f32(selected))
+    if not batched:
+        hists, deltas, arrivals, staleness, selected = (
+            x[None] for x in (hists, deltas, arrivals, staleness,
+                              selected))
+    h, stats, stale = _stream.stream_update_kernel(
+        hists, deltas, arrivals, staleness, selected, decay=decay,
+        size_cap=size_cap, interpret=interpret)
+    if not batched:
+        return h[0], stats[0], stale[0]
+    return h, stats, stale
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

@@ -31,6 +31,57 @@ def diversity(labels: jax.Array, mask: jax.Array,
     return jnp.stack([gini, shannon, total], axis=-1)
 
 
+def stream_update(hists: jax.Array, deltas: jax.Array,
+                  arrivals: jax.Array, staleness: jax.Array,
+                  selected: jax.Array, *,
+                  decay: float, size_cap: float = 0.0
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Streaming-data refresh oracle (``kernels/stream_update.py``).
+
+    One FEEL round's data evolution over the per-device class-count
+    matrix, fused into a single pass (DESIGN.md §7):
+
+    1. count-delta accumulation: ``h' = max(h + delta, 0)`` (arrivals are
+       positive deltas, evictions negative), then — when ``size_cap > 0``
+       — a proportional rescale of any device exceeding the cap (buffer
+       overflow evicts uniformly across classes);
+    2. diversity refresh: Gini-Simpson, Shannon entropy and the sample
+       count of the *new* counts, packed ``(…, K, 3)`` like the
+       ``diversity`` kernel;
+    3. staleness decay: ``stale' = [selected ? 0 : decay * stale] +
+       arrivals`` — the decayed mass of data the server has not trained
+       on.  ``arrivals`` is the arrival process's *reported* new-data
+       mass, not the positive part of the net deltas: an eviction can
+       cancel an arrival inside the same class, yet the device's
+       distribution still turned over.  ``selected`` is the *previous*
+       round's selection (participation consumes the backlog before
+       this round's arrivals land).
+
+    Shapes: ``hists``/``deltas`` ``(K, C)`` with ``arrivals``/
+    ``staleness``/``selected`` ``(K,)``, or batched ``(S, K, C)`` /
+    ``(S, K)`` — every reduction runs over trailing axes only.  This is
+    also the production jnp path (``streaming.refresh`` with
+    ``use_kernel=False``).
+    """
+    h = jnp.maximum(hists.astype(jnp.float32) + deltas.astype(jnp.float32),
+                    0.0)
+    if size_cap > 0.0:
+        total = jnp.sum(h, axis=-1, keepdims=True)
+        scale = jnp.where(total > size_cap,
+                          size_cap / jnp.maximum(total, 1.0), 1.0)
+        h = h * scale
+    sizes = jnp.sum(h, axis=-1)
+    p = h / jnp.maximum(sizes[..., None], 1.0)
+    gini = 1.0 - jnp.sum(p * p, axis=-1)
+    logp = jnp.where(p > 0.0, jnp.log2(jnp.maximum(p, 1e-30)), 0.0)
+    shannon = -jnp.sum(p * logp, axis=-1)
+    stats = jnp.stack([gini, shannon, sizes], axis=-1)
+    stale = jnp.where(selected > 0.0, 0.0,
+                      decay * staleness.astype(jnp.float32)) \
+        + arrivals.astype(jnp.float32)
+    return h, stats, stale
+
+
 def sub2_pgd(selected: jax.Array, t_train: jax.Array,
              snr_coeff: jax.Array, tx_power: jax.Array,
              alpha0: jax.Array, *, rho: float, lr: float, tau: float,

@@ -205,11 +205,37 @@ def test_sub2_pgd_kernel_empty_selection():
     assert float(o) == 0.0
 
 
+def test_sub2_pgd_vmap_hits_batched_kernel_lane():
+    """vmap of the single-instance entry must be wired straight onto the
+    kernel's (S, K) grid by the custom_vmap rule — bitwise equal to the
+    batched entry, with the rule's trace counter as the proof the
+    generic pallas batching rule was bypassed."""
+    k, s = 21, 3            # K unique to this test -> fresh trace
+    rows = [_instance(70 + 3 * i, k) for i in range(s)]
+    sel = jnp.stack([r[3] for r in rows])
+    tt = jnp.stack([r[2] for r in rows])
+    gains = jnp.stack([r[1] for r in rows])
+    power = jnp.stack([r[0].tx_power for r in rows])
+    a0 = jnp.stack([_starts(rows[i][3], rows[i][2], rows[i][1],
+                            rows[i][0].tx_power) for i in range(s)])
+    kw = dict(noise_psd=WCFG.noise_psd, **_PGD_KW)
+    traces0 = kernel_ops.BATCHED_LANE_TRACES
+    a_b, o_b = kernel_ops.sub2_pgd(sel, tt, gains, power, a0, **kw)
+    a_v, o_v = jax.vmap(
+        lambda *xs: kernel_ops.sub2_pgd(*xs, **kw))(sel, tt, gains, power,
+                                                    a0)
+    assert kernel_ops.BATCHED_LANE_TRACES > traces0, \
+        "custom vmap rule did not handle the batched lane"
+    np.testing.assert_array_equal(np.asarray(a_v), np.asarray(a_b))
+    np.testing.assert_array_equal(np.asarray(o_v), np.asarray(o_b))
+
+
 # ---------------------------------------------------------------------------
 # Allocator implementations + registry
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", ["waterfilling", "pgd", "fused_pgd"])
+@pytest.mark.parametrize("name", ["waterfilling", "pgd", "fused_pgd",
+                                  "importance"])
 def test_allocator_feasibility(name):
     k = 30
     net, gains, t_train, sel = _instance(41, k)
@@ -237,11 +263,91 @@ def test_fused_pgd_objective_matches_reference_pgd():
 
 
 def test_registry_contents_and_errors():
-    assert {"waterfilling", "pgd", "fused_pgd"} <= set(allocator.names())
+    assert {"waterfilling", "pgd", "fused_pgd",
+            "importance"} <= set(allocator.names())
     with pytest.raises(ValueError, match="unknown allocator"):
         allocator.get("nope")
     with pytest.raises(ValueError, match="already registered"):
         allocator.register("pgd", allocator.PGD)
+
+
+def test_energy_weights_shift_bandwidth():
+    """Raising one device's energy price must grow its share: its energy
+    term dominates the weighted objective, so the solver buys it down
+    with bandwidth (the mechanism ImportanceWeighted builds on)."""
+    k = 6
+    net, gains, t_train, _ = _instance(7, k)
+    sel = jnp.ones((k,), jnp.float32)
+    params = bw.Sub2Params(rho=0.9)
+    base = jnp.ones((k,))
+    boosted = base.at[2].set(8.0)
+    a1, _ = bw.pgd_allocation(sel, t_train, gains, net.tx_power, WCFG,
+                              params, energy_weights=base)
+    a2, _ = bw.pgd_allocation(sel, t_train, gains, net.tx_power, WCFG,
+                              params, energy_weights=boosted)
+    assert float(a2[2]) > float(a1[2])
+
+
+def test_energy_weights_none_matches_unweighted():
+    k = 10
+    net, gains, t_train, sel = _instance(13, k)
+    a_none, o_none = bw.pgd_allocation(sel, t_train, gains, net.tx_power,
+                                       WCFG, bw.Sub2Params.fast())
+    a_ones, o_ones = bw.pgd_allocation(sel, t_train, gains, net.tx_power,
+                                       WCFG, bw.Sub2Params.fast(),
+                                       energy_weights=jnp.ones((k,)))
+    np.testing.assert_array_equal(np.asarray(a_none), np.asarray(a_ones))
+    assert float(o_none) == float(o_ones)
+
+
+def test_importance_allocator_routes_through_scheduler():
+    """SchedulerConfig.allocator='importance' must carry every policy's
+    Sub2 solve through the importance-weighted objective while keeping
+    the Eq. 13 feasibility invariants (the ROADMAP open item)."""
+    k = 16
+    net, gains, _, _ = _instance(53, k)
+    sizes = jax.random.randint(jax.random.key(54), (k,), 50, 1500)
+    ages = jnp.zeros((k,), jnp.int32)
+    idx = jnp.linspace(0.1, 0.9, k)
+    for method in ("das", "abs", "full"):
+        sch = scheduler.SchedulerConfig(method=method, n_min=2,
+                                        iterations_max=3,
+                                        sub2=bw.Sub2Params.fast(),
+                                        allocator="importance")
+        res = scheduler.schedule(jax.random.key(55), idx, ages, sizes,
+                                 gains, net, WCFG, sch)
+        sel = np.asarray(res.selected)
+        alpha = np.asarray(res.alpha)
+        assert sel.sum() >= 2
+        assert alpha.sum() <= 1.0 + 1e-4
+        assert np.all(alpha >= 0.0)
+        assert np.all(alpha[sel == 0.0] == 0.0)
+    # The pricing must actually move the solution vs the plain objective.
+    sel_full = jnp.ones((k,), jnp.float32)
+    t_train = wireless.train_time(sizes, net, WCFG)
+    a_plain, _ = allocator.PGD(bw.Sub2Params.fast()).solve(
+        sel_full, t_train, gains, net.tx_power, WCFG)
+    a_imp, _ = allocator.ImportanceWeighted(bw.Sub2Params.fast()).solve(
+        sel_full, t_train, gains, net.tx_power, WCFG, data_sizes=sizes)
+    assert not np.allclose(np.asarray(a_plain), np.asarray(a_imp),
+                           atol=1e-4)
+
+
+def test_importance_weights_follow_data_sizes_not_hardware():
+    """With |D_k| supplied, the importance factor must track the FedAvg
+    data share: equal sizes + wildly different CPU speeds (t_train)
+    yield equal importance, and a larger |D_k| yields a larger weight
+    (channel pricing held fixed)."""
+    k = 4
+    sel = jnp.ones((k,), jnp.float32)
+    t_train = jnp.asarray([9.0, 1.0, 5.0, 5.0])   # slow CPU != important
+    gains = jnp.full((k,), 1e-9)
+    power = jnp.full((k,), 2.0)
+    sizes = jnp.asarray([500, 500, 250, 1000])
+    w = np.asarray(allocator.importance_weights(
+        sel, t_train, gains, power, WCFG, data_sizes=sizes))
+    assert w[0] == pytest.approx(w[1])            # hardware ignored
+    assert w[3] > w[2]                            # data share respected
 
 
 def test_policies_route_through_registry():
@@ -253,7 +359,7 @@ def test_policies_route_through_registry():
         params: bw.Sub2Params = bw.Sub2Params()
 
         def solve(self, selected, t_train, gains, tx_power, cfg,
-                  alpha0=None):
+                  alpha0=None, data_sizes=None):
             mask = (selected > 0.0).astype(jnp.float32)
             alpha = mask / jnp.maximum(jnp.sum(mask), 1.0)
             return alpha, jnp.asarray(0.0, jnp.float32)

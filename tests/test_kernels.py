@@ -42,6 +42,30 @@ def test_diversity_sweep(k, n, c):
     assert np.all(np.asarray(got)[:, 0] <= 1 - 1.0 / c + 1e-6)
 
 
+@pytest.mark.parametrize("s,k,c", [(1, 4, 3), (3, 20, 10), (2, 64, 16)])
+@pytest.mark.parametrize("size_cap", [0.0, 120.0])
+def test_stream_update_sweep(s, k, c, size_cap):
+    key = jax.random.key(s * 100 + k)
+    hists = jax.random.uniform(key, (s, k, c), minval=0.0, maxval=80.0)
+    deltas = jax.random.uniform(jax.random.key(1), (s, k, c),
+                                minval=-10.0, maxval=15.0)
+    arrivals = jax.random.uniform(jax.random.key(4), (s, k), maxval=25.0)
+    stale = jax.random.uniform(jax.random.key(2), (s, k), maxval=6.0)
+    sel = (jax.random.uniform(jax.random.key(3), (s, k)) > 0.5
+           ).astype(jnp.float32)
+    got = ops.stream_update(hists, deltas, arrivals, stale, sel,
+                            decay=0.75, size_cap=size_cap)
+    want = ref.stream_update(hists, deltas, arrivals, stale, sel,
+                             decay=0.75, size_cap=size_cap)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+    counts, stats = got[0], got[1]
+    assert np.all(np.asarray(counts) >= 0.0)
+    if size_cap > 0.0:
+        assert np.all(np.asarray(stats[..., 2]) <= size_cap + 1e-3)
+
+
 @pytest.mark.parametrize("seq", [64, 192, 257])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
                                            (False, 0)])

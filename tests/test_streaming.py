@@ -1,0 +1,457 @@
+"""Streaming-data subsystem: refresh kernel, processes, driver parity.
+
+Contracts under test (ISSUE 3 acceptance, DESIGN.md §7):
+
+* ``kernels/stream_update.py`` == the ``kernels/ref.py`` oracle to <1e-5
+  in interpret mode — single ``(K, C)`` instance, batched ``(S, K, C)``
+  lane, and vmap of the single entry (the scenario-driver path)
+* refresh semantics: clamp-at-zero accumulation, proportional cap
+  rescale, staleness reset-on-selection + decayed arrival backlog
+* arrival processes are traceable, deterministic per key, and registered
+  (registry errors mirror the allocator registry)
+* streaming runs are bit-for-bit identical between the scan driver and
+  the legacy ``run_federated_loop``, and ``run_federated_batch`` over S
+  streaming scenarios equals S independent runs
+* regression: under drift, the static round-0 diversity snapshot keeps
+  selecting a device set that excludes the now-richest device, while
+  per-round streaming refresh re-ranks DAS onto it
+* the scheduler staleness hook re-ranks DAS and ABS when
+  ``staleness_weight > 0`` and is inert at 0
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import diversity, federated, scheduler, streaming, wireless
+from repro.data import partition, synthetic
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import paper_nets
+
+WCFG = wireless.WirelessConfig()
+
+
+def _refresh_instance(seed: int, s: int, k: int, c: int):
+    hists = jax.random.uniform(jax.random.key(seed), (s, k, c),
+                               minval=0.0, maxval=60.0)
+    deltas = jax.random.uniform(jax.random.key(seed + 1), (s, k, c),
+                                minval=-5.0, maxval=12.0)
+    arrivals = jax.random.uniform(jax.random.key(seed + 4), (s, k),
+                                  maxval=20.0)
+    stale = jax.random.uniform(jax.random.key(seed + 2), (s, k),
+                               maxval=8.0)
+    sel = (jax.random.uniform(jax.random.key(seed + 3), (s, k)) > 0.5
+           ).astype(jnp.float32)
+    return hists, deltas, arrivals, stale, sel
+
+
+# ---------------------------------------------------------------------------
+# Refresh oracle semantics
+# ---------------------------------------------------------------------------
+
+def test_refresh_clamps_and_counts():
+    hists = jnp.asarray([[10.0, 2.0, 0.0]])
+    deltas = jnp.asarray([[-15.0, 3.0, 4.0]])        # class 0 over-evicted
+    h, stats, stale = kernel_ref.stream_update(
+        hists, deltas, jnp.asarray([7.0]), jnp.zeros((1,)),
+        jnp.zeros((1,)), decay=0.5)
+    np.testing.assert_allclose(np.asarray(h), [[0.0, 5.0, 4.0]])
+    assert float(stats[0, 2]) == pytest.approx(9.0)
+    # staleness accumulates the reported arrival mass
+    assert float(stale[0]) == pytest.approx(7.0)
+
+
+def test_refresh_size_cap_rescales_proportionally():
+    hists = jnp.asarray([[30.0, 10.0], [5.0, 5.0]])
+    deltas = jnp.zeros((2, 2))
+    h, stats, _ = kernel_ref.stream_update(
+        hists, deltas, jnp.zeros((2,)), jnp.zeros((2,)), jnp.zeros((2,)),
+        decay=0.5, size_cap=20.0)
+    np.testing.assert_allclose(np.asarray(h[0]), [15.0, 5.0])
+    np.testing.assert_allclose(np.asarray(h[1]), [5.0, 5.0])  # under cap
+    assert float(stats[0, 2]) == pytest.approx(20.0)
+
+
+def test_refresh_staleness_reset_and_decay():
+    hists = jnp.ones((3, 4))
+    deltas = jnp.full((3, 4), 2.0)
+    arrivals = jnp.full((3,), 8.0)
+    stale = jnp.asarray([6.0, 6.0, 0.0])
+    sel = jnp.asarray([1.0, 0.0, 0.0])
+    _, _, out = kernel_ref.stream_update(hists, deltas, arrivals, stale,
+                                         sel, decay=0.5)
+    # selected: reset then accumulate; unselected: decay then accumulate
+    np.testing.assert_allclose(np.asarray(out), [8.0, 11.0, 8.0])
+
+
+def test_refresh_diversity_matches_measures():
+    hists, deltas, arrivals, stale, sel = _refresh_instance(3, 1, 5, 7)
+    h, stats, _ = kernel_ref.stream_update(hists[0], deltas[0],
+                                           arrivals[0], stale[0],
+                                           sel[0], decay=0.9)
+    probs = diversity.class_probs(h)
+    np.testing.assert_allclose(np.asarray(stats[:, 0]),
+                               np.asarray(diversity.gini_simpson(probs)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats[:, 1]),
+                               np.asarray(diversity.shannon_entropy(probs)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(2, 40), st.integers(2, 16),
+       st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_stream_update_kernel_matches_oracle(s, k, c, seed):
+    args = _refresh_instance(seed % 1000, s, k, c)
+    for cap in (0.0, 150.0):
+        want = kernel_ref.stream_update(*args, decay=0.8, size_cap=cap)
+        got = kernel_ops.stream_update(*args, decay=0.8, size_cap=cap)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_stream_update_kernel_single_and_vmap_lane():
+    """Single-instance entry == row of the batched lane == vmap of the
+    single entry (the vmapped scenario driver's shape)."""
+    args = _refresh_instance(11, 4, 9, 10)
+    got_b = kernel_ops.stream_update(*args, decay=0.7)
+    for i in range(4):
+        got_1 = kernel_ops.stream_update(*(a[i] for a in args), decay=0.7)
+        for g1, gb in zip(got_1, got_b):
+            np.testing.assert_array_equal(np.asarray(g1),
+                                          np.asarray(gb[i]))
+    got_v = jax.vmap(
+        lambda *a: kernel_ops.stream_update(*a, decay=0.7))(*args)
+    for gv, gb in zip(got_v, got_b):
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(gb),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+def _hists0(k: int = 6, c: int = 5) -> jnp.ndarray:
+    return jax.random.uniform(jax.random.key(0), (k, c), minval=0.0,
+                              maxval=40.0)
+
+
+@pytest.mark.parametrize("name", ["static", "poisson", "drift", "shift",
+                                  "evict"])
+def test_processes_traceable_and_deterministic(name):
+    cfg = streaming.StreamConfig(process=name, rate=15.0)
+    proc = streaming.get_process(name)
+    h0 = _hists0()
+
+    def roll(key):
+        st = proc.init(key, h0, cfg)
+        ds, arrs = [], []
+        for i in range(3):
+            d, arr, st = proc.sample(jax.random.key(100 + i), st, cfg)
+            st = dataclasses.replace(st, round=st.round + 1)
+            ds.append(d)
+            arrs.append(arr)
+        return jnp.stack(ds), jnp.stack(arrs)
+
+    d_a, arr_a = jax.jit(roll)(jax.random.key(7))
+    d_b, arr_b = roll(jax.random.key(7))
+    np.testing.assert_array_equal(np.asarray(d_a), np.asarray(d_b))
+    np.testing.assert_array_equal(np.asarray(arr_a), np.asarray(arr_b))
+    assert d_a.shape == (3,) + h0.shape
+    assert arr_a.shape == (3, h0.shape[0])
+    assert np.all(np.asarray(arr_a) >= 0.0)
+    if name == "static":
+        np.testing.assert_array_equal(np.asarray(d_a), 0.0)
+    if name in ("poisson", "drift", "shift"):
+        assert np.all(np.asarray(d_a) >= 0.0)     # pure arrivals
+        assert float(jnp.sum(d_a)) > 0.0
+        # pure-arrival processes: reported mass == delivered mass
+        np.testing.assert_allclose(np.asarray(arr_a),
+                                   np.asarray(jnp.sum(d_a, -1)),
+                                   rtol=1e-6)
+
+
+def test_process_registry_errors():
+    assert {"static", "poisson", "drift", "shift",
+            "evict"} <= set(streaming.process_names())
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        streaming.get_process("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        streaming.register_process("poisson", streaming.Poisson)
+
+
+def test_evict_keeps_counts_nonnegative():
+    cfg = streaming.StreamConfig(process="evict", rate=2.0,
+                                 evict_frac=0.9)
+    proc = streaming.get_process("evict")
+    st = proc.init(jax.random.key(1), _hists0(), cfg)
+    for i in range(5):
+        d, arr, st = proc.sample(jax.random.key(i), st, cfg)
+        h, _, stale = streaming.refresh(st.hists, d, arr, st.staleness,
+                                        st.selected_prev, cfg)
+        st = dataclasses.replace(st, hists=h, staleness=stale,
+                                 round=st.round + 1)
+        assert np.all(np.asarray(st.hists) >= 0.0)
+
+
+def test_evict_staleness_tracks_arrivals_under_heavy_eviction():
+    """Heavy eviction nets every per-class delta negative, but the
+    device's data is still turning over — the reported arrival mass
+    (not the positive part of the net deltas) must keep the staleness
+    signal accumulating."""
+    cfg = streaming.StreamConfig(process="evict", rate=2.0,
+                                 evict_frac=0.9)
+    proc = streaming.get_process("evict")
+    h0 = jnp.full((4, 5), 40.0)
+    st = proc.init(jax.random.key(1), h0, cfg)
+    d, arr, st = proc.sample(jax.random.key(2), st, cfg)
+    assert np.all(np.asarray(d) < 0.0), "setup: eviction must dominate"
+    assert float(jnp.sum(arr)) > 0.0
+    _, _, stale = streaming.refresh(st.hists, d, arr, st.staleness,
+                                    st.selected_prev, cfg)
+    np.testing.assert_allclose(np.asarray(stale), np.asarray(arr),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Driver parity under streaming (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def stream_world():
+    imgs, labs = synthetic.generate(0, samples_per_class=400)
+    pspec = partition.PartitionSpec(num_devices=8, num_shards=60,
+                                    shard_size=50)
+    data = partition.partition(imgs, labs, seed=1, spec=pspec)
+    net = wireless.sample_network(jax.random.key(0), 8, WCFG)
+    mspec = paper_nets.PaperNetSpec(kind="mlp")
+    params = paper_nets.init(jax.random.key(3), mspec)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    return data, net, params, loss, ev
+
+
+@pytest.mark.parametrize("method,process", [("das", "poisson"),
+                                            ("abs", "drift")])
+def test_scan_matches_legacy_under_streaming(stream_world, method,
+                                             process):
+    """Streaming runs must stay bit-for-bit identical between the scan
+    driver and the legacy per-round loop (same contract as the static
+    parity test, now with the StreamState in the carry)."""
+    data, net, params, loss, ev = stream_world
+    scfg = scheduler.SchedulerConfig(method=method, n_min=2,
+                                     iterations_max=3,
+                                     staleness_weight=0.25)
+    fcfg = federated.FLConfig(
+        num_rounds=3, batch_size=50, learning_rate=0.1,
+        stream=streaming.StreamConfig(process=process, rate=25.0))
+    kw = dict(init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+              net=net, wcfg=WCFG, scfg=scfg, fcfg=fcfg,
+              key=jax.random.key(4))
+    p_scan, h_scan = federated.run_federated(**kw)
+    p_loop, h_loop = federated.run_federated_loop(**kw)
+    assert len(h_scan) == len(h_loop)
+    for a, b in zip(h_scan, h_loop):
+        assert np.array_equal(a.selected, b.selected)
+        assert a.round_time == b.round_time
+        np.testing.assert_allclose(a.energy_total, b.energy_total,
+                                   rtol=1e-6)
+        if b.accuracy == b.accuracy:
+            assert a.accuracy == b.accuracy
+    for a, b in zip(jax.tree_util.tree_leaves(p_scan),
+                    jax.tree_util.tree_leaves(p_loop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batch_matches_independent_streaming_runs(stream_world):
+    """S streaming scenarios through run_federated_batch == S independent
+    run_federated calls, scenario by scenario."""
+    data, _, params, loss, ev = stream_world
+    s = 2
+    nets = wireless.sample_networks(jax.random.key(21), s,
+                                    data.num_devices, WCFG)
+    keys = jax.random.split(jax.random.key(22), s)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3,
+                                     staleness_weight=0.25)
+    fcfg = federated.FLConfig(
+        num_rounds=3, batch_size=50, learning_rate=0.1,
+        stream=streaming.StreamConfig(process="poisson", rate=25.0))
+    p_b, metrics = federated.run_federated_batch(
+        init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+        nets=nets, wcfg=WCFG, scfg=scfg, fcfg=fcfg, keys=keys)
+    hists_b = federated.batch_metrics_to_records(metrics)
+    for i in range(s):
+        net_i = jax.tree_util.tree_map(lambda a, i=i: a[i], nets)
+        p_i, hist_i = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net_i, wcfg=WCFG, scfg=scfg, fcfg=fcfg, key=keys[i])
+        for a, b in zip(hists_b[i], hist_i):
+            assert np.array_equal(a.selected, b.selected)
+            assert a.round_time == b.round_time
+            if b.accuracy == b.accuracy:
+                assert a.accuracy == b.accuracy
+        for a, b in zip(jax.tree_util.tree_leaves(p_b),
+                        jax.tree_util.tree_leaves(p_i)):
+            np.testing.assert_array_equal(np.asarray(a[i]), np.asarray(b))
+
+
+def test_kernel_refresh_matches_reference_in_driver(stream_world):
+    """use_kernel=True routes the per-round refresh through the Pallas
+    stream_update kernel; the whole run must match the jnp path."""
+    data, net, params, loss, ev = stream_world
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    outs = {}
+    for use_kernel in (False, True):
+        fcfg = federated.FLConfig(
+            num_rounds=2, batch_size=50, learning_rate=0.1,
+            stream=streaming.StreamConfig(process="poisson", rate=25.0,
+                                          use_kernel=use_kernel))
+        outs[use_kernel] = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net, wcfg=WCFG, scfg=scfg, fcfg=fcfg,
+            key=jax.random.key(4))
+    for a, b in zip(outs[False][1], outs[True][1]):
+        assert np.array_equal(a.selected, b.selected)
+        np.testing.assert_allclose(a.round_time, b.round_time, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Regression: streaming refresh re-ranks where the round-0 snapshot fails
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _EnrichWorst:
+    """Deterministic drift: the round-0 least-diverse device receives a
+    flood of uniformly-spread arrivals every round (its environment
+    changed), everyone else receives nothing."""
+
+    rate: float = 400.0
+
+    def init(self, key, hists0, cfg):
+        del key
+        gini = diversity.diversity_measure(hists0, "gini_simpson")
+        target = jnp.argmin(gini, axis=-1)
+        k = hists0.shape[-2]
+        rates = jnp.where(jnp.arange(k) == target, self.rate, 0.0)
+        return streaming.base_state(hists0, rates=rates)
+
+    def sample(self, key, state, cfg):
+        del key, cfg
+        deltas = state.rates[..., None] * state.affinity
+        return deltas, jnp.sum(deltas, axis=-1), state
+
+
+streaming.register_process("enrich_worst_test", _EnrichWorst,
+                           overwrite=True)
+
+
+def test_round0_snapshot_vs_streaming_index_rank():
+    """After drift, the index computed from refreshed stats ranks the
+    enriched device top while the round-0 snapshot still ranks it last —
+    the static scheduler is acting on stale data."""
+    hists0 = jnp.asarray([[40.0, 0.0, 0.0, 0.0],      # single-class, poor
+                          [12.0, 10.0, 9.0, 11.0],    # diverse
+                          [20.0, 15.0, 0.0, 0.0],
+                          [9.0, 0.0, 14.0, 8.0]])
+    cfg = streaming.StreamConfig(process="enrich_worst_test")
+    proc = streaming.get_process("enrich_worst_test")
+    state = proc.init(jax.random.key(0), hists0, cfg)
+    ages = jnp.zeros((4,), jnp.int32)
+    idx0 = diversity.diversity_index(label_hists=hists0,
+                                     data_sizes=jnp.sum(hists0, -1),
+                                     ages=ages)
+    assert int(jnp.argmin(idx0)) == 0
+    stats = None
+    for i in range(4):
+        deltas, arr, state = proc.sample(jax.random.key(i), state, cfg)
+        h, stats, stale = streaming.refresh(state.hists, deltas, arr,
+                                            state.staleness,
+                                            state.selected_prev, cfg)
+        state = dataclasses.replace(state, hists=h, staleness=stale,
+                                    round=state.round + 1)
+    idx_t = diversity.diversity_index_from_stats(
+        div=stats[..., 0], data_sizes=stats[..., 2], ages=ages)
+    assert int(jnp.argmax(idx_t)) == 0          # streaming re-ranks
+    assert int(jnp.argmax(idx0)) != 0           # snapshot never would
+
+
+def test_das_rerank_under_drift(stream_world):
+    """Driver-level acceptance: with the drift scenario, static round-0
+    diversity never schedules the enriched device, while the streaming
+    refresh re-ranks DAS onto it within a few rounds — the snapshot
+    scheduler is provably picking the worse (stale) set once the device
+    holds the richest data."""
+    data, net, params, loss, ev = stream_world
+    hists0 = federated.client_histograms(data, 10)
+    gini0 = diversity.diversity_measure(hists0, "gini_simpson")
+    target = int(jnp.argmin(gini0))
+    weights = diversity.IndexWeights(diversity=0.7, size=0.2, age=0.1)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2, n_fixed=2)
+    sel_by_stream = {}
+    for stream in (None, streaming.StreamConfig(
+            process="enrich_worst_test")):
+        fcfg = federated.FLConfig(num_rounds=5, batch_size=50,
+                                  learning_rate=0.1,
+                                  index_weights=weights, stream=stream)
+        _, hist = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net, wcfg=WCFG, scfg=scfg, fcfg=fcfg,
+            key=jax.random.key(4), eval_every=5)
+        sel_by_stream[stream is not None] = np.stack(
+            [r.selected for r in hist])
+    assert sel_by_stream[False][:, target].sum() == 0, \
+        "static round-0 snapshot unexpectedly selected the drifting device"
+    assert sel_by_stream[True][:, target].sum() >= 1, \
+        "streaming refresh failed to re-rank DAS onto the enriched device"
+    # And the two policies genuinely disagree on at least one round's set.
+    assert np.any(sel_by_stream[False] != sel_by_stream[True])
+
+
+# ---------------------------------------------------------------------------
+# Staleness-aware scheduling hook
+# ---------------------------------------------------------------------------
+
+def test_staleness_hook_reranks_das_and_abs():
+    k = 5
+    net = wireless.sample_network(jax.random.key(2), k, WCFG)
+    gains = wireless.sample_fading(jax.random.key(3), net)
+    sizes = jnp.full((k,), 500)
+    ages = jnp.full((k,), 3, jnp.int32)
+    index = jnp.full((k,), 0.5)
+    staleness = jnp.zeros((k,)).at[3].set(25.0)
+    for method in ("das", "abs"):
+        sch = scheduler.SchedulerConfig(method=method, n_min=1, n_fixed=1,
+                                        staleness_weight=1.0)
+        res = scheduler.schedule(jax.random.key(5), index, ages, sizes,
+                                 gains, net, WCFG, sch, staleness)
+        assert np.asarray(res.selected)[3] == 1.0, method
+
+
+def test_staleness_hook_inert_at_zero_weight():
+    k = 4
+    net = wireless.sample_network(jax.random.key(2), k, WCFG)
+    gains = wireless.sample_fading(jax.random.key(3), net)
+    sizes = jnp.full((k,), 500)
+    ages = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    index = jnp.linspace(0.2, 0.8, k)
+    staleness = jnp.asarray([50.0, 0.0, 0.0, 0.0])
+    sch = scheduler.SchedulerConfig(method="das", n_min=1, n_fixed=1)
+    res_none = scheduler.schedule(jax.random.key(5), index, ages, sizes,
+                                  gains, net, WCFG, sch)
+    res_stale = scheduler.schedule(jax.random.key(5), index, ages, sizes,
+                                   gains, net, WCFG, sch, staleness)
+    np.testing.assert_array_equal(np.asarray(res_none.selected),
+                                  np.asarray(res_stale.selected))
