@@ -1,6 +1,6 @@
 """Shared FEEL experiment harness for the paper-figure benchmarks.
 
-Two entry points:
+Three entry points:
 
 * :func:`run_fl` — builds the synthetic shard-partitioned dataset (paper
   §VI-A protocol), the wireless network, and runs ``num_rounds`` of
@@ -9,8 +9,14 @@ Two entry points:
   #selected).
 * :func:`run_fl_batch` — the Monte-Carlo version: S network/PRNG
   scenarios through ``federated.run_federated_batch`` as ONE compiled
-  program, returning per-scenario histories.  This is how the paper's
-  Fig. 2-6 averaging should be produced.
+  program, returning per-scenario histories.  Scenario streams are
+  fold_in-derived from global indices (``engine.stream_bases``), so
+  scenario ``i`` here is the *same* scenario the sweep engine runs.
+* :func:`run_fl_sweep` — the production path (DESIGN.md §8): a
+  :class:`repro.sweep.SweepSpec` grid over config axes, executed in
+  shard_map'd chunks with online Welford aggregation.  Host memory is
+  O(R) per grid point regardless of scenario count; the paper-figure
+  suites all go through this.
 
 ``quick=True`` shrinks the scale (K=40 devices, 300-shard pool, 8 rounds)
 so the whole benchmark suite completes on the CPU container; ``--full``
@@ -21,13 +27,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import federated, scheduler, wireless
 from repro.data import partition, synthetic
 from repro.models import paper_nets
+from repro.sweep import engine as sweep_engine
+from repro.sweep import grid as sweep_grid
+from repro.sweep import runner as sweep_runner
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,15 +108,62 @@ def run_fl(cfg: FLBenchConfig) -> List[federated.RoundRecord]:
 def run_fl_batch(cfg: FLBenchConfig, num_scenarios: int
                  ) -> List[List[federated.RoundRecord]]:
     """S Monte-Carlo scenarios (network realization x PRNG stream) as one
-    vmapped scan; returns per-scenario histories."""
+    vmapped scan; returns per-scenario histories.
+
+    Scenario ``i`` derives from its *global index* via fold_in
+    (``sweep.engine.stream_bases``), never from ``num_scenarios`` — so
+    this unsharded driver path and the chunked/sharded sweep engine
+    execute identical scenario populations (parity contract in
+    ``tests/test_sweep.py``).
+    """
     data, wcfg, params, scfg, fcfg, loss, ev = _experiment(cfg)
-    nets = wireless.sample_networks(jax.random.key(cfg.seed + 7),
-                                    num_scenarios, data.num_devices, wcfg)
-    keys = jax.random.split(jax.random.key(cfg.seed + 13), num_scenarios)
+    net_base, sim_base = sweep_engine.stream_bases(cfg.seed)
+    nets = wireless.sample_networks_indexed(
+        net_base, jnp.arange(num_scenarios), data.num_devices, wcfg)
+    keys = federated.scenario_keys(sim_base, 0, num_scenarios)
     _, metrics = federated.run_federated_batch(
         init_params=params, loss_fn=loss, eval_fn=ev,
         data=data, nets=nets, wcfg=wcfg, scfg=scfg, fcfg=fcfg, keys=keys)
     return federated.batch_metrics_to_records(metrics)
+
+
+def _spec_from(wcfg, scfg, fcfg, seed: int, num_scenarios: int,
+               axes: Sequence[sweep_grid.Axis],
+               chunk_scenarios: int) -> sweep_grid.SweepSpec:
+    return sweep_grid.SweepSpec(
+        fl=fcfg, sched=scfg, wireless=wcfg, axes=tuple(axes),
+        scenarios_per_point=num_scenarios,
+        chunk_scenarios=chunk_scenarios, base_seed=seed)
+
+
+def sweep_spec(cfg: FLBenchConfig, num_scenarios: int,
+               axes: Sequence[sweep_grid.Axis] = (),
+               chunk_scenarios: int = 0) -> sweep_grid.SweepSpec:
+    """SweepSpec over this bench config's base world (axes optional)."""
+    _, wcfg, _, scfg, fcfg, _, _ = _experiment(cfg)
+    return _spec_from(wcfg, scfg, fcfg, cfg.seed, num_scenarios, axes,
+                      chunk_scenarios)
+
+
+def run_fl_sweep(cfg: FLBenchConfig, num_scenarios: int,
+                 axes: Sequence[sweep_grid.Axis] = (),
+                 target: float = 0.85, chunk_scenarios: int = 0,
+                 use_sharding: bool = True,
+                 ckpt_path: Optional[str] = None):
+    """Monte-Carlo sweep through the sharded engine (DESIGN.md §8).
+
+    Returns ``[(GridPoint, summary)]`` in grid order, where ``summary``
+    maps ``"round.accuracy"``-style names to mean/var/std/min/max/count
+    arrays (``sweep.engine.aggregate_summary``) — O(R) per grid point,
+    independent of ``num_scenarios``.
+    """
+    data, wcfg, params, scfg, fcfg, loss, ev = _experiment(cfg)
+    spec = _spec_from(wcfg, scfg, fcfg, cfg.seed, num_scenarios, axes,
+                      chunk_scenarios)
+    return sweep_runner.run_sweep(
+        spec, data=data, loss_fn=loss, eval_fn=ev, init_params=params,
+        ckpt_path=ckpt_path, target_accuracy=target,
+        use_sharding=use_sharding)
 
 
 def rounds_to_accuracy(hist, target: float) -> int:

@@ -15,6 +15,13 @@ Measures, per device count K:
 * ``batch/*`` (at ``batch_devices``) — ``run_federated_batch``: S
   scenarios as one vmapped scan; one compile, one dispatch for the whole
   Monte-Carlo average.
+* ``sweep/*`` (same scale) — the sharded sweep engine (``repro.sweep``,
+  DESIGN.md §8): the S scenarios in shard_map'd chunks with online
+  Welford aggregation, sharded over the present devices vs the plain
+  vmap program.  On a 1-device host the two rows measure the same
+  compiled partitioning; under forced host devices
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) the sharded
+  row is the real multi-device path.
 
 The legacy driver is measured with the reference Sub2 allocator preset
 it shipped with; the scan/batch drivers use ``Sub2Params.fast()`` — the
@@ -204,6 +211,44 @@ def _bench_batch(cfg: E2EConfig,
     }
 
 
+def _bench_sweep(cfg: E2EConfig,
+                 single: Dict[str, float]) -> Dict[str, float]:
+    """S scenarios through the sweep engine, sharded vs unsharded."""
+    from repro.sweep import engine as sweep_engine
+    from repro.sweep import grid as sweep_grid
+
+    k, s = cfg.batch_devices, cfg.batch_scenarios
+    data, _, wcfg, params, loss, ev, fcfg = _world(k, cfg)
+    rounds = fcfg.num_rounds
+    spec = sweep_grid.SweepSpec(
+        fl=fcfg, sched=_scfg(cfg, True), wireless=wcfg,
+        scenarios_per_point=s, chunk_scenarios=0, base_seed=0,
+        eval_every=rounds)
+    out: Dict[str, float] = {"devices": k, "rounds": rounds,
+                             "scenarios": s,
+                             "host_devices": len(jax.devices())}
+    for mode, sharded in (("sharded", True), ("vmap", False)):
+        eng = sweep_engine.SweepEngine(
+            spec, data=data, loss_fn=loss, eval_fn=ev,
+            init_params=params, use_sharding=sharded)
+        point = eng.points[0]
+        t0 = time.perf_counter()
+        agg = eng.run_point(point)
+        jax.block_until_ready(agg["round"]["accuracy"].mean)
+        out[f"{mode}_first_call_s"] = time.perf_counter() - t0
+
+        def exec_once(eng=eng, point=point):
+            agg = eng.run_point(point)
+            jax.block_until_ready(agg["round"]["accuracy"].mean)
+
+        out[f"{mode}_exec_s"] = _median(exec_once, cfg.repeats)
+        out[f"{mode}_scenarios_per_s"] = s / out[f"{mode}_exec_s"]
+    out["sharded_vs_vmap"] = out["vmap_exec_s"] / out["sharded_exec_s"]
+    out["aggregate_speedup_vs_legacy"] = (
+        s * single["legacy_invocation_s"] / out["sharded_exec_s"])
+    return out
+
+
 def run(quick: bool = True) -> List[Row]:
     cfg = E2EConfig(rounds=5 if quick else 15, repeats=5)
     results: Dict[str, object] = {"quick": quick,
@@ -238,6 +283,19 @@ def run(quick: bool = True) -> List[Row]:
                  f"aggregate_speedup_same_preset",
                  round(b["aggregate_speedup_vs_legacy_fast"], 2),
                  "vs sequential legacy_fast invocations (driver only)"))
+    sw = _bench_sweep(cfg, singles[cfg.batch_devices])
+    results["sweep"] = sw
+    rows.append((f"fl_e2e/sweep_S{cfg.batch_scenarios}/"
+                 f"sharded_scenarios_per_s",
+                 round(sw["sharded_scenarios_per_s"], 3),
+                 f"engine, devices={int(sw['host_devices'])}"))
+    rows.append((f"fl_e2e/sweep_S{cfg.batch_scenarios}/sharded_vs_vmap",
+                 round(sw["sharded_vs_vmap"], 2),
+                 "sweep engine shard_map vs plain vmap exec"))
+    rows.append((f"fl_e2e/sweep_S{cfg.batch_scenarios}/"
+                 f"aggregate_speedup",
+                 round(sw["aggregate_speedup_vs_legacy"], 2),
+                 "vs sequential legacy invocations"))
     with open(BENCH_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     rows.append(("fl_e2e/json_written", 1.0, BENCH_JSON))

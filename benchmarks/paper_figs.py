@@ -5,11 +5,15 @@ Fig. 3/8/9 — local epochs E in {1,2,3}, DAS vs random (+ baseline)
 Fig. 4/5 — model-size sweep: rounds to goal accuracy, DAS vs ABS vs full
 Fig. 6/7/10/11 — energy/device + completion time at goal accuracy
 
-Every figure family is scenario-averaged through the vmapped batch
-driver (``federated.run_federated_batch``) — the paper averages over
-channel realizations, and the batch driver runs the S Monte-Carlo
-scenarios as one compiled program (``num_scenarios=0`` picks 2/4 for
-quick/full).
+Every figure family runs through the sharded Monte-Carlo sweep engine
+(``repro.sweep``, DESIGN.md §8): the figure's configuration dimensions
+(device budget, local epochs, model size, method) are declarative
+``Axis`` entries of ONE ``SweepSpec``, each grid point averages
+``num_scenarios`` channel/PRNG realizations executed in shard_map'd
+chunks, and only the O(R) Welford aggregates (per-round and
+final-scalar mean/var/min/max) ever reach the host — figure memory is
+independent of how many scenarios run (``num_scenarios=0`` picks 2/4
+for quick/full).
 
 Each function returns CSV rows: (name, value, derived-notes).
 The claims validated per row are annotated in EXPERIMENTS.md §Repro.
@@ -17,46 +21,53 @@ The claims validated per row are annotated in EXPERIMENTS.md §Repro.
 
 from __future__ import annotations
 
-import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 from benchmarks import common
+from repro.sweep import grid as sweep_grid
 
 Row = Tuple[str, float, str]
 
-
-def _mean(xs) -> float:
-    xs = list(xs)
-    return sum(xs) / max(len(xs), 1)
+Axis = sweep_grid.Axis
 
 
 def _scenario_count(num_scenarios: int, quick: bool) -> int:
     return num_scenarios or (2 if quick else 4)
 
 
+def _final_acc(summary) -> Dict[str, float]:
+    s = summary["scalar.final_accuracy"]
+    return {"mean": float(s["mean"]), "min": float(s["min"]),
+            "max": float(s["max"])}
+
+
 def fig2_limited_devices(quick: bool = True, model: str = "mlp",
                          num_scenarios: int = 0) -> List[Row]:
     """Accuracy vs limited device counts, averaged over Monte-Carlo
-    scenarios via the vmapped batch driver (paper Fig. 2 averages over
-    channel realizations; ``num_scenarios=0`` picks 2/4 for quick/full).
+    scenarios via the sweep engine: one (n_fixed x method) grid, each
+    point S sharded scenarios folded to O(R) aggregates.
     """
     scenarios = _scenario_count(num_scenarios, quick)
+    results = common.run_fl_sweep(
+        common.FLBenchConfig(quick=quick, model=model),
+        scenarios,
+        axes=[Axis("sched", "n_fixed", (3, 5, 7)),
+              Axis("sched", "method", ("das", "random"))])
     rows: List[Row] = []
+    accs: Dict[Tuple[int, str], float] = {}
+    rounds = 0
+    for point, summary in results:
+        f = _final_acc(summary)
+        n, method = point.sched.n_fixed, point.sched.method
+        accs[(n, method)] = f["mean"]
+        rounds = summary["round.accuracy"]["mean"].shape[0]
+        rows.append((f"fig2/{model}/n{n}/{method}/final_acc",
+                     round(f["mean"], 4),
+                     f"rounds={rounds} S={scenarios} "
+                     f"min={f['min']:.3f} max={f['max']:.3f}"))
     for n in (3, 5, 7):
-        accs = {}
-        for method in ("das", "random"):
-            hists = common.run_fl_batch(
-                common.FLBenchConfig(quick=quick, model=model,
-                                     method=method, n_fixed=n),
-                scenarios)
-            finals = [h[-1].accuracy for h in hists]
-            accs[method] = _mean(finals)
-            rows.append((f"fig2/{model}/n{n}/{method}/final_acc",
-                         round(accs[method], 4),
-                         f"rounds={len(hists[0])} S={scenarios} "
-                         f"min={min(finals):.3f} max={max(finals):.3f}"))
         rows.append((f"fig2/{model}/n{n}/das_minus_random",
-                     round(accs["das"] - accs["random"], 4),
+                     round(accs[(n, "das")] - accs[(n, "random")], 4),
                      "paper: DAS >= random, gap largest at small n"))
     return rows
 
@@ -64,18 +75,20 @@ def fig2_limited_devices(quick: bool = True, model: str = "mlp",
 def fig3_local_epochs(quick: bool = True, model: str = "mlp",
                       num_scenarios: int = 0) -> List[Row]:
     scenarios = _scenario_count(num_scenarios, quick)
+    results = common.run_fl_sweep(
+        common.FLBenchConfig(quick=quick, model=model, n_fixed=7),
+        scenarios,
+        axes=[Axis("fl", "local_epochs", (1, 2, 3)),
+              Axis("sched", "method", ("das", "random"))])
     rows: List[Row] = []
-    for epochs in (1, 2, 3):
-        for method in ("das", "random"):
-            hists = common.run_fl_batch(common.FLBenchConfig(
-                quick=quick, model=model, method=method, n_fixed=7,
-                local_epochs=epochs), scenarios)
-            finals = [h[-1].accuracy for h in hists]
-            rows.append((f"fig3/{model}/E{epochs}/{method}/final_acc",
-                         round(_mean(finals), 4),
-                         f"S={scenarios} min={min(finals):.3f} "
-                         f"max={max(finals):.3f}; paper: more E -> "
-                         f"higher acc; DAS >= random"))
+    for point, summary in results:
+        f = _final_acc(summary)
+        rows.append((f"fig3/{model}/E{point.fl.local_epochs}/"
+                     f"{point.sched.method}/final_acc",
+                     round(f["mean"], 4),
+                     f"S={scenarios} min={f['min']:.3f} "
+                     f"max={f['max']:.3f}; paper: more E -> "
+                     f"higher acc; DAS >= random"))
     return rows
 
 
@@ -83,42 +96,48 @@ def fig45_model_size(quick: bool = True, model: str = "mlp",
                      target: float = 0.85,
                      num_scenarios: int = 0) -> List[Row]:
     scenarios = _scenario_count(num_scenarios, quick)
+    results = common.run_fl_sweep(
+        common.FLBenchConfig(quick=quick, model=model),
+        scenarios,
+        axes=[Axis("wireless", "model_bits", (1e5, 5e5, 1e6)),
+              Axis("sched", "method", ("das", "abs", "full"))],
+        target=target)
     rows: List[Row] = []
-    for s_bits in (1e5, 5e5, 1e6):
-        for method in ("das", "abs", "full"):
-            hists = common.run_fl_batch(common.FLBenchConfig(
-                quick=quick, model=model, method=method,
-                model_bits=s_bits), scenarios)
-            reached = [common.rounds_to_accuracy(h, target) for h in hists]
-            hit = [r for r in reached if r > 0]
-            r_mean = round(_mean(hit), 2) if hit else -1
-            tot = [common.totals(h) for h in hists]
-            rows.append((f"fig45/{model}/s{int(s_bits)}/{method}/"
-                         f"rounds_to_{target}", r_mean,
-                         f"S={scenarios} reached={len(hit)}/{scenarios} "
-                         f"final={_mean(t['final_accuracy'] for t in tot):.3f} "
-                         f"sel={_mean(t['mean_selected'] for t in tot):.1f}"))
+    for point, summary in results:
+        r2t = summary["scalar.rounds_to_target"]
+        reached = int(r2t["count"])
+        r_mean = round(float(r2t["mean"]), 2) if reached else -1
+        s_bits = point.wireless.model_bits
+        rows.append((f"fig45/{model}/s{int(s_bits)}/{point.sched.method}/"
+                     f"rounds_to_{target}", r_mean,
+                     f"S={scenarios} reached={reached}/{scenarios} "
+                     f"final="
+                     f"{float(summary['scalar.final_accuracy']['mean']):.3f} "
+                     f"sel="
+                     f"{float(summary['scalar.mean_selected']['mean']):.1f}"))
     return rows
 
 
 def fig67_energy_time(quick: bool = True, model: str = "mlp",
                       num_scenarios: int = 0) -> List[Row]:
     scenarios = _scenario_count(num_scenarios, quick)
+    results = common.run_fl_sweep(
+        common.FLBenchConfig(quick=quick, model=model),
+        scenarios,
+        axes=[Axis("sched", "method", ("full", "abs", "das"))])
     rows: List[Row] = []
     ref_energy = None
-    for method in ("full", "abs", "das"):
-        hists = common.run_fl_batch(common.FLBenchConfig(
-            quick=quick, model=model, method=method), scenarios)
-        tot = [common.totals(h) for h in hists]
-        energy = _mean(t["energy_per_device_j"] for t in tot)
+    for point, summary in results:
+        method = point.sched.method
+        energy = float(summary["scalar.energy_per_device"]["mean"])
         rows.append((f"fig67/{model}/{method}/energy_per_device_j",
                      round(energy, 4),
-                     f"S={scenarios} "
-                     f"acc={_mean(t['final_accuracy'] for t in tot):.3f}"))
+                     f"S={scenarios} acc="
+                     f"{float(summary['scalar.final_accuracy']['mean']):.3f}"))
         rows.append((f"fig67/{model}/{method}/completion_time_s",
-                     round(_mean(t["time_total_s"] for t in tot), 4),
+                     round(float(summary["scalar.time_total"]["mean"]), 4),
                      f"sel/round="
-                     f"{_mean(t['mean_selected'] for t in tot):.1f}"))
+                     f"{float(summary['scalar.mean_selected']['mean']):.1f}"))
         if method == "full":
             ref_energy = energy
         else:
@@ -129,18 +148,25 @@ def fig67_energy_time(quick: bool = True, model: str = "mlp",
     return rows
 
 
-def selection_fraction_sweep(quick: bool = True) -> List[Row]:
-    """Repro-divergence probe: DAS selected fraction vs model size
-    (EXPERIMENTS.md §Repro-divergences)."""
+def selection_fraction_sweep(quick: bool = True,
+                             num_scenarios: int = 0) -> List[Row]:
+    """Repro-divergence probe: DAS selected fraction vs model size and
+    re-entry pricing (EXPERIMENTS.md §Repro-divergences), as a
+    (model_bits x reentry) grid through the sweep engine."""
+    scenarios = _scenario_count(num_scenarios, quick)
+    cfg = common.FLBenchConfig(quick=quick, model="mlp", method="das",
+                               num_rounds=3)
+    results = common.run_fl_sweep(
+        cfg, scenarios,
+        axes=[Axis("wireless", "model_bits", (1e5, 1e6)),
+              Axis("sched", "reentry", ("strict", "mean"))])
     rows: List[Row] = []
-    for s_bits in (1e5, 1e6):
-        for reentry in ("strict", "mean"):
-            hist = common.run_fl(common.FLBenchConfig(
-                quick=quick, model="mlp", method="das",
-                model_bits=s_bits, num_rounds=3, reentry=reentry))
-            frac = (sum(r.n_selected for r in hist) / len(hist)
-                    / common.FLBenchConfig(quick=quick).num_devices)
-            rows.append((f"divergence/das_fraction/s{int(s_bits)}/"
-                         f"{reentry}", round(frac, 3),
-                         "paper claims <=0.20 (under-determined)"))
+    for point, summary in results:
+        frac = (float(summary["scalar.mean_selected"]["mean"])
+                / cfg.num_devices)
+        rows.append((f"divergence/das_fraction/"
+                     f"s{int(point.wireless.model_bits)}/"
+                     f"{point.sched.reentry}", round(frac, 3),
+                     f"S={scenarios}; paper claims <=0.20 "
+                     f"(under-determined)"))
     return rows

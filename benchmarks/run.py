@@ -9,9 +9,11 @@ paper's K=100 / 1200x50-shard / 15-round configuration.
 Suites: fig2 (limited devices, scenario-averaged via the vmapped batch
 driver), fig3 (local epochs), fig45 (model size), fig67 (energy/time vs
 baseline+ABS), divergence (selected-fraction probe), fl_e2e (legacy loop
-vs scan vs batch simulation throughput; writes BENCH_fl_e2e.json), sched
-(scheduler latency), kernels (Pallas micro), roofline (requires
-dryrun_results.json from repro.launch.dryrun).
+vs scan vs batch vs sharded-sweep simulation throughput; writes
+BENCH_fl_e2e.json), sched (scheduler latency, includes sweep/* rows),
+sweep (sweep engine rows only — the CI shard_map smoke), kernels
+(Pallas micro), roofline (requires dryrun_results.json from
+repro.launch.dryrun).
 """
 
 from __future__ import annotations
@@ -69,6 +71,13 @@ def main() -> None:
     if want("sched"):
         from benchmarks import sched_micro
         for r in sched_micro.run(quick):
+            _emit(r)
+    elif want("sweep"):
+        # Standalone sweep smoke (CI runs this under
+        # XLA_FLAGS=--xla_force_host_platform_device_count=4 so the
+        # sharded row exercises the real shard_map partitioning).
+        from benchmarks import sched_micro
+        for r in sched_micro.sweep_rows(quick):
             _emit(r)
 
     if want("kernels"):

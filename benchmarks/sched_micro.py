@@ -16,6 +16,13 @@ streaming subsystem adds to every round (DESIGN.md §7): the fused
 count-delta -> diversity -> staleness pass, pure-jax reference vs the
 Pallas ``stream_update`` kernel, single scenario and the batched
 ``(S, K, C)`` lane.
+
+The ``sweep/*`` rows cover the Monte-Carlo sweep engine (DESIGN.md §8):
+the jitted Welford chunk-fold (the O(R) aggregation every chunk pays)
+and one engine chunk execution on a miniature FEEL world, shard_map'd
+over the present devices vs the plain vmap program.  Under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI sweep
+smoke) the sharded row exercises the real multi-device partitioning.
 """
 
 from __future__ import annotations
@@ -116,6 +123,74 @@ def bench_stream(path: str, k: int, c: int = 10, s: int = 1,
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _sweep_world():
+    """Miniature FEEL world for the engine chunk rows (kept tiny so the
+    compile inside the bench stays a few seconds)."""
+    import functools
+
+    from repro.core import federated
+    from repro.data import partition, synthetic
+    from repro.models import paper_nets
+    from repro.sweep import grid as sweep_grid
+
+    imgs, labs = synthetic.generate(0, samples_per_class=260)
+    data = partition.partition(
+        imgs, labs, seed=1,
+        spec=partition.PartitionSpec(num_devices=16, num_shards=50,
+                                     shard_size=50))
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=16)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    spec = sweep_grid.SweepSpec(
+        fl=federated.FLConfig(num_rounds=3, batch_size=50,
+                              learning_rate=0.1),
+        sched=scheduler.SchedulerConfig(method="das", n_min=2,
+                                        iterations_max=3),
+        wireless=wireless.WirelessConfig(),
+        scenarios_per_point=4, base_seed=0)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    return spec, data, loss, ev, params
+
+
+def sweep_rows(quick: bool = True) -> List[Tuple[str, float, str]]:
+    """``sweep/*`` micro rows: Welford fold + engine chunk latency."""
+    from repro.sweep import engine as sweep_engine
+
+    rows: List[Tuple[str, float, str]] = []
+    s, r = (8, 16) if quick else (32, 16)
+    batch = jax.random.normal(jax.random.key(0), (s, r))
+    state = sweep_engine.welford_init((r,))
+    fold = jax.jit(sweep_engine.welford_fold)
+    state = fold(state, batch)                 # compile
+    jax.block_until_ready(state.mean)
+    iters = 100
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = fold(state, batch)
+    jax.block_until_ready(state.mean)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append((f"sweep/welford_fold/S{s}xR{r}", round(us, 1),
+                 "us_per_chunk_fold"))
+
+    spec, data, loss, ev, params = _sweep_world()
+    n_dev = len(jax.devices())
+    for mode in ("sharded", "vmap"):
+        eng = sweep_engine.SweepEngine(
+            spec, data=data, loss_fn=loss, eval_fn=ev,
+            init_params=params, use_sharding=(mode == "sharded"))
+        point = eng.points[0]
+        agg = eng.run_point(point)             # compile + first exec
+        jax.block_until_ready(agg["round"]["accuracy"].mean)
+        t0 = time.perf_counter()
+        agg = eng.run_point(point)
+        jax.block_until_ready(agg["round"]["accuracy"].mean)
+        ms = (time.perf_counter() - t0) * 1e3
+        rows.append((f"sweep/chunk/S{spec.scenarios_per_point}_{mode}",
+                     round(ms, 2),
+                     f"ms_per_chunk devices={n_dev}"))
+    return rows
+
+
 def run(quick: bool = True) -> List[Tuple[str, float, str]]:
     rows = []
     ks = (50, 100) if quick else (50, 100, 200, 400)
@@ -140,4 +215,5 @@ def run(quick: bool = True) -> List[Tuple[str, float, str]]:
         us = bench_stream(path, ks[-1], s=s_batch)
         rows.append((f"streaming/{path}_S{s_batch}/K{ks[-1]}",
                      round(us, 1), "us_per_batched_refresh"))
+    rows.extend(sweep_rows(quick))
     return rows

@@ -11,9 +11,13 @@ per-round accuracy/energy/time reporting (the numbers behind Figs 2-11).
 
 The whole multi-round simulation runs as one compiled scan
 (``federated.run_federated``); with ``--scenarios S > 1`` it reproduces
-the paper's Monte-Carlo averaging — S independent network/PRNG
-realizations as ONE vmapped program (``federated.run_federated_batch``)
-— and reports the mean and spread of the per-scenario results.
+the paper's Monte-Carlo averaging through the sharded sweep engine
+(``repro.sweep``, DESIGN.md §8): scenarios execute in shard_map'd
+chunks over the present devices (``--chunk-scenarios`` bounds the
+scenarios per dispatch) with online Welford aggregation, so host memory
+stays O(rounds) however many scenarios run.  ``--sweep-ckpt PATH``
+checkpoints the aggregate + grid cursor after every chunk — a killed
+run re-invoked with the same arguments resumes bit-for-bit.
 
 ``--stream <process>`` turns the scenario non-stationary: per-device
 data arrives/drifts/evicts round by round inside the scan carry and the
@@ -27,6 +31,7 @@ import functools
 
 import jax
 
+from repro import sweep
 from repro.core import federated, scheduler, streaming, wireless
 from repro.data import partition, synthetic
 from repro.models import paper_nets
@@ -45,7 +50,12 @@ def main() -> None:
     ap.add_argument("--full-data", action="store_true",
                     help="paper scale: 1200 shards x 50 (else 300x50)")
     ap.add_argument("--scenarios", type=int, default=1,
-                    help="Monte-Carlo scenarios run as one vmapped scan")
+                    help="Monte-Carlo scenarios through the sharded "
+                         "sweep engine")
+    ap.add_argument("--chunk-scenarios", type=int, default=0,
+                    help="scenarios per compiled chunk (0: all in one)")
+    ap.add_argument("--sweep-ckpt", default="",
+                    help="checkpoint path for resumable sweeps")
     ap.add_argument("--stream", default="",
                     choices=["", "static", "poisson", "drift", "shift",
                              "evict"],
@@ -91,27 +101,30 @@ def main() -> None:
     eval_fn = functools.partial(paper_nets.accuracy, spec=mspec)
 
     if args.scenarios > 1:
-        nets = wireless.sample_networks(jax.random.key(args.seed + 2),
-                                        args.scenarios, args.devices, wcfg)
-        keys = jax.random.split(jax.random.key(args.seed + 4),
-                                args.scenarios)
-        _, metrics = federated.run_federated_batch(
-            init_params=params, loss_fn=loss_fn, eval_fn=eval_fn,
-            data=data, nets=nets, wcfg=wcfg, scfg=scfg, fcfg=fcfg,
-            keys=keys)
-        hists = federated.batch_metrics_to_records(metrics)
+        spec = sweep.SweepSpec(
+            fl=fcfg, sched=scfg, wireless=wcfg,
+            scenarios_per_point=args.scenarios,
+            chunk_scenarios=args.chunk_scenarios,
+            base_seed=args.seed)
+        results = sweep.run_sweep(
+            spec, data=data, loss_fn=loss_fn, eval_fn=eval_fn,
+            init_params=params,
+            ckpt_path=args.sweep_ckpt or None)
+        _, summary = results[0]
+        acc = summary["round.accuracy"]
+        sel = summary["round.n_selected"]
+        t = summary["round.round_time"]
         for r in range(args.rounds):
-            accs = [h[r].accuracy for h in hists]
-            sels = [h[r].n_selected for h in hists]
-            times = [h[r].round_time for h in hists]
-            print(f"round {r:3d}: acc={sum(accs) / len(accs):.4f} "
-                  f"[{min(accs):.4f},{max(accs):.4f}] "
-                  f"sel={sum(sels) / len(sels):5.1f} "
-                  f"T={sum(times) / len(times):7.3f}s")
-        finals = [h[-1].accuracy for h in hists]
+            print(f"round {r:3d}: acc={acc['mean'][r]:.4f} "
+                  f"[{acc['min'][r]:.4f},{acc['max'][r]:.4f}] "
+                  f"sel={sel['mean'][r]:5.1f} "
+                  f"T={t['mean'][r]:7.3f}s")
+        final = summary["scalar.final_accuracy"]
         print(f"[feel] S={args.scenarios} final acc "
-              f"mean={sum(finals) / len(finals):.4f} "
-              f"min={min(finals):.4f} max={max(finals):.4f}")
+              f"mean={float(final['mean']):.4f} "
+              f"min={float(final['min']):.4f} "
+              f"max={float(final['max']):.4f} "
+              f"(std={float(final['std']):.4f})")
         return
 
     net = wireless.sample_network(jax.random.key(args.seed + 2),

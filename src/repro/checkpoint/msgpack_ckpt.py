@@ -1,9 +1,14 @@
 """Msgpack pytree checkpointing (no flax/orbax in the container).
 
-Format: a msgpack map ``{"__paths__": [...], "__meta__": {...}}`` plus one
-entry per leaf: ``{"dtype": str, "shape": [...], "data": bytes}``.
-Restore rebuilds the pytree and (optionally) device_puts every leaf with a
-target sharding — sharding-aware restore for the pod launcher.
+Format: a msgpack map ``{"__version__": int, "__meta__": {...},
+"leaves": {...}}`` with one entry per leaf: ``{"dtype": str,
+"shape": [...], "data": bytes}``.  The versioned header
+(:data:`FORMAT_VERSION`) lets downstream state formats — notably the
+sweep runner's resume checkpoints (``repro.sweep.runner``) — refuse
+files written by an incompatible future writer instead of silently
+misreading them; files from before the header existed load as version
+0.  Restore rebuilds the pytree and (optionally) device_puts every leaf
+with a target sharding — sharding-aware restore for the pod launcher.
 """
 
 from __future__ import annotations
@@ -17,6 +22,11 @@ import msgpack
 import numpy as np
 
 Params = Any
+
+# Bump when the on-disk layout changes incompatibly.  Readers accept
+# any version <= FORMAT_VERSION (additive evolution happens inside
+# ``__meta__``); newer-versioned files fail loudly.
+FORMAT_VERSION = 1
 
 
 def _flatten_with_paths(tree: Params) -> Dict[str, np.ndarray]:
@@ -39,6 +49,7 @@ def _flatten_with_paths(tree: Params) -> Dict[str, np.ndarray]:
 def save(path: str, tree: Params, meta: Optional[dict] = None) -> None:
     flat = _flatten_with_paths(tree)
     payload = {
+        "__version__": FORMAT_VERSION,
         "__meta__": meta or {},
         "leaves": {
             k: {"dtype": str(v.dtype), "shape": list(v.shape),
@@ -55,6 +66,11 @@ def save(path: str, tree: Params, meta: Optional[dict] = None) -> None:
 def load_flat(path: str) -> tuple[Dict[str, np.ndarray], dict]:
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
+    version = payload.get("__version__", 0)   # pre-header files: 0
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"{path}: checkpoint format version {version} is newer than "
+            f"this reader ({FORMAT_VERSION})")
     leaves = {
         k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"])
                          ).reshape(v["shape"])

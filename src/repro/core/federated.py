@@ -422,6 +422,20 @@ def make_feel_sim(*, loss_fn: Callable, eval_fn: Callable,
     return jax.jit(sim, donate_argnums=(0,) if donate_params else ())
 
 
+def scenario_keys(base_key: Array, start: int, count: int) -> Array:
+    """Per-scenario PRNG keys from *global* scenario indices.
+
+    ``key_i = fold_in(base_key, i)`` for ``i in [start, start + count)``:
+    scenario ``i``'s stream depends only on ``(base_key, i)``, never on
+    how a sweep is chunked or how many devices execute the chunk — the
+    seed-derivation contract the sweep engine (``repro.sweep``) and the
+    benchmark harness rely on (``tests/test_sweep.py``).  Contrast
+    ``jax.random.split(key, S)``, whose streams change with ``S``.
+    """
+    idx = jnp.arange(start, start + count, dtype=jnp.uint32)
+    return jax.vmap(lambda i: jax.random.fold_in(base_key, i))(idx)
+
+
 def tile_params(params: Params, num_scenarios: int) -> Params:
     """Stack ``num_scenarios`` copies of ``params`` along a new axis 0.
 
@@ -438,7 +452,9 @@ def make_feel_sim_batch(*, loss_fn: Callable, eval_fn: Callable,
                         wcfg: wireless.WirelessConfig,
                         scfg: scheduler.SchedulerConfig, fcfg: FLConfig,
                         capacity: int, eval_every: int = 1,
-                        donate_params: bool = False) -> Callable:
+                        donate_params: bool = False,
+                        mesh: Optional[jax.sharding.Mesh] = None,
+                        scenario_axis: str = "scenario") -> Callable:
     """Jitted S-scenario simulation: vmap over (net, key) only.
 
     Dataset and initial params broadcast; each scenario sees its own
@@ -454,12 +470,35 @@ def make_feel_sim_batch(*, loss_fn: Callable, eval_fn: Callable,
     usable (asserted in ``tests/test_federated.py``).  The batched carry
     materializes either way; donating it avoids holding a second copy
     across the whole scan.
+
+    ``mesh`` is the spec-in/spec-out entry (DESIGN.md §8): pass a mesh
+    carrying ``scenario_axis`` and the vmapped sim is wrapped in
+    ``shard_map`` with the scenario axis of ``nets``/``keys`` (and the
+    tiled params, when donating) partitioned over it and everything else
+    replicated — each device runs the same vmapped scan on its
+    ``S / mesh.shape[scenario_axis]`` local scenarios, with no
+    cross-device communication (scenarios are independent by
+    construction).  The batched ``fused_pgd`` / ``stream_update`` kernel
+    lanes and ``donate_params`` compose unchanged: both operate on the
+    per-shard local batch.  ``S`` must be divisible by the mesh axis
+    size (the sweep engine falls back to ``mesh=None`` otherwise).
     """
     sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
                     eval_every)
     vsim = jax.vmap(sim, in_axes=(0 if donate_params else None,
                                   None, None, None, None,
                                   None, None, None, 0, 0))
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        sharded = jax.sharding.PartitionSpec(scenario_axis)
+        rep = jax.sharding.PartitionSpec()
+        vsim = shard_map(
+            vsim, mesh=mesh,
+            in_specs=(sharded if donate_params else rep,
+                      rep, rep, rep, rep, rep, rep, rep,
+                      sharded, sharded),
+            out_specs=(sharded, sharded),
+            check_rep=False)
     return jax.jit(vsim, donate_argnums=(0,) if donate_params else ())
 
 

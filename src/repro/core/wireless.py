@@ -112,6 +112,22 @@ def sample_networks(key: Array, num_scenarios: int, num_devices: int,
     return jax.vmap(lambda k: sample_network(k, num_devices, cfg))(keys)
 
 
+def sample_networks_indexed(key: Array, indices: Array, num_devices: int,
+                            cfg: WirelessConfig) -> NetworkState:
+    """Network realizations for explicit *global* scenario indices.
+
+    Scenario ``i``'s draw comes from ``fold_in(key, i)``, so the
+    realization depends only on ``(key, i)`` — never on how many
+    scenarios share the batch, how a sweep is chunked, or how many
+    devices execute it.  The sweep engine (``repro.sweep``) builds every
+    chunk's networks through this entry; ``sample_networks`` (split-
+    based, batch-size-dependent) remains for one-shot callers.
+    """
+    indices = jnp.asarray(indices, jnp.uint32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(indices)
+    return jax.vmap(lambda k: sample_network(k, num_devices, cfg))(keys)
+
+
 def sample_fading(key: Array, net: NetworkState) -> Array:
     """Per-round channel gains ``|g_k|^2 = d^-beta * |h|^2`` with Rayleigh h.
 

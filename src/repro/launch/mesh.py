@@ -25,6 +25,29 @@ def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
     return jax.make_mesh((data, model_axis), ("data", "model"))
 
 
+def make_scenario_mesh(max_devices: int = 0,
+                       axis: str = "scenario") -> jax.sharding.Mesh:
+    """1-D mesh over the present devices for Monte-Carlo scenario sharding.
+
+    The sweep engine (``repro.sweep.engine``) partitions the scenario
+    axis of the batched FEEL sim over this mesh; with one device it
+    degenerates to a 1-element mesh and ``shard_map`` becomes a no-op
+    partitioning (same compiled program as the plain vmap).  On CPU,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    importing jax) exposes N host devices — the CI sweep smoke exercises
+    the real multi-device path that way.
+    """
+    n = len(jax.devices())
+    if max_devices > 0:
+        n = min(n, max_devices)
+    return jax.make_mesh((n,), (axis,))
+
+
+def scenario_shard_count(mesh: jax.sharding.Mesh,
+                         axis: str = "scenario") -> int:
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
 def data_parallel_size(mesh: jax.sharding.Mesh) -> int:
     size = 1
     for a in ("pod", "data"):

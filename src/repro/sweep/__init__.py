@@ -1,0 +1,18 @@
+"""Sharded Monte-Carlo sweep engine (DESIGN.md §8).
+
+``grid``   — declarative scenario grids (SweepSpec/Axis/GridPoint) with
+             fold_in-derived, chunk-invariant per-scenario seeds.
+``engine`` — shard_map chunk execution + online Welford aggregation
+             (O(R) host state regardless of scenario count).
+``runner`` — resumable execution: Welford carry + grid cursor
+             checkpointed through ``checkpoint.msgpack_ckpt``.
+"""
+
+from repro.sweep.grid import Axis, GridPoint, SweepSpec
+from repro.sweep.engine import (SweepEngine, Welford, aggregate_summary,
+                                welford_fold, welford_init)
+from repro.sweep.runner import SweepRunner, run_sweep
+
+__all__ = ["Axis", "GridPoint", "SweepSpec", "SweepEngine", "Welford",
+           "aggregate_summary", "welford_fold", "welford_init",
+           "SweepRunner", "run_sweep"]

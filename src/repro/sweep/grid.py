@@ -1,0 +1,212 @@
+"""Declarative scenario grids for Monte-Carlo sweeps (DESIGN.md §8).
+
+A :class:`SweepSpec` names the base configs (:class:`FLConfig`,
+:class:`SchedulerConfig`, :class:`WirelessConfig`) plus a tuple of
+:class:`Axis` overrides; :meth:`SweepSpec.expand` takes the cartesian
+product and yields one :class:`GridPoint` per combination.  Every grid
+point runs ``scenarios_per_point`` Monte-Carlo scenarios, numbered by a
+**global scenario index**: slot ``j`` of every point under common
+random numbers (the default — paired comparisons on identical channel
+draws), or the disjoint ``point.index * scenarios_per_point + j``
+ranges when ``common_random_numbers=False``.
+
+Seed derivation is the load-bearing contract: scenario ``i``'s PRNG
+streams come from ``jax.random.fold_in(base, i)`` — the network
+realization from ``fold_in(net_base, i)``
+(``wireless.sample_networks_indexed``) and the simulation stream from
+``fold_in(sim_base, i)`` (``federated.scenario_keys``) — so the random
+trajectory of a scenario depends only on ``(SweepSpec.base_seed, i)``.
+Chunk size, chunk order, device count and shard placement can all
+change without perturbing a single scenario (``tests/test_sweep.py``
+proves it), which is what makes resumable and re-sharded sweeps
+meaningful Monte-Carlo estimates of the same population.
+
+Config axes are *static*: each grid point compiles its own simulation
+(method/epochs/model-bits all shape the traced program), while the
+scenario axis inside a point is the vmapped/sharded one.  The
+``stream`` target patches fields of ``fl.stream`` so data-quality
+sweeps (arrival rate x staleness weight x process) ride the same grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+from typing import Any, List, Tuple
+
+from repro.core import federated, scheduler, wireless
+
+# Axis targets -> which base config the field override applies to.
+TARGETS = ("fl", "sched", "wireless", "stream")
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One swept dimension: ``target.field`` ranging over ``values``."""
+
+    target: str            # fl | sched | wireless | stream
+    field: str
+    values: Tuple[Any, ...]
+
+    def __post_init__(self):
+        if self.target not in TARGETS:
+            raise ValueError(f"unknown axis target {self.target!r}; "
+                             f"expected one of {TARGETS}")
+        if not self.values:
+            raise ValueError(f"axis {self.target}.{self.field}: empty "
+                             f"value tuple")
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPoint:
+    """One fully-resolved configuration of the sweep grid."""
+
+    index: int                      # row-major position in the grid
+    name: str                       # "method=das,n_fixed=3" ("base" if no axes)
+    fl: federated.FLConfig
+    sched: scheduler.SchedulerConfig
+    wireless: wireless.WirelessConfig
+    overrides: Tuple[Tuple[str, str, Any], ...]  # (target, field, value)
+
+
+def _check_field(cfg: Any, target: str, field: str) -> None:
+    names = {f.name for f in dataclasses.fields(cfg)}
+    if field not in names:
+        raise ValueError(f"axis {target}.{field}: {type(cfg).__name__} "
+                         f"has no field {field!r}")
+
+
+def _apply(fl: federated.FLConfig, sched: scheduler.SchedulerConfig,
+           wcfg: wireless.WirelessConfig,
+           overrides: Tuple[Tuple[str, str, Any], ...]):
+    for target, field, value in overrides:
+        if target == "fl":
+            _check_field(fl, target, field)
+            fl = dataclasses.replace(fl, **{field: value})
+        elif target == "sched":
+            _check_field(sched, target, field)
+            sched = dataclasses.replace(sched, **{field: value})
+        elif target == "wireless":
+            _check_field(wcfg, target, field)
+            wcfg = dataclasses.replace(wcfg, **{field: value})
+        else:  # stream
+            if fl.stream is None:
+                raise ValueError(
+                    f"axis stream.{field}: base FLConfig.stream is None "
+                    f"(set a StreamConfig to sweep streaming knobs)")
+            _check_field(fl.stream, target, field)
+            fl = dataclasses.replace(
+                fl, stream=dataclasses.replace(fl.stream, **{field: value}))
+    return fl, sched, wcfg
+
+
+def _fmt(value: Any) -> str:
+    if isinstance(value, float):
+        return f"{value:g}"
+    return str(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A Monte-Carlo sweep: config grid x scenarios, chunked for execution.
+
+    ``chunk_scenarios`` bounds how many scenarios run per compiled
+    dispatch (0 = all of a point's scenarios in one chunk); the engine
+    shards each chunk's scenario axis over the mesh.  Chunking is an
+    execution detail — per-scenario streams are chunk-invariant by the
+    fold_in contract — but it *is* part of the resume schedule, so it
+    joins :meth:`fingerprint`.
+    """
+
+    fl: federated.FLConfig = federated.FLConfig()
+    sched: scheduler.SchedulerConfig = scheduler.SchedulerConfig()
+    wireless: wireless.WirelessConfig = wireless.WirelessConfig()
+    axes: Tuple[Axis, ...] = ()
+    scenarios_per_point: int = 4
+    chunk_scenarios: int = 0        # 0 -> one chunk per grid point
+    base_seed: int = 0
+    eval_every: int = 1
+    # Common random numbers (True, the default): every grid point runs
+    # the SAME scenario indices 0..S-1, i.e. identical channel/PRNG
+    # realizations — paired comparisons across config points (DAS vs
+    # random on the same fading draws), the classic Monte-Carlo variance
+    # reduction the paper figures rely on.  False gives each point its
+    # own disjoint index range — independent populations.
+    common_random_numbers: bool = True
+
+    # -- grid expansion -------------------------------------------------
+
+    def expand(self) -> List[GridPoint]:
+        points: List[GridPoint] = []
+        combos = itertools.product(*[ax.values for ax in self.axes]) \
+            if self.axes else [()]
+        for index, combo in enumerate(combos):
+            overrides = tuple(
+                (ax.target, ax.field, v)
+                for ax, v in zip(self.axes, combo))
+            fl, sched, wcfg = _apply(self.fl, self.sched, self.wireless,
+                                     overrides)
+            name = ",".join(f"{f}={_fmt(v)}" for _, f, v in overrides) \
+                or "base"
+            points.append(GridPoint(index=index, name=name, fl=fl,
+                                    sched=sched, wireless=wcfg,
+                                    overrides=overrides))
+        return points
+
+    @property
+    def num_points(self) -> int:
+        n = 1
+        for ax in self.axes:
+            n *= len(ax.values)
+        return n
+
+    @property
+    def total_scenarios(self) -> int:
+        return self.num_points * self.scenarios_per_point
+
+    # -- execution schedule ---------------------------------------------
+
+    def scenario_start(self, point_index: int) -> int:
+        """Global index of the first scenario of a grid point (0 for
+        every point under common random numbers)."""
+        if self.common_random_numbers:
+            return 0
+        return point_index * self.scenarios_per_point
+
+    def point_chunks(self) -> List[Tuple[int, int]]:
+        """(offset within point, size) chunk schedule, same for every
+        point.  The Welford fold visits chunks in this order, so the
+        schedule is part of the resume contract."""
+        size = self.chunk_scenarios or self.scenarios_per_point
+        out = []
+        off = 0
+        while off < self.scenarios_per_point:
+            out.append((off, min(size, self.scenarios_per_point - off)))
+            off += size
+        return out
+
+    def schedule(self) -> List[Tuple[int, int, int]]:
+        """Flat (point_index, global_start, size) chunk list — the unit
+        of work the runner checkpoints between."""
+        out = []
+        for p in range(self.num_points):
+            base = self.scenario_start(p)
+            for off, size in self.point_chunks():
+                out.append((p, base + off, size))
+        return out
+
+    # -- identity --------------------------------------------------------
+
+    def fingerprint(self) -> str:
+        """Stable digest of everything that shapes results *and* the
+        chunk/fold schedule; a resume checkpoint with a different
+        fingerprint is rejected (``repro.sweep.runner``)."""
+        canon = repr((self.fl, self.sched, self.wireless, self.axes,
+                      self.scenarios_per_point, self.chunk_scenarios,
+                      self.base_seed, self.eval_every,
+                      self.common_random_numbers))
+        return hashlib.sha1(canon.encode()).hexdigest()
+
+
+__all__ = ["Axis", "GridPoint", "SweepSpec", "TARGETS"]

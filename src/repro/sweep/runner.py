@@ -1,0 +1,166 @@
+"""Resumable sweep execution: chunk cursor + Welford carry on disk.
+
+The runner walks the :meth:`SweepSpec.schedule` — the flat
+``(point, global_start, size)`` chunk list — and checkpoints the
+O(R)-sized state through ``checkpoint.msgpack_ckpt`` after every
+``checkpoint_every`` chunks: the per-point Welford aggregates plus a
+cursor and the spec fingerprint.  A killed sweep restarts **bit for
+bit**: per-scenario streams are fold_in-derived from global indices
+(chunking doesn't perturb them), the chunk schedule is part of the
+fingerprint, and the Welford fold re-enters at exactly the chunk the
+cursor names — so the resumed final aggregates are bitwise identical to
+an uninterrupted run (``tests/test_sweep.py``).
+
+Checkpoints refuse to resume across incompatible writers twice over:
+the msgpack container's ``FORMAT_VERSION`` header guards the leaf
+encoding, and ``STATE_VERSION`` in the meta dict guards the runner's
+own state layout.  A fingerprint mismatch (the spec changed underneath
+the checkpoint) is an error, not a silent restart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import msgpack_ckpt
+from repro.sweep import engine as engine_lib
+from repro.sweep import grid as grid_lib
+
+# Version of the runner's resume-state layout inside the checkpoint
+# meta/tree (independent of the msgpack container version).
+STATE_VERSION = 1
+
+
+def _tree_from_flat(flat: Dict[str, np.ndarray]) -> dict:
+    """Rebuild the nested dict msgpack_ckpt flattened ('/' separator;
+    grid-point names never contain '/')."""
+    tree: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+@dataclasses.dataclass
+class SweepRunner:
+    """Drives a :class:`SweepEngine` through its chunk schedule with
+    checkpointed progress.
+
+    ``max_chunks`` bounds how many chunks one ``run`` call executes —
+    the hook the kill/resume test uses, and a natural fit for
+    preemptible allocations (run until evicted, resume later).
+    """
+
+    engine: engine_lib.SweepEngine
+    ckpt_path: str
+    checkpoint_every: int = 1
+
+    def __post_init__(self):
+        self.spec = self.engine.spec
+        self._schedule = self.spec.schedule()
+        self._points = self.engine.points
+
+    # -- state <-> disk --------------------------------------------------
+
+    def _save(self, aggs: Dict[int, object], cursor: int) -> None:
+        # Keyed by the stable point index, not the formatted name: names
+        # can collide (two axis values formatting alike) and string axis
+        # values may contain '/', the flattener's path separator.
+        tree = {"aggs": {str(i): engine_lib.aggregate_to_tree(a)
+                         for i, a in aggs.items()}}
+        msgpack_ckpt.save(self.ckpt_path, tree, meta={
+            "state_version": STATE_VERSION,
+            "cursor": cursor,
+            "fingerprint": self.spec.fingerprint(),
+            # Engine-owned knob that shapes the folded scalars
+            # (rounds_to_target / reached_target): resuming under a
+            # different target would silently mix populations.
+            "target_accuracy": self.engine.target_accuracy,
+            "total_chunks": len(self._schedule),
+            "point_names": {str(p.index): p.name
+                            for p in self._points},
+        })
+
+    def _load(self) -> Tuple[Dict[int, object], int]:
+        flat, meta = msgpack_ckpt.load_flat(self.ckpt_path)
+        version = meta.get("state_version", 0)
+        if version != STATE_VERSION:
+            raise ValueError(
+                f"{self.ckpt_path}: sweep state version {version} != "
+                f"supported {STATE_VERSION}")
+        if meta.get("fingerprint") != self.spec.fingerprint():
+            raise ValueError(
+                f"{self.ckpt_path}: checkpoint was written for a "
+                f"different SweepSpec (fingerprint mismatch) — refusing "
+                f"to fold incompatible scenario populations")
+        if meta.get("target_accuracy") != self.engine.target_accuracy:
+            raise ValueError(
+                f"{self.ckpt_path}: checkpoint target_accuracy "
+                f"{meta.get('target_accuracy')} != engine's "
+                f"{self.engine.target_accuracy} — the rounds_to_target "
+                f"scalars would mix judgments against two targets")
+        tree = _tree_from_flat(flat)
+        aggs = {int(idx): engine_lib.aggregate_from_tree(sub)
+                for idx, sub in tree.get("aggs", {}).items()}
+        return aggs, int(meta["cursor"])
+
+    # -- execution -------------------------------------------------------
+
+    def run(self, resume: bool = True,
+            max_chunks: Optional[int] = None
+            ) -> Optional[List[Tuple[grid_lib.GridPoint,
+                                     Dict[str, Dict[str, np.ndarray]]]]]:
+        """Execute (the remainder of) the sweep.
+
+        Returns per-point ``(GridPoint, summary)`` in grid order once
+        every chunk has run; ``None`` if stopped early by
+        ``max_chunks`` (state is checkpointed either way).
+        """
+        aggs: Dict[int, object] = {}
+        cursor = 0
+        if resume and os.path.exists(self.ckpt_path):
+            aggs, cursor = self._load()
+        executed = 0
+        while cursor < len(self._schedule):
+            if max_chunks is not None and executed >= max_chunks:
+                self._save(aggs, cursor)
+                return None
+            point_idx, start, size = self._schedule[cursor]
+            point = self._points[point_idx]
+            agg = aggs.get(point_idx)
+            if agg is None:
+                agg = engine_lib.aggregate_init(point.fl.num_rounds)
+            aggs[point_idx] = self.engine.run_chunk(point, start, size,
+                                                    agg)
+            cursor += 1
+            executed += 1
+            if cursor % self.checkpoint_every == 0 \
+                    or cursor == len(self._schedule):
+                self._save(aggs, cursor)
+        return [(self._points[i], engine_lib.aggregate_summary(aggs[i]))
+                for i in sorted(aggs)]
+
+
+def run_sweep(spec: grid_lib.SweepSpec, *, data, loss_fn, eval_fn,
+              init_params, ckpt_path: Optional[str] = None,
+              target_accuracy: float = 0.85, use_sharding: bool = True,
+              donate_params: bool = False, resume: bool = True):
+    """One-call sweep: build the engine, optionally resume from
+    ``ckpt_path``, return per-point summaries."""
+    eng = engine_lib.SweepEngine(
+        spec, data=data, loss_fn=loss_fn, eval_fn=eval_fn,
+        init_params=init_params, target_accuracy=target_accuracy,
+        use_sharding=use_sharding, donate_params=donate_params)
+    if ckpt_path is None:
+        return eng.run()
+    return SweepRunner(eng, ckpt_path).run(resume=resume)
+
+
+__all__ = ["SweepRunner", "run_sweep", "STATE_VERSION"]
