@@ -22,6 +22,15 @@ Measures, per device count K:
   compiled partitioning; under forced host devices
   (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) the sharded
   row is the real multi-device path.
+* ``compressed/*`` (at K=``batch_devices``) — the compressed-uplink
+  subsystem (DESIGN.md §9): the scan driver with ``codec=quant`` at 8
+  bits vs ``codec=none`` — invocation latency (the quantize pass rides
+  inside the same compiled scan; the flatten/error-feedback carry is
+  common to both arms) and the simulated totals.  NB the energy ratio
+  is a *joint* outcome, not ~b/32: at K=100 the 4x cheaper uplinks flip
+  DAS's admission economics and the selected set grows, so total energy
+  can RISE (1.46x measured) while per-device energy falls — see
+  EXPERIMENTS.md §Compression.
 
 The legacy driver is measured with the reference Sub2 allocator preset
 it shipped with; the scan/batch drivers use ``Sub2Params.fast()`` — the
@@ -249,6 +258,44 @@ def _bench_sweep(cfg: E2EConfig,
     return out
 
 
+def _bench_compressed(cfg: E2EConfig) -> Dict[str, float]:
+    """Scan-driver invocations with codec=quant@8 vs codec=none."""
+    from repro.core import compression
+
+    k = cfg.batch_devices
+    data, net, wcfg, params, loss, ev, fcfg = _world(k, cfg)
+    rounds = fcfg.num_rounds
+    hists = federated.client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    out: Dict[str, float] = {"devices": k, "rounds": rounds}
+    totals: Dict[str, Tuple[float, float]] = {}
+    for codec in ("none", "quant"):
+        fcfg_c = dataclasses.replace(
+            fcfg, compression=compression.CompressionConfig(
+                codec=codec, bit_width=8))
+        sim = federated.make_feel_sim(
+            loss_fn=loss, eval_fn=ev, wcfg=wcfg, scfg=_scfg(cfg, True),
+            fcfg=fcfg_c, capacity=data.capacity, eval_every=rounds)
+        args = (params, data.images, data.labels, data.mask, data.sizes,
+                hists, test_x, data.test_labels, net, jax.random.key(4))
+        t0 = time.perf_counter()
+        _, metrics = sim(*args)
+        jax.block_until_ready(metrics.energy_total)
+        out[f"{codec}_first_call_s"] = time.perf_counter() - t0
+        out[f"{codec}_invocation_s"] = _median(
+            lambda: jax.block_until_ready(sim(*args)[1].energy_total),
+            cfg.repeats)
+        totals[codec] = (float(jnp.sum(metrics.energy_total)),
+                         float(metrics.accuracy[-1]))
+    out["energy_none_j"], out["final_acc_none"] = totals["none"]
+    out["energy_quant8_j"], out["final_acc_quant8"] = totals["quant"]
+    out["energy_ratio_quant8_vs_none"] = (
+        out["energy_quant8_j"] / max(out["energy_none_j"], 1e-12))
+    out["invocation_overhead_vs_none"] = (
+        out["quant_invocation_s"] / out["none_invocation_s"])
+    return out
+
+
 def run(quick: bool = True) -> List[Row]:
     cfg = E2EConfig(rounds=5 if quick else 15, repeats=5)
     results: Dict[str, object] = {"quick": quick,
@@ -283,6 +330,23 @@ def run(quick: bool = True) -> List[Row]:
                  f"aggregate_speedup_same_preset",
                  round(b["aggregate_speedup_vs_legacy_fast"], 2),
                  "vs sequential legacy_fast invocations (driver only)"))
+    comp = _bench_compressed(cfg)
+    results["compressed"] = comp
+    rows.append((f"fl_e2e/compressed_K{cfg.batch_devices}/"
+                 f"energy_ratio_quant8_vs_none",
+                 round(comp["energy_ratio_quant8_vs_none"], 4),
+                 "joint effect: cheap uplinks can grow the admitted set "
+                 "(EXPERIMENTS.md SCompression)"))
+    rows.append((f"fl_e2e/compressed_K{cfg.batch_devices}/"
+                 f"invocation_overhead",
+                 round(comp["invocation_overhead_vs_none"], 3),
+                 "quant8 vs codec=none scan: quantize arithmetic only "
+                 "(flatten+EF carry is common to both arms)"))
+    rows.append((f"fl_e2e/compressed_K{cfg.batch_devices}/"
+                 f"final_acc_delta",
+                 round(comp["final_acc_quant8"]
+                       - comp["final_acc_none"], 4),
+                 "quant8 - none at equal rounds"))
     sw = _bench_sweep(cfg, singles[cfg.batch_devices])
     results["sweep"] = sw
     rows.append((f"fl_e2e/sweep_S{cfg.batch_scenarios}/"

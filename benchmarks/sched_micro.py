@@ -17,12 +17,21 @@ count-delta -> diversity -> staleness pass, pure-jax reference vs the
 Pallas ``stream_update`` kernel, single scenario and the batched
 ``(S, K, C)`` lane.
 
+The ``compress/*`` rows measure the per-round fused uplink-compression
+cost the compressed-uplink subsystem adds (DESIGN.md §9): the
+residual-accumulate -> quantize/top-k -> dequantize pass over the
+``(K, P)`` update matrix, pure-jax reference vs the Pallas
+``compress_update`` kernel, single scenario and the batched
+``(S, K, P)`` lane.
+
 The ``sweep/*`` rows cover the Monte-Carlo sweep engine (DESIGN.md §8):
 the jitted Welford chunk-fold (the O(R) aggregation every chunk pays)
 and one engine chunk execution on a miniature FEEL world, shard_map'd
-over the present devices vs the plain vmap program.  Under
+over the present devices vs the plain vmap program — plus a
+``chunk_compressed`` row running the same chunk with a ``quant`` codec
+grid point (the CI compressed-sweep smoke).  Under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI sweep
-smoke) the sharded row exercises the real multi-device partitioning.
+smoke) the sharded rows exercise the real multi-device partitioning.
 """
 
 from __future__ import annotations
@@ -123,6 +132,33 @@ def bench_stream(path: str, k: int, c: int = 10, s: int = 1,
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def bench_compress(path: str, k: int, p: int = 4096, s: int = 1,
+                   mode: str = "quant", iters: int = 20) -> float:
+    """Latency of ONE fused compress pass (us): residual accumulate ->
+    quantize/top-k -> dequantize over one round's ``(S, K, P)`` update
+    matrix."""
+    shape = (s, k, p) if s > 1 else (k, p)
+    u = jax.random.normal(jax.random.key(0), shape)
+    r = 0.2 * jax.random.normal(jax.random.key(1), shape)
+    widths = jnp.full(shape[:-1], 8.0)
+    sel = (jax.random.uniform(jax.random.key(2), shape[:-1]) > 0.5
+           ).astype(jnp.float32)
+    noise = jax.random.uniform(jax.random.key(3), shape)
+    keep = max(1, p // 20)
+    if path == "ref":
+        fn = jax.jit(functools.partial(kernel_ref.compress_update,
+                                       mode=mode, keep=keep))
+    else:
+        fn = jax.jit(functools.partial(kernel_ops.compress_update,
+                                       mode=mode, keep=keep))
+    args = (u, r, widths, sel, noise)
+    jax.block_until_ready(fn(*args))      # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
 def _sweep_world():
     """Miniature FEEL world for the engine chunk rows (kept tiny so the
     compile inside the bench stays a few seconds)."""
@@ -188,6 +224,32 @@ def sweep_rows(quick: bool = True) -> List[Tuple[str, float, str]]:
         rows.append((f"sweep/chunk/S{spec.scenarios_per_point}_{mode}",
                      round(ms, 2),
                      f"ms_per_chunk devices={n_dev}"))
+
+    # Compressed-sweep smoke (DESIGN.md §9): one quant-codec grid point
+    # through the sharded engine — under the CI sweep step's 4 forced
+    # host devices this runs the error-feedback carry and per-device
+    # payload pricing inside the real shard_map partitioning.
+    import dataclasses
+
+    from repro.core import compression
+
+    cspec = dataclasses.replace(
+        spec, fl=dataclasses.replace(
+            spec.fl, compression=compression.CompressionConfig(
+                codec="quant", bit_width=8)))
+    eng = sweep_engine.SweepEngine(
+        cspec, data=data, loss_fn=loss, eval_fn=ev, init_params=params)
+    point = eng.points[0]
+    agg = eng.run_point(point)                 # compile + first exec
+    jax.block_until_ready(agg["round"]["accuracy"].mean)
+    t0 = time.perf_counter()
+    agg = eng.run_point(point)
+    jax.block_until_ready(agg["round"]["accuracy"].mean)
+    ms = (time.perf_counter() - t0) * 1e3
+    rows.append((f"sweep/chunk_compressed/"
+                 f"S{cspec.scenarios_per_point}_sharded",
+                 round(ms, 2),
+                 f"ms_per_chunk codec=quant devices={n_dev}"))
     return rows
 
 
@@ -215,5 +277,18 @@ def run(quick: bool = True) -> List[Tuple[str, float, str]]:
         us = bench_stream(path, ks[-1], s=s_batch)
         rows.append((f"streaming/{path}_S{s_batch}/K{ks[-1]}",
                      round(us, 1), "us_per_batched_refresh"))
+    p_comp = 4096
+    for k in ks:
+        for path in ("ref", "kernel"):
+            us = bench_compress(path, k, p=p_comp)
+            rows.append((f"compress/{path}/K{k}", round(us, 1),
+                         f"us_per_quant_pass P={p_comp}"))
+    us = bench_compress("ref", ks[-1], p=p_comp, mode="topk")
+    rows.append((f"compress/ref_topk/K{ks[-1]}", round(us, 1),
+                 f"us_per_topk_pass P={p_comp}"))
+    for path in ("ref", "kernel"):
+        us = bench_compress(path, ks[-1], p=p_comp, s=s_batch)
+        rows.append((f"compress/{path}_S{s_batch}/K{ks[-1]}",
+                     round(us, 1), "us_per_batched_quant_pass"))
     rows.extend(sweep_rows(quick))
     return rows

@@ -24,6 +24,13 @@ data arrives/drifts/evicts round by round inside the scan carry and the
 scheduler re-ranks on the refreshed statistics (streaming subsystem,
 DESIGN.md §7).  Combine with ``--scenarios`` to run S independent
 streaming realizations through the batch driver.
+
+``--codec <name>`` compresses the uplink (compressed-uplink subsystem,
+DESIGN.md §9): devices upload quantized/sparsified updates with error
+feedback, the scheduler and Sub2 price the per-device post-compression
+payload bits, and the reported energy/time reflect the smaller uploads.
+``--sweep-jsonl PATH`` streams per-chunk aggregates as JSON lines for
+live dashboards while a ``--scenarios`` sweep runs.
 """
 
 import argparse
@@ -32,7 +39,8 @@ import functools
 import jax
 
 from repro import sweep
-from repro.core import federated, scheduler, streaming, wireless
+from repro.core import compression, federated, scheduler, streaming, \
+    wireless
 from repro.data import partition, synthetic
 from repro.models import paper_nets
 
@@ -56,6 +64,15 @@ def main() -> None:
                     help="scenarios per compiled chunk (0: all in one)")
     ap.add_argument("--sweep-ckpt", default="",
                     help="checkpoint path for resumable sweeps")
+    ap.add_argument("--sweep-jsonl", default="",
+                    help="stream per-chunk aggregates to this JSONL "
+                         "file (live-dashboard feed; resume-safe)")
+    ap.add_argument("--codec", default="",
+                    choices=["", "none", "quant", "topk", "adaptive"],
+                    help="uplink compression codec (default: "
+                         "uncompressed full-precision uploads)")
+    ap.add_argument("--bit-width", type=int, default=8,
+                    help="quantization bit width for --codec quant")
     ap.add_argument("--stream", default="",
                     choices=["", "static", "poisson", "drift", "shift",
                              "evict"],
@@ -84,7 +101,8 @@ def main() -> None:
           f"E={args.epochs}, s={args.model_bits / 1e3:.0f} kbit, "
           f"S={args.scenarios}"
           + (f", stream={args.stream}@{args.stream_rate:g}/round"
-             if args.stream else ""))
+             if args.stream else "")
+          + (f", codec={args.codec}" if args.codec else ""))
 
     scfg = scheduler.SchedulerConfig(
         method=args.method, n_min=1,
@@ -93,10 +111,13 @@ def main() -> None:
     stream_cfg = streaming.StreamConfig(
         process=args.stream, rate=args.stream_rate) if args.stream \
         else None
+    comp_cfg = compression.CompressionConfig(
+        codec=args.codec, bit_width=args.bit_width) if args.codec \
+        else None
     fcfg = federated.FLConfig(
         num_rounds=args.rounds, local_epochs=args.epochs, batch_size=50,
         learning_rate=0.1 if args.model == "mlp" else 0.05,
-        stream=stream_cfg)
+        stream=stream_cfg, compression=comp_cfg)
     loss_fn = functools.partial(paper_nets.loss_fn, spec=mspec)
     eval_fn = functools.partial(paper_nets.accuracy, spec=mspec)
 
@@ -109,7 +130,8 @@ def main() -> None:
         results = sweep.run_sweep(
             spec, data=data, loss_fn=loss_fn, eval_fn=eval_fn,
             init_params=params,
-            ckpt_path=args.sweep_ckpt or None)
+            ckpt_path=args.sweep_ckpt or None,
+            jsonl_path=args.sweep_jsonl or None)
         _, summary = results[0]
         acc = summary["round.accuracy"]
         sel = summary["round.n_selected"]

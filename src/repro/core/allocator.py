@@ -53,14 +53,20 @@ class Allocator(Protocol):
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
               alpha0: Optional[Array] = None,
-              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+              data_sizes: Optional[Array] = None,
+              payload_bits: Optional[Array] = None
+              ) -> tuple[Array, Array]:
         """Return (alpha, objective) for the given selection.
 
         ``alpha0`` optionally warm-starts the solver with the caller's
         previous allocation; implementations must accept ``None``.
         ``data_sizes`` is the per-device |D_k| the policies already hold
         — data-aware objectives (``ImportanceWeighted``) consume it;
-        plain time/energy objectives ignore it.
+        plain time/energy objectives ignore it.  ``payload_bits`` is
+        the per-device ``(K,)`` uplink payload from the compressed-
+        uplink subsystem (DESIGN.md §9); ``None`` means the scalar
+        ``cfg.model_bits``, and implementations must honor the array
+        in their time/energy terms.
         """
         ...
 
@@ -76,13 +82,17 @@ class WaterFilling:
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
               alpha0: Optional[Array] = None,
-              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+              data_sizes: Optional[Array] = None,
+              payload_bits: Optional[Array] = None
+              ) -> tuple[Array, Array]:
         del data_sizes
         alpha, _ = bw.min_time_allocation(selected, t_train, gains,
                                           tx_power, cfg, self.params,
-                                          alpha0=alpha0)
+                                          alpha0=alpha0,
+                                          payload_bits=payload_bits)
         obj = bw.sub2_objective(alpha, selected, t_train, gains, tx_power,
-                                cfg, self.params.rho)
+                                cfg, self.params.rho,
+                                payload_bits=payload_bits)
         return alpha, obj
 
 
@@ -95,10 +105,13 @@ class PGD:
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
               alpha0: Optional[Array] = None,
-              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+              data_sizes: Optional[Array] = None,
+              payload_bits: Optional[Array] = None
+              ) -> tuple[Array, Array]:
         del data_sizes
         return bw.pgd_allocation(selected, t_train, gains, tx_power, cfg,
-                                 self.params, alpha0=alpha0)
+                                 self.params, alpha0=alpha0,
+                                 payload_bits=payload_bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +122,19 @@ class FusedPGD:
     point (and consumes the warm start); the kernel then runs the entire
     double descent in VMEM.  ``interpret=None`` follows the backend
     (interpret on CPU, compiled on TPU) like the other kernel wrappers.
+
+    ``payload_bits`` caveat: the Pallas kernel bakes ``model_bits`` in
+    as a scalar static, so ANY ``payload_bits`` array — including the
+    device-uniform payloads of the ``quant``/``topk`` codecs — falls
+    back to the jnp tangent-PGD solver (same double descent, same
+    contract).  Special-casing statically-uniform payloads was
+    considered and rejected: a Python-scalar payload stays static when
+    the scan driver traces `schedule_impl` inline but becomes a traced
+    operand through the legacy loop's jitted `schedule`, so the two
+    drivers would take different solver paths and the scan==legacy
+    bitwise parity contract would silently break.  The real fix — a
+    per-device bits *operand* lane in the kernel, removing the fallback
+    entirely — is a ROADMAP open item.
     """
 
     params: bw.Sub2Params = bw.Sub2Params()
@@ -117,8 +143,14 @@ class FusedPGD:
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
               alpha0: Optional[Array] = None,
-              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+              data_sizes: Optional[Array] = None,
+              payload_bits: Optional[Array] = None
+              ) -> tuple[Array, Array]:
         del data_sizes
+        if payload_bits is not None:
+            return bw.pgd_allocation(selected, t_train, gains, tx_power,
+                                     cfg, self.params, alpha0=alpha0,
+                                     payload_bits=payload_bits)
         from repro.kernels import ops as kernel_ops
         mask = (selected > 0.0).astype(jnp.float32)
         n_act = jnp.maximum(jnp.sum(mask), 1.0)
@@ -193,12 +225,15 @@ class ImportanceWeighted:
     def solve(self, selected: Array, t_train: Array, gains: Array,
               tx_power: Array, cfg: wireless.WirelessConfig,
               alpha0: Optional[Array] = None,
-              data_sizes: Optional[Array] = None) -> tuple[Array, Array]:
+              data_sizes: Optional[Array] = None,
+              payload_bits: Optional[Array] = None
+              ) -> tuple[Array, Array]:
         w = importance_weights(selected, t_train, gains, tx_power, cfg,
                                self.beta, data_sizes=data_sizes)
         return bw.pgd_allocation(selected, t_train, gains, tx_power, cfg,
                                  self.params, alpha0=alpha0,
-                                 energy_weights=w)
+                                 energy_weights=w,
+                                 payload_bits=payload_bits)
 
 
 _REGISTRY: Dict[str, Callable[[bw.Sub2Params], Allocator]] = {}

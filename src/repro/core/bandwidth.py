@@ -180,26 +180,33 @@ def invert_rate(r_req: Array, gains: Array, tx_power: Array,
 # ---------------------------------------------------------------------------
 
 def _required_rate(deadline: Array, t_train: Array,
-                   cfg: wireless.WirelessConfig) -> Array:
+                   cfg: wireless.WirelessConfig,
+                   payload_bits: Array | None = None) -> Array:
     """Upload rate needed to finish by ``deadline``; inf when the
-    training alone already exceeds it."""
+    training alone already exceeds it.  ``payload_bits`` (``(K,)`` or
+    broadcastable) overrides the scalar ``cfg.model_bits`` payload."""
+    s = cfg.model_bits if payload_bits is None else payload_bits
     slack = deadline - t_train
     return jnp.where(slack > 0.0,
-                     cfg.model_bits / jnp.maximum(slack, 1e-9), jnp.inf)
+                     s / jnp.maximum(slack, 1e-9), jnp.inf)
 
 
 def alpha_for_deadline(deadline: Array, selected: Array, t_train: Array,
                        gains: Array, tx_power: Array,
                        cfg: wireless.WirelessConfig,
                        rate_iters: int = 12,
-                       solver: str = "newton") -> Array:
+                       solver: str = "newton",
+                       payload_bits: Array | None = None) -> Array:
     """Minimal alpha_k letting each selected device finish by ``deadline``.
 
     Devices whose training alone exceeds the deadline get a sentinel share
     of ``ALPHA_CEIL`` (infeasible marker, exceeds any budget).  ``solver``
     picks the Newton inversion (default) or the bisection reference.
+    ``payload_bits`` gives each device its own uplink payload (the
+    compressed-uplink subsystem); ``None`` keeps the scalar
+    ``cfg.model_bits``.
     """
-    r_req = _required_rate(deadline, t_train, cfg)
+    r_req = _required_rate(deadline, t_train, cfg, payload_bits)
     r_fin = jnp.where(jnp.isinf(r_req), 1e30, r_req)
     if solver == "newton":
         a = invert_rate(r_fin, gains, tx_power, cfg, iters=rate_iters)
@@ -211,13 +218,15 @@ def alpha_for_deadline(deadline: Array, selected: Array, t_train: Array,
 
 
 def _deadline_bracket(selected: Array, t_train: Array, gains: Array,
-                      tx_power: Array, cfg: wireless.WirelessConfig
+                      tx_power: Array, cfg: wireless.WirelessConfig,
+                      payload_bits: Array | None = None
                       ) -> tuple[Array, Array, Array]:
     """(lo, hi, equal_alpha): lo = max t_train (upload takes >0 time),
     hi = completion time at the equal-share allocation (feasible)."""
     n_sel = jnp.maximum(jnp.sum(selected), 1.0)
     equal_alpha = jnp.where(selected > 0.0, 1.0 / n_sel, 0.0)
-    t_up_equal = wireless.upload_time(equal_alpha, gains, tx_power, cfg)
+    t_up_equal = wireless.upload_time(equal_alpha, gains, tx_power, cfg,
+                                      payload_bits)
     hi = jnp.max(jnp.where(selected > 0.0, t_train + t_up_equal, 0.0))
     lo = jnp.max(jnp.where(selected > 0.0, t_train, 0.0))
     return lo, hi, equal_alpha
@@ -226,7 +235,8 @@ def _deadline_bracket(selected: Array, t_train: Array, gains: Array,
 def min_time_allocation_reference(
         selected: Array, t_train: Array, gains: Array, tx_power: Array,
         cfg: wireless.WirelessConfig,
-        params: Sub2Params = Sub2Params()) -> tuple[Array, Array]:
+        params: Sub2Params = Sub2Params(),
+        payload_bits: Array | None = None) -> tuple[Array, Array]:
     """Nested reference deadline solve: returns (alpha, T*).
 
     Outer bisection on the deadline T; a full inner rate bisection per
@@ -236,12 +246,13 @@ def min_time_allocation_reference(
     :func:`min_time_allocation`.
     """
     any_sel = jnp.sum(selected) > 0.0
-    lo0, hi0, _ = _deadline_bracket(selected, t_train, gains, tx_power, cfg)
+    lo0, hi0, _ = _deadline_bracket(selected, t_train, gains, tx_power,
+                                    cfg, payload_bits)
 
     def feasible(deadline):
         a = alpha_for_deadline(deadline, selected, t_train, gains, tx_power,
                                cfg, rate_iters=params.rate_bisect_iters,
-                               solver="bisect")
+                               solver="bisect", payload_bits=payload_bits)
         return jnp.sum(a) <= 1.0
 
     def body(_, carry):
@@ -254,7 +265,7 @@ def min_time_allocation_reference(
     t_star = hi
     alpha = alpha_for_deadline(t_star, selected, t_train, gains, tx_power,
                                cfg, rate_iters=params.rate_bisect_iters,
-                               solver="bisect")
+                               solver="bisect", payload_bits=payload_bits)
     # Normalize tiny bisection overshoot back inside the budget.
     total = jnp.sum(alpha)
     alpha = jnp.where(total > 1.0, alpha / total, alpha)
@@ -266,7 +277,9 @@ def min_time_allocation_reference(
 def min_time_allocation(selected: Array, t_train: Array, gains: Array,
                         tx_power: Array, cfg: wireless.WirelessConfig,
                         params: Sub2Params = Sub2Params(),
-                        alpha0: Array | None = None) -> tuple[Array, Array]:
+                        alpha0: Array | None = None,
+                        payload_bits: Array | None = None
+                        ) -> tuple[Array, Array]:
     """Fused joint min-T solve: returns (alpha, T*).
 
     One fixed-trip loop bisects the deadline while *carrying the
@@ -286,11 +299,13 @@ def min_time_allocation(selected: Array, t_train: Array, gains: Array,
     Newton carry; Newton's global convergence on concave f makes any
     positive seed safe.  At the optimum every selected device finishes at
     T* (unless its single-device optimum is already faster with spare
-    bandwidth).
+    bandwidth).  ``payload_bits`` gives each device its own uplink
+    payload (``(K,)``, compressed-uplink subsystem); ``None`` keeps the
+    scalar ``cfg.model_bits``.
     """
     any_sel = jnp.sum(selected) > 0.0
     lo0, hi0, equal_alpha = _deadline_bracket(selected, t_train, gains,
-                                              tx_power, cfg)
+                                              tx_power, cfg, payload_bits)
     c = gains * tx_power / (cfg.bandwidth_hz * cfg.noise_psd)
     seed = equal_alpha if alpha0 is None else alpha0
     a_carry = jnp.clip(seed, cfg.min_alpha, ALPHA_CEIL)
@@ -298,7 +313,7 @@ def min_time_allocation(selected: Array, t_train: Array, gains: Array,
     def probe(deadline, a_carry, steps):
         """(alpha at deadline, refreshed carry): sentinel where the
         training alone exceeds the deadline, Newton-refined elsewhere."""
-        r_req = _required_rate(deadline, t_train, cfg)
+        r_req = _required_rate(deadline, t_train, cfg, payload_bits)
         finite = jnp.isfinite(r_req)
         a_new = _newton_refine(a_carry, jnp.where(finite, r_req, 1.0), c,
                                cfg, steps)
@@ -353,7 +368,8 @@ def sub2_objective(alpha: Array, selected: Array, t_train: Array,
                    gains: Array, tx_power: Array,
                    cfg: wireless.WirelessConfig, rho: float,
                    smooth_tau: float = 0.0,
-                   energy_weights: Array | None = None) -> Array:
+                   energy_weights: Array | None = None,
+                   payload_bits: Array | None = None) -> Array:
     """rho * sum w_k E_k + (1-rho) * T (Eq. 15a); optionally smoothed max.
 
     ``energy_weights`` (default: all ones) prices each device's energy
@@ -361,9 +377,11 @@ def sub2_objective(alpha: Array, selected: Array, t_train: Array,
     (``allocator.ImportanceWeighted``) uses to bias bandwidth toward
     devices whose updates matter more (Ren et al.-style pricing).  The
     realized physical energy is unchanged; only the optimization
-    trade-off moves.
+    trade-off moves.  ``payload_bits`` (``(K,)``) makes the uplink
+    payload per-device (compressed-uplink subsystem); ``None`` keeps
+    the scalar ``cfg.model_bits``.
     """
-    t_up = wireless.upload_time(alpha, gains, tx_power, cfg)
+    t_up = wireless.upload_time(alpha, gains, tx_power, cfg, payload_bits)
     t_up = jnp.where(selected > 0.0, t_up, 0.0)
     energy = jnp.where(selected > 0.0, tx_power * t_up, 0.0)
     if energy_weights is not None:
@@ -380,7 +398,8 @@ def pgd_allocation(selected: Array, t_train: Array, gains: Array,
                    tx_power: Array, cfg: wireless.WirelessConfig,
                    params: Sub2Params = Sub2Params(),
                    alpha0: Array | None = None,
-                   energy_weights: Array | None = None
+                   energy_weights: Array | None = None,
+                   payload_bits: Array | None = None
                    ) -> tuple[Array, Array]:
     """Solve Sub2 for general rho by tangent-space projected gradient.
 
@@ -395,7 +414,10 @@ def pgd_allocation(selected: Array, t_train: Array, gains: Array,
     explores the uniform basin on every call.  ``energy_weights``
     reprices per-device energy in the objective (importance-weighted
     allocator); the water-filling start ignores it (it is the rho -> 0
-    limit, where the energy term vanishes).  Returns (alpha, objective).
+    limit, where the energy term vanishes).  ``payload_bits`` makes the
+    uplink payload per-device throughout — objective, gradient and the
+    water-filling start all price the same codec-dependent bits.
+    Returns (alpha, objective).
     """
     mask = (selected > 0.0).astype(jnp.float32)
     n_act = jnp.maximum(jnp.sum(mask), 1.0)
@@ -403,12 +425,14 @@ def pgd_allocation(selected: Array, t_train: Array, gains: Array,
     def exact_obj(a):
         return sub2_objective(a, selected, t_train, gains, tx_power, cfg,
                               params.rho, smooth_tau=0.0,
-                              energy_weights=energy_weights)
+                              energy_weights=energy_weights,
+                              payload_bits=payload_bits)
 
     grad_fn = jax.grad(
         lambda a: sub2_objective(a, selected, t_train, gains, tx_power, cfg,
                                  params.rho, params.smooth_tau,
-                                 energy_weights=energy_weights))
+                                 energy_weights=energy_weights,
+                                 payload_bits=payload_bits))
 
     def descend(alpha0):
         alpha0 = project_simplex(alpha0, mask)
@@ -433,7 +457,8 @@ def pgd_allocation(selected: Array, t_train: Array, gains: Array,
         return best_a, best_o
 
     wf, _ = min_time_allocation(selected, t_train, gains, tx_power, cfg,
-                                params, alpha0=alpha0)
+                                params, alpha0=alpha0,
+                                payload_bits=payload_bits)
     uniform = mask / n_act
     a1, o1 = descend(wf)
     a2, o2 = descend(uniform)

@@ -45,6 +45,14 @@ round samples data arrivals, refreshes per-device class counts /
 diversity stats / staleness in one fused pass, and schedules + trains on
 the refreshed statistics.  Both drivers and the legacy loop share the
 sequence, so every parity contract above extends to streaming runs.
+
+Compressed uplink (``FLConfig.compression``, DESIGN.md §9): when set,
+devices upload codec-compressed updates — the codec's per-device
+payload bits flow into scheduling and Sub2 (Eq. 6/9/10 price the
+*effective* post-compression bits), the round's FedAvg aggregates the
+dequantized values, and the ``(K, P)`` error-feedback residual joins
+the scan carry so lossy rounds stay bit-for-bit reproducible across
+drivers (scan == legacy loop, batch == S independent runs).
 """
 
 from __future__ import annotations
@@ -57,7 +65,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import diversity, scheduler, streaming, wireless
+from repro.core import compression, diversity, scheduler, streaming, \
+    wireless
 from repro.data import partition as partition_lib
 from repro.data import synthetic
 
@@ -81,6 +90,12 @@ class FLConfig:
     # re-ranks on the refreshed statistics.  None = static data,
     # bit-for-bit the pre-streaming behavior.
     stream: Optional[streaming.StreamConfig] = None
+    # Compressed-uplink subsystem (DESIGN.md §9): when set, devices
+    # upload codec-compressed updates — per-device payload bits price
+    # scheduling and Sub2, the lossy round trip shapes the aggregate,
+    # and the error-feedback residual joins the scan carry.  None =
+    # full-precision uploads, bit-for-bit the pre-compression behavior.
+    compression: Optional[compression.CompressionConfig] = None
 
 
 @dataclasses.dataclass
@@ -210,10 +225,17 @@ def fedavg_aggregate(client_params: Params, weights: Array,
 # One federated round (shared by the scan driver and the legacy loop)
 # ---------------------------------------------------------------------------
 
-def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
-                 params: Params, images: Array, labels: Array, mask: Array,
-                 sizes: Array, selected: Array, key: Array) -> Params:
-    """Masked local training for all K clients + FedAvg. Pure, traceable."""
+def _masked_local_train(trainer: Callable, max_steps: int, cfg: FLConfig,
+                        params: Params, images: Array, labels: Array,
+                        mask: Array, sizes: Array, selected: Array,
+                        key: Array) -> Tuple[Params, Array]:
+    """Masked local SGD for all K clients -> (stacked params, FedAvg w).
+
+    The single definition of the per-client step schedule and the
+    ``D_k / D_r`` weight normalization — the plain and compressed round
+    bodies both call it, so the scan==legacy parity contracts cannot be
+    broken by editing one copy.
+    """
     k = images.shape[0]
     # Per-client active step schedule: E * ceil(size_k / B) steps.
     steps_k = cfg.local_epochs * jnp.ceil(
@@ -226,12 +248,87 @@ def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
     # FedAvg weights D_k / D_r over the selected set.
     w = sizes.astype(jnp.float32) * selected
     w = w / jnp.maximum(jnp.sum(w), 1.0)
+    return client_params, w
+
+
+def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
+                 params: Params, images: Array, labels: Array, mask: Array,
+                 sizes: Array, selected: Array, key: Array) -> Params:
+    """Masked local training for all K clients + FedAvg. Pure, traceable."""
+    client_params, w = _masked_local_train(trainer, max_steps, cfg, params,
+                                           images, labels, mask, sizes,
+                                           selected, key)
     return fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
 
 
 def _max_local_steps(cfg: FLConfig, capacity: int) -> int:
     steps_per_epoch = max(1, -(-capacity // cfg.batch_size))
     return cfg.local_epochs * steps_per_epoch
+
+
+# ---------------------------------------------------------------------------
+# Compressed uplink (DESIGN.md §9): lossy updates + error feedback
+# ---------------------------------------------------------------------------
+
+def flat_param_size(params: Params) -> int:
+    """Total flattened coordinate count — the error-feedback residual's
+    trailing dimension (static from the param shapes)."""
+    return sum(int(np.prod(leaf.shape))
+               for leaf in jax.tree_util.tree_leaves(params))
+
+
+def _comp_setup(fcfg: FLConfig) -> compression.Codec:
+    """Codec instance for a compressed run (shared by the scan driver
+    and the legacy loop so their uplink sequence cannot drift apart)."""
+    return compression.get_codec(fcfg.compression.codec)
+
+
+def _train_round_compressed(trainer: Callable, max_steps: int,
+                            fcfg: FLConfig, codec: compression.Codec,
+                            params: Params, images: Array, labels: Array,
+                            mask: Array, sizes: Array, selected: Array,
+                            key: Array, residual: Array, gains: Array,
+                            index: Array) -> Tuple[Params, Array]:
+    """Masked local training + compressed-uplink FedAvg.  Pure, traceable.
+
+    Local SGD is identical to :func:`_train_round`; the aggregation
+    differs: client *updates* (``w_k - g``) are flattened to one
+    ``(K, P)`` matrix, pushed through the codec's fused
+    residual-accumulate -> compress -> dequantize pass
+    (``compression.apply_codec``), and the decoded values are averaged
+    with the FedAvg weights onto the global model (``g' = g + sum_k
+    (D_k / D_r) c_k``).  Returns the new params and the advanced
+    error-feedback residual (only selected devices consume backlog).
+    Unselected clients are frozen, so their raw update is exactly zero
+    and their decoded row is multiplied by a zero weight.
+    """
+    k = images.shape[0]
+    k_sgd, k_comp = jax.random.split(key)
+    client_params, w = _masked_local_train(trainer, max_steps, fcfg,
+                                           params, images, labels, mask,
+                                           sizes, selected, k_sgd)
+    leaves, _ = jax.tree_util.tree_flatten(client_params)
+    p_leaves, p_treedef = jax.tree_util.tree_flatten(params)
+    dtypes = {leaf.dtype for leaf in p_leaves}
+    if len(dtypes) != 1:
+        # the flattened (K, P) update matrix would silently promote
+        # mixed-dtype leaves; same guard as the kernel FedAvg path.
+        raise TypeError(f"compressed uplink needs uniform leaf dtype, "
+                        f"got {sorted(map(str, dtypes))}")
+    updates = jnp.concatenate(
+        [(cl - p[None]).reshape(k, -1)
+         for cl, p in zip(leaves, p_leaves)], axis=1)
+    c, residual = compression.apply_codec(
+        codec, updates, residual, selected, k_comp, fcfg.compression,
+        gains, index)
+    agg = jnp.tensordot(w, c, axes=1)               # (P,)
+    outs, offset = [], 0
+    for p in p_leaves:
+        size = int(np.prod(p.shape))
+        outs.append(p + agg[offset:offset + size].reshape(p.shape)
+                    .astype(p.dtype))
+        offset += size
+    return jax.tree_util.tree_unflatten(p_treedef, outs), residual
 
 
 def make_round_fn(loss_fn: Callable, cfg: FLConfig,
@@ -241,10 +338,17 @@ def make_round_fn(loss_fn: Callable, cfg: FLConfig,
     ``selected``/``weights`` come from the scheduler (host side); the round
     body — local training for all K clients, masked FedAvg — is one SPMD
     program.  Used by the legacy per-round loop; the scan driver inlines
-    the same :func:`_train_round` body.
+    the same :func:`_train_round` body.  With ``cfg.compression`` set the
+    returned function is the compressed-uplink round
+    (:func:`_train_round_compressed`): it additionally takes
+    ``(residual, gains, index)`` and returns ``(params, residual)``.
     """
     trainer = make_local_trainer(loss_fn, cfg)
     max_steps = _max_local_steps(cfg, capacity)
+    if cfg.compression is not None:
+        codec = _comp_setup(cfg)
+        return jax.jit(functools.partial(_train_round_compressed, trainer,
+                                         max_steps, cfg, codec))
     return jax.jit(functools.partial(_train_round, trainer, max_steps, cfg))
 
 
@@ -332,6 +436,14 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
     stats / staleness in one fused pass (``streaming.refresh``), and
     feeds the *refreshed* sizes and index — plus the staleness signal —
     into scheduling and training (DESIGN.md §7).
+
+    With ``fcfg.compression`` set, the carry additionally holds the
+    ``(K, P)`` error-feedback residual (DESIGN.md §9): each round the
+    codec's per-device payload bits price scheduling and Sub2, the
+    round's updates go through the fused residual-accumulate ->
+    compress -> dequantize pass, and the residual advances for the
+    devices that transmitted.  Streaming and compression compose — the
+    carry simply holds both extras.
     """
     trainer = make_local_trainer(loss_fn, fcfg)
     max_steps = _max_local_steps(fcfg, capacity)
@@ -340,6 +452,9 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
     stream = fcfg.stream
     if stream is not None:
         process, size_cap, measure_col = _stream_setup(fcfg, capacity)
+    comp = fcfg.compression
+    if comp is not None:
+        codec = _comp_setup(fcfg)
 
     def sim(params: Params, images: Array, labels: Array, mask: Array,
             sizes: Array, hists: Array, test_x: Array, test_labels: Array,
@@ -349,28 +464,43 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
         if stream is not None:
             key, k_init = jax.random.split(key)
             state0 = process.init(k_init, hists, stream)
+        if comp is not None:
+            residual0 = jnp.zeros((k_dev, flat_param_size(params)),
+                                  jnp.float32)
 
         def body(carry, do_ev):
+            params, ages, key = carry[:3]
+            extras = carry[3:]
             if stream is None:
-                params, ages, key = carry
                 key, k_fade, k_sched, k_train = jax.random.split(key, 4)
                 index = diversity.diversity_index(
                     label_hists=hists, data_sizes=sizes, ages=ages,
                     weights=fcfg.index_weights, measure=fcfg.measure)
                 sizes_r, stale = sizes, None
             else:
-                params, ages, key, st = carry
+                st = extras[0]
                 key, k_fade, k_sched, k_train, k_arr = jax.random.split(
                     key, 5)
                 index, sizes_r, stale, hists_r, st = _stream_round(
                     process, fcfg, size_cap, measure_col, k_arr, st, ages)
             gains = wireless.sample_fading(k_fade, net)
+            payload = codec.payload_bits(comp, wcfg, gains, index) \
+                if comp is not None else None
             result = scheduler.schedule_impl(k_sched, index, ages, sizes_r,
                                              gains, net, wcfg, sch,
-                                             staleness=stale)
+                                             staleness=stale,
+                                             payload_bits=payload)
             selected = result.selected
-            params = _train_round(trainer, max_steps, fcfg, params, images,
-                                  labels, mask, sizes_r, selected, k_train)
+            if comp is None:
+                params = _train_round(trainer, max_steps, fcfg, params,
+                                      images, labels, mask, sizes_r,
+                                      selected, k_train)
+            else:
+                residual = extras[-1]
+                params, residual = _train_round_compressed(
+                    trainer, max_steps, fcfg, codec, params, images,
+                    labels, mask, sizes_r, selected, k_train, residual,
+                    gains, index)
             ages = jnp.where(selected > 0.0, 0, ages + 1)
             acc = jax.lax.cond(
                 do_ev,
@@ -387,14 +517,19 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 selected=selected,
                 iterations=result.iterations,
             )
-            if stream is None:
-                return (params, ages, key), met
-            st = _stream_advance(st, hists_r, stale, selected)
-            return (params, ages, key, st), met
+            out = (params, ages, key)
+            if stream is not None:
+                out += (_stream_advance(st, hists_r, stale, selected),)
+            if comp is not None:
+                out += (residual,)
+            return out, met
 
         ages0 = jnp.zeros((k_dev,), jnp.int32)
-        carry0 = (params, ages0, key) if stream is None \
-            else (params, ages0, key, state0)
+        carry0 = (params, ages0, key)
+        if stream is not None:
+            carry0 += (state0,)
+        if comp is not None:
+            carry0 += (residual0,)
         out_carry, metrics = jax.lax.scan(body, carry0, do_eval)
         return out_carry[0], metrics
 
@@ -660,6 +795,11 @@ def run_federated_loop(
         process, size_cap, measure_col = _stream_setup(fcfg, data.capacity)
         key, k_init = jax.random.split(key)
         st = process.init(k_init, hists, stream)
+    comp = fcfg.compression
+    if comp is not None:
+        codec = _comp_setup(fcfg)
+        residual = jnp.zeros((k_dev, flat_param_size(init_params)),
+                             jnp.float32)
 
     ages = jnp.zeros((k_dev,), jnp.int32)
     params = init_params
@@ -678,12 +818,19 @@ def run_federated_loop(
             index, sizes_r, stale, hists_r, st = _stream_round(
                 process, fcfg, size_cap, measure_col, k_arr, st, ages)
         gains = wireless.sample_fading(k_fade, net)
+        payload = codec.payload_bits(comp, wcfg, gains, index) \
+            if comp is not None else None
         sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
         result = scheduler.schedule(k_sched, index, ages, sizes_r,
-                                    gains, net, wcfg, sch, stale)
+                                    gains, net, wcfg, sch, stale, payload)
         selected = result.selected
-        params = round_fn(params, data.images, data.labels, data.mask,
-                          sizes_r, selected, k_train)
+        if comp is None:
+            params = round_fn(params, data.images, data.labels, data.mask,
+                              sizes_r, selected, k_train)
+        else:
+            params, residual = round_fn(params, data.images, data.labels,
+                                        data.mask, sizes_r, selected,
+                                        k_train, residual, gains, index)
         ages = jnp.where(selected > 0.0, 0, ages + 1)
         if stream is not None:
             st = _stream_advance(st, hists_r, stale, selected)

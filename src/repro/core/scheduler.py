@@ -120,8 +120,10 @@ def staleness_boost(priority: Array, staleness: Optional[Array],
 
 def _finalize(selected: Array, alpha: Array, t_train: Array, gains: Array,
               net: wireless.NetworkState, cfg: wireless.WirelessConfig,
-              iterations: Array | int = 0) -> ScheduleResult:
-    t_up = wireless.upload_time(alpha, gains, net.tx_power, cfg)
+              iterations: Array | int = 0,
+              payload_bits: Optional[Array] = None) -> ScheduleResult:
+    t_up = wireless.upload_time(alpha, gains, net.tx_power, cfg,
+                                payload_bits)
     t_up = jnp.where(selected > 0.0, t_up, jnp.inf)
     energy = jnp.where(selected > 0.0, net.tx_power *
                        jnp.where(jnp.isinf(t_up), 0.0, t_up), 0.0)
@@ -139,7 +141,8 @@ def _finalize(selected: Array, alpha: Array, t_train: Array, gains: Array,
 def das_schedule(index: Array, data_sizes: Array, gains: Array,
                  net: wireless.NetworkState, cfg: wireless.WirelessConfig,
                  sch: SchedulerConfig,
-                 alloc: Optional[alloc_lib.Allocator] = None
+                 alloc: Optional[alloc_lib.Allocator] = None,
+                 payload_bits: Optional[Array] = None
                  ) -> ScheduleResult:
     """Data-aware scheduling: iterate Sub1 <-> Sub2 (paper Alg. 2).
 
@@ -150,7 +153,10 @@ def das_schedule(index: Array, data_sizes: Array, gains: Array,
     through ``alloc`` (default: the config's registered allocator),
     warm-started with the previous outer iteration's allocation — the
     fixed point barely moves between Alg. 2 iterations, so the solver's
-    Newton/PGD interiors start next to their solution.
+    Newton/PGD interiors start next to their solution.  ``payload_bits``
+    (compressed-uplink subsystem, DESIGN.md §9) makes every energy/time
+    term per-device — Sub1 then ranks on the *effective
+    post-compression* upload cost, not the nominal model size.
     """
     alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     k = index.shape[0]
@@ -175,7 +181,8 @@ def das_schedule(index: Array, data_sizes: Array, gains: Array,
                                    jnp.maximum(mean_share, 1.0 / k))
         else:  # strict: dropped devices keep their ~zero allocation
             alpha_eval = jnp.maximum(alpha, cfg.min_alpha)
-        t_up = wireless.upload_time(alpha_eval, gains, net.tx_power, cfg)
+        t_up = wireless.upload_time(alpha_eval, gains, net.tx_power, cfg,
+                                    payload_bits)
         energy = net.tx_power * t_up
         # Sub1: select.
         x_new, _, _ = sel.solve_sub1(energy, t_train + t_up, index,
@@ -185,7 +192,8 @@ def das_schedule(index: Array, data_sizes: Array, gains: Array,
         # from the allocation this iteration is refining.
         alpha_new, _ = alloc.solve(x_new, t_train, gains, net.tx_power,
                                    cfg, alpha0=alpha,
-                                   data_sizes=data_sizes)
+                                   data_sizes=data_sizes,
+                                   payload_bits=payload_bits)
         return x_new, alpha_new, x, alpha, it + 1
 
     def cond(carry):
@@ -205,7 +213,8 @@ def das_schedule(index: Array, data_sizes: Array, gains: Array,
     init = (x0, alpha0, jnp.zeros_like(x0), jnp.zeros_like(alpha0),
             jnp.asarray(0, jnp.int32))
     x, alpha, _, _, iters = jax.lax.while_loop(cond, body, init)
-    return _finalize(x, alpha, t_train, gains, net, cfg, iters)
+    return _finalize(x, alpha, t_train, gains, net, cfg, iters,
+                     payload_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -220,15 +229,18 @@ def _topn_by_priority(priority: Array, n: int) -> Array:
 def topn_schedule(priority: Array, n: int, data_sizes: Array, gains: Array,
                   net: wireless.NetworkState, cfg: wireless.WirelessConfig,
                   sch: SchedulerConfig,
-                  alloc: Optional[alloc_lib.Allocator] = None
+                  alloc: Optional[alloc_lib.Allocator] = None,
+                  payload_bits: Optional[Array] = None
                   ) -> ScheduleResult:
     """Select exactly ``n`` devices by ``priority``, then run Sub2."""
     alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     x = _topn_by_priority(priority, n)
     alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg,
-                           data_sizes=data_sizes)
-    return _finalize(x, alpha, t_train, gains, net, cfg)
+                           data_sizes=data_sizes,
+                           payload_bits=payload_bits)
+    return _finalize(x, alpha, t_train, gains, net, cfg,
+                     payload_bits=payload_bits)
 
 
 def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
@@ -236,7 +248,8 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
                  sch: SchedulerConfig, key: Optional[Array] = None,
                  deadline: Optional[float] = None,
                  alloc: Optional[alloc_lib.Allocator] = None,
-                 staleness: Optional[Array] = None) -> ScheduleResult:
+                 staleness: Optional[Array] = None,
+                 payload_bits: Optional[Array] = None) -> ScheduleResult:
     """Age-based scheduling (paper §VI baselines, Yang et al. f(k)).
 
     Priority is ``log(1 + age)`` with a small random tiebreak (all-zero
@@ -256,21 +269,22 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
         priority = priority + 1e-4 * jax.random.uniform(key, priority.shape)
     if sch.n_fixed is not None:
         return topn_schedule(priority, sch.n_fixed, data_sizes, gains, net,
-                             cfg, sch, alloc)
+                             cfg, sch, alloc, payload_bits)
     # Greedy admission under a deadline: per-device minimal alpha at the
     # deadline is independent across devices -> sort + cumsum.
     if deadline is None:
         # Default deadline: median device at an equal 1/8 band share.
         a_ref = jnp.full_like(priority, 1.0 / 8.0)
         t_ref = t_train + wireless.upload_time(a_ref, gains, net.tx_power,
-                                               cfg)
+                                               cfg, payload_bits)
         deadline_arr = jnp.median(t_ref)
     else:
         deadline_arr = jnp.asarray(deadline, jnp.float32)
     ones = jnp.ones_like(priority)
     a_min = bw.alpha_for_deadline(deadline_arr, ones, t_train, gains,
                                   net.tx_power, cfg,
-                                  rate_iters=sch.sub2.newton_iters)
+                                  rate_iters=sch.sub2.newton_iters,
+                                  payload_bits=payload_bits)
     order = jnp.argsort(-priority)
     a_sorted = a_min[order]
     # n_min backstop (13e): the top-n_min devices are admitted regardless
@@ -293,35 +307,41 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
     x = jnp.zeros_like(priority).at[order].set(
         admit_sorted.astype(jnp.float32))
     alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg,
-                           data_sizes=data_sizes)
-    return _finalize(x, alpha, t_train, gains, net, cfg)
+                           data_sizes=data_sizes,
+                           payload_bits=payload_bits)
+    return _finalize(x, alpha, t_train, gains, net, cfg,
+                     payload_bits=payload_bits)
 
 
 def random_schedule(key: Array, data_sizes: Array, gains: Array,
                     net: wireless.NetworkState,
                     cfg: wireless.WirelessConfig,
                     sch: SchedulerConfig,
-                    alloc: Optional[alloc_lib.Allocator] = None
+                    alloc: Optional[alloc_lib.Allocator] = None,
+                    payload_bits: Optional[Array] = None
                     ) -> ScheduleResult:
     """Uniform-random selection baseline (paper §VI-B)."""
     priority = jax.random.uniform(key, data_sizes.shape)
     n = sch.n_fixed if sch.n_fixed is not None else sch.n_min
     return topn_schedule(priority, n, data_sizes, gains, net, cfg, sch,
-                         alloc)
+                         alloc, payload_bits)
 
 
 def full_schedule(data_sizes: Array, gains: Array,
                   net: wireless.NetworkState, cfg: wireless.WirelessConfig,
                   sch: SchedulerConfig,
-                  alloc: Optional[alloc_lib.Allocator] = None
+                  alloc: Optional[alloc_lib.Allocator] = None,
+                  payload_bits: Optional[Array] = None
                   ) -> ScheduleResult:
     """Paper's baseline: all devices participate; Sub2 optimizes alpha."""
     alloc = alloc or alloc_lib.get(sch.allocator, sch.sub2)
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     x = jnp.ones_like(data_sizes, dtype=jnp.float32)
     alpha, _ = alloc.solve(x, t_train, gains, net.tx_power, cfg,
-                           data_sizes=data_sizes)
-    return _finalize(x, alpha, t_train, gains, net, cfg)
+                           data_sizes=data_sizes,
+                           payload_bits=payload_bits)
+    return _finalize(x, alpha, t_train, gains, net, cfg,
+                     payload_bits=payload_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -332,7 +352,8 @@ def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
                   gains: Array, net: wireless.NetworkState,
                   cfg: wireless.WirelessConfig,
                   sch: SchedulerConfig,
-                  staleness: Optional[Array] = None) -> ScheduleResult:
+                  staleness: Optional[Array] = None,
+                  payload_bits: Optional[Array] = None) -> ScheduleResult:
     """Un-jitted :func:`schedule` body.
 
     Call this from code that is already inside a trace — the
@@ -343,22 +364,30 @@ def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
     whichever policy dispatches.  ``staleness`` (streaming subsystem)
     re-ranks DAS's index and ABS's age priority via
     :func:`staleness_boost`; random/full ignore it by design (they are
-    the data-agnostic baselines).
+    the data-agnostic baselines).  ``payload_bits`` (compressed-uplink
+    subsystem, DESIGN.md §9) is the per-device ``(K,)`` codec payload —
+    every policy's time/energy terms, Sub2 solves and the realized
+    :class:`ScheduleResult` accounting price those bits instead of the
+    scalar ``cfg.model_bits``.
     """
     alloc = alloc_lib.get(sch.allocator, sch.sub2)
     if sch.method == "das":
         index = staleness_boost(index, staleness, sch)
         if sch.n_fixed is not None:
             return topn_schedule(index, sch.n_fixed, data_sizes, gains, net,
-                                 cfg, sch, alloc)
-        return das_schedule(index, data_sizes, gains, net, cfg, sch, alloc)
+                                 cfg, sch, alloc, payload_bits)
+        return das_schedule(index, data_sizes, gains, net, cfg, sch, alloc,
+                            payload_bits)
     if sch.method == "abs":
         return abs_schedule(ages, data_sizes, gains, net, cfg, sch, key,
-                            alloc=alloc, staleness=staleness)
+                            alloc=alloc, staleness=staleness,
+                            payload_bits=payload_bits)
     if sch.method == "random":
-        return random_schedule(key, data_sizes, gains, net, cfg, sch, alloc)
+        return random_schedule(key, data_sizes, gains, net, cfg, sch, alloc,
+                               payload_bits)
     if sch.method == "full":
-        return full_schedule(data_sizes, gains, net, cfg, sch, alloc)
+        return full_schedule(data_sizes, gains, net, cfg, sch, alloc,
+                             payload_bits)
     raise ValueError(f"unknown scheduling method: {sch.method!r}")
 
 
@@ -367,7 +396,8 @@ def schedule(key: Array, index: Array, ages: Array, data_sizes: Array,
              gains: Array, net: wireless.NetworkState,
              cfg: wireless.WirelessConfig,
              sch: SchedulerConfig,
-             staleness: Optional[Array] = None) -> ScheduleResult:
+             staleness: Optional[Array] = None,
+             payload_bits: Optional[Array] = None) -> ScheduleResult:
     """Dispatch on ``sch.method``; one jit for the whole round's decision."""
     return schedule_impl(key, index, ages, data_sizes, gains, net, cfg, sch,
-                         staleness)
+                         staleness, payload_bits)

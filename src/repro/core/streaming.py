@@ -39,7 +39,9 @@ Built-in processes: ``static`` (zero deltas — the degenerate check),
 affinity), ``drift`` (bursty label drift: all arrivals land on a
 per-device class that re-draws at random rounds), ``shift`` (a global
 class-distribution wave rotating through label space), ``evict``
-(Poisson arrivals + proportional buffer eviction).
+(Poisson arrivals + proportional buffer eviction), ``trace`` (replay
+per-round deltas from a user-supplied ``(R, K, C)`` array — register
+``Trace(deltas)`` over the data-less placeholder).
 
 The per-round refresh — count-delta accumulation -> diversity-index
 refresh -> staleness decay — is one fused pass (:func:`refresh`):
@@ -275,6 +277,64 @@ class Evict:
         return deltas, jnp.sum(arrived, axis=-1), state
 
 
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """Replay per-round count deltas from a user-supplied ``(R, K, C)``
+    array (ROADMAP trace-driven item, minimal version).
+
+    ``sample`` at round ``r`` returns row ``deltas[r % R]`` — traces
+    shorter than the run wrap around.  The reported arrival mass is the
+    positive part of the trace deltas summed over classes; a trace that
+    nets an arrival against an eviction inside one class under-reports
+    that turnover (record arrivals and evictions in separate trace rows
+    if the staleness signal must see both).  Register with data::
+
+        streaming.register_process(
+            "trace", lambda: streaming.Trace(deltas), overwrite=True)
+
+    then run with ``StreamConfig(process="trace")`` — the built-in
+    ``"trace"`` registration has no data and raises with this recipe.
+    The replay is deterministic (keys unused) and traceable: the trace
+    array closes over the compiled simulation as a constant and round
+    indexing is a dynamic gather, so the process composes with the scan
+    driver and the scenario vmap (every lane replays the same trace on
+    its own schedule).
+    """
+
+    deltas: object = None        # (R, K, C) array-like
+
+    def _array(self) -> Array:
+        if self.deltas is None:
+            raise ValueError(
+                "trace process has no data — register your trace first: "
+                "streaming.register_process('trace', lambda: "
+                "streaming.Trace(deltas), overwrite=True) with a "
+                "(rounds, K, C) delta array")
+        d = jnp.asarray(self.deltas, jnp.float32)
+        if d.ndim != 3:
+            raise ValueError(f"trace deltas must be (R, K, C), got "
+                             f"shape {d.shape}")
+        return d
+
+    def init(self, key: Array, hists0: Array,
+             cfg: StreamConfig) -> StreamState:
+        del key, cfg
+        d = self._array()
+        if d.shape[-2:] != hists0.shape[-2:]:
+            raise ValueError(
+                f"trace deltas {d.shape} do not match the (K, C) device "
+                f"histograms {hists0.shape}")
+        return base_state(hists0)
+
+    def sample(self, key: Array, state: StreamState,
+               cfg: StreamConfig) -> Tuple[Array, Array, StreamState]:
+        del key, cfg
+        d = self._array()
+        row = jnp.take(d, state.round % d.shape[0], axis=0)
+        arrivals = jnp.sum(jnp.maximum(row, 0.0), axis=-1)
+        return row, arrivals, state
+
+
 _PROCESSES: Dict[str, Callable[[], ArrivalProcess]] = {}
 
 
@@ -305,6 +365,9 @@ register_process("poisson", Poisson)
 register_process("drift", Drift)
 register_process("shift", Shift)
 register_process("evict", Evict)
+# Data-less placeholder: reserves the name and raises the registration
+# recipe; users overwrite it with `Trace(deltas)` bound to real data.
+register_process("trace", Trace)
 
 
 def refresh(hists: Array, deltas: Array, arrivals: Array,

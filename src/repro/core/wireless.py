@@ -154,8 +154,14 @@ def achievable_rate(alpha: Array, gains: Array, tx_power: Array,
 
 def upload_time(alpha: Array, gains: Array, tx_power: Array,
                 cfg: WirelessConfig,
-                model_bits: Optional[float] = None) -> Array:
-    """t_up_k = s / r_k (Eq. 9).  Infinite when alpha_k == 0."""
+                model_bits: Optional[float | Array] = None) -> Array:
+    """t_up_k = s_k / r_k (Eq. 9).  Infinite when alpha_k == 0.
+
+    ``model_bits`` overrides the config's scalar payload; a ``(K,)``
+    array gives each device its own codec-dependent payload (the
+    compressed-uplink subsystem, DESIGN.md §9) — any shape
+    broadcastable against the rate is accepted.
+    """
     s = cfg.model_bits if model_bits is None else model_bits
     rate = achievable_rate(alpha, gains, tx_power, cfg)
     return jnp.where(rate > 0.0, s / jnp.maximum(rate, 1e-12), jnp.inf)
@@ -163,8 +169,9 @@ def upload_time(alpha: Array, gains: Array, tx_power: Array,
 
 def upload_energy(alpha: Array, gains: Array, tx_power: Array,
                   cfg: WirelessConfig,
-                  model_bits: Optional[float] = None) -> Array:
-    """E_k = P_k * t_up_k (Eq. 10)."""
+                  model_bits: Optional[float | Array] = None) -> Array:
+    """E_k = P_k * t_up_k (Eq. 10).  ``model_bits`` may be per-device
+    ``(K,)`` like :func:`upload_time`."""
     t = upload_time(alpha, gains, tx_power, cfg, model_bits)
     return tx_power * t
 

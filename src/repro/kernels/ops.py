@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import compress as _compress
 from repro.kernels import diversity as _div
 from repro.kernels import fedavg_agg as _agg
 from repro.kernels import flash_attention as _fa
@@ -127,6 +128,77 @@ def sub2_pgd(selected: jax.Array, t_train: jax.Array, gains: jax.Array,
             interpret=interpret)
     entry = _sub2_pgd_entry(rho, lr, tau, iters, bandwidth_hz, model_bits,
                             min_alpha, proj_iters, interpret)
+    return entry(*args)
+
+
+# Observability hook mirroring BATCHED_LANE_TRACES: counts traces of the
+# compress kernel's direct batched-vmap lane (tests assert the scenario
+# vmap hit the (S,)-grid launch, not pallas's generic batching rule).
+COMPRESS_LANE_TRACES = 0
+
+
+@functools.lru_cache(maxsize=32)
+def _compress_entry(mode: str, keep: int, thresh_iters: int,
+                    interpret: bool):
+    """Single-instance compress entry with a custom vmap rule.
+
+    The plain path launches the kernel with a length-1 grid.  Under
+    ``jax.vmap`` (the scenario axis of ``federated.run_federated_batch``)
+    the custom rule broadcasts any unbatched operands and launches the
+    batched ``(S,)`` grid directly — same pattern as
+    :func:`_sub2_pgd_entry`.
+    """
+    kern = functools.partial(_compress.compress_update_kernel, mode=mode,
+                             keep=keep, thresh_iters=thresh_iters,
+                             interpret=interpret)
+
+    @jax.custom_batching.custom_vmap
+    def single(updates, residual, widths, selected, noise):
+        c, r = kern(updates[None], residual[None], widths[None],
+                    selected[None], noise[None])
+        return c[0], r[0]
+
+    @single.def_vmap
+    def _batched_lane(axis_size, in_batched, updates, residual, widths,
+                      selected, noise):
+        global COMPRESS_LANE_TRACES
+        COMPRESS_LANE_TRACES += 1
+        args = [x if b else jnp.broadcast_to(x, (axis_size,) + x.shape)
+                for x, b in zip((updates, residual, widths, selected,
+                                 noise), in_batched)]
+        c, r = kern(*args)
+        return (c, r), (True, True)
+
+    return single
+
+
+def compress_update(updates: jax.Array, residual: jax.Array,
+                    widths: jax.Array, selected: jax.Array,
+                    noise: jax.Array, *, mode: str, keep: int = 0,
+                    thresh_iters: int = _compress.DEFAULT_THRESH_ITERS,
+                    interpret: bool | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Fused uplink compression: residual accumulate -> quantize/top-k
+    -> dequantize-for-FedAvg in one launch.
+
+    Single instance: ``(K, P)`` updates/residual/noise + ``(K,)``
+    widths/selection -> ``((K, P) decoded, (K, P) residual)``.  Batched
+    scenario lane: ``(S, K, P)`` / ``(S, K)`` — the grid runs over S.
+    The single-instance entry carries a custom vmap rule so the vmapped
+    FEEL driver lands on the batched grid directly
+    (:func:`_compress_entry`).  Exact contract in
+    ``kernels/ref.py::compress_update``.  Not jitted here: the caller
+    is the FEEL round body, which is already tracing.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    args = (f32(updates), f32(residual), f32(widths), f32(selected),
+            f32(noise))
+    if updates.ndim == 3:
+        return _compress.compress_update_kernel(
+            *args, mode=mode, keep=keep, thresh_iters=thresh_iters,
+            interpret=interpret)
+    entry = _compress_entry(mode, keep, thresh_iters, interpret)
     return entry(*args)
 
 

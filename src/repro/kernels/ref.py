@@ -82,6 +82,77 @@ def stream_update(hists: jax.Array, deltas: jax.Array,
     return h, stats, stale
 
 
+def compress_update(updates: jax.Array, residual: jax.Array,
+                    widths: jax.Array, selected: jax.Array,
+                    noise: jax.Array, *, mode: str, keep: int = 0,
+                    thresh_iters: int = 32
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Uplink-compression oracle (``kernels/compress.py``).
+
+    One FEEL round's lossy uplink over the per-device flattened update
+    matrix, fused into a single pass (DESIGN.md §9):
+
+    1. error-feedback accumulate: ``v = updates + residual`` — the
+       residual is the mass previous lossy rounds failed to transmit;
+    2. compress + dequantize:
+
+       * ``mode="quant"`` — stochastic ``widths``-bit quantization per
+         device row: scale by the row max ``m``, split ``|v| / m`` into
+         ``2^b - 1`` levels, round *stochastically* using the supplied
+         uniform ``noise`` (unbiased: ``E[c] = v``), rebuild values.
+         ``widths`` is per-device, so adaptive bit allocation rides the
+         same path.  An all-zero row compresses to zeros; a row with
+         one nonzero coordinate reconstructs it exactly (it IS the row
+         max).
+       * ``mode="topk"`` — keep the ``keep`` largest-magnitude
+         coordinates per row (values exact, the rest zero).  The
+         threshold comes from a fixed-trip bisection on
+         ``count(|v| >= t)``, mirroring the kernel (sorts don't lower
+         in TPU Pallas); float ties at the threshold may keep
+         marginally fewer/more than ``keep``, identically in both.
+
+    3. residual advance: ``r' = selected ? v - c : r`` — only devices
+       that actually transmitted consume their backlog; ``selected`` is
+       this round's selection mask.
+
+    Shapes: ``updates``/``residual``/``noise`` ``(K, P)`` with
+    ``widths``/``selected`` ``(K,)``, or batched ``(S, K, P)`` /
+    ``(S, K)`` — every reduction runs over the trailing ``P`` axis
+    only.  Returns ``(decoded values c, new residual)``; rows of ``c``
+    for unselected devices are meaningless (their FedAvg weight is 0)
+    and their residual is untouched.  This is also the production jnp
+    path (``core.compression`` with ``use_kernel=False``).
+    """
+    v = updates.astype(jnp.float32) + residual.astype(jnp.float32)
+    av = jnp.abs(v)
+    if mode == "quant":
+        m = jnp.max(av, axis=-1, keepdims=True)
+        levels = jnp.maximum(
+            jnp.exp2(widths.astype(jnp.float32)[..., None]) - 1.0, 1.0)
+        scaled = av / jnp.maximum(m, 1e-12) * levels
+        fl = jnp.floor(scaled)
+        q = fl + (noise < (scaled - fl)).astype(jnp.float32)
+        c = jnp.sign(v) * q / levels * m
+    elif mode == "topk":
+        lo = jnp.zeros(av.shape[:-1] + (1,), jnp.float32)
+        hi = jnp.max(av, axis=-1, keepdims=True)
+
+        def body(_, lohi):
+            tlo, thi = lohi
+            mid = 0.5 * (tlo + thi)
+            cnt = jnp.sum((av >= mid).astype(jnp.float32), axis=-1,
+                          keepdims=True)
+            over = cnt > keep
+            return jnp.where(over, mid, tlo), jnp.where(over, thi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, thresh_iters, body, (lo, hi))
+        c = jnp.where(av >= hi, v, 0.0)
+    else:
+        raise ValueError(f"mode must be 'quant' or 'topk', got {mode!r}")
+    new_r = jnp.where(selected[..., None] > 0.0, v - c, residual)
+    return c, new_r
+
+
 def sub2_pgd(selected: jax.Array, t_train: jax.Array,
              snr_coeff: jax.Array, tx_power: jax.Array,
              alpha0: jax.Array, *, rho: float, lr: float, tau: float,

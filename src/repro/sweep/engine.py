@@ -218,6 +218,31 @@ def aggregate_summary(agg) -> Dict[str, Dict[str, np.ndarray]]:
     return out
 
 
+# -- adaptive scenario counts (SweepSpec.ci_target) -----------------------
+
+def final_accuracy_ci_halfwidth(agg) -> float:
+    """95% CI half-width of the final-accuracy mean from the Welford
+    carry: ``1.96 * sqrt(m2 / (n-1)) / sqrt(n)`` (sample std / sqrt n).
+    ``inf`` below two scenarios — a single draw has no spread estimate.
+    One O(1) host transfer; callers are the chunk loops, which already
+    sync per chunk for checkpointing.
+    """
+    w = agg["scalar"]["final_accuracy"]
+    n = float(jax.device_get(w.count))
+    if n < 2.0:
+        return float("inf")
+    m2 = max(float(jax.device_get(w.m2)), 0.0)
+    return 1.96 * np.sqrt(m2 / (n - 1.0)) / np.sqrt(n)
+
+
+def point_converged(agg, ci_target: float) -> bool:
+    """True when adaptive stopping is on and the point's final-accuracy
+    CI half-width is at or below the target."""
+    if ci_target <= 0.0:
+        return False
+    return bool(final_accuracy_ci_halfwidth(agg) <= ci_target)
+
+
 # -- checkpoint (de)serialization: Welford pytree <-> plain array tree ----
 
 def aggregate_to_tree(agg) -> Dict[str, Dict[str, Dict[str, np.ndarray]]]:
@@ -336,11 +361,15 @@ class SweepEngine:
     def run_point(self, point: grid_lib.GridPoint, agg=None):
         """All chunks of one grid point folded into one fresh aggregate
         (mid-point resume is the runner's job — it drives
-        :meth:`run_chunk` directly from its checkpointed cursor)."""
+        :meth:`run_chunk` directly from its checkpointed cursor).
+        With ``spec.ci_target > 0`` the chunk loop stops early once the
+        final-accuracy CI half-width reaches the target."""
         if agg is None:
             agg = aggregate_init(point.fl.num_rounds)
         base = self.spec.scenario_start(point.index)
         for off, size in self.spec.point_chunks():
+            if off > 0 and point_converged(agg, self.spec.ci_target):
+                break
             agg = self.run_chunk(point, base + off, size, agg)
         return agg
 
@@ -355,4 +384,5 @@ class SweepEngine:
 __all__ = ["Welford", "welford_init", "welford_fold", "aggregate_init",
            "aggregate_fold", "aggregate_summary", "aggregate_to_tree",
            "aggregate_from_tree", "SweepEngine", "ROUND_METRICS",
-           "SCALAR_METRICS", "stream_bases"]
+           "SCALAR_METRICS", "stream_bases",
+           "final_accuracy_ci_halfwidth", "point_converged"]

@@ -38,7 +38,7 @@ from typing import Any, List, Tuple
 from repro.core import federated, scheduler, wireless
 
 # Axis targets -> which base config the field override applies to.
-TARGETS = ("fl", "sched", "wireless", "stream")
+TARGETS = ("fl", "sched", "wireless", "stream", "comp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +90,7 @@ def _apply(fl: federated.FLConfig, sched: scheduler.SchedulerConfig,
         elif target == "wireless":
             _check_field(wcfg, target, field)
             wcfg = dataclasses.replace(wcfg, **{field: value})
-        else:  # stream
+        elif target == "stream":
             if fl.stream is None:
                 raise ValueError(
                     f"axis stream.{field}: base FLConfig.stream is None "
@@ -98,6 +98,16 @@ def _apply(fl: federated.FLConfig, sched: scheduler.SchedulerConfig,
             _check_field(fl.stream, target, field)
             fl = dataclasses.replace(
                 fl, stream=dataclasses.replace(fl.stream, **{field: value}))
+        else:  # comp
+            if fl.compression is None:
+                raise ValueError(
+                    f"axis comp.{field}: base FLConfig.compression is "
+                    f"None (set a CompressionConfig to sweep codec "
+                    f"knobs)")
+            _check_field(fl.compression, target, field)
+            fl = dataclasses.replace(
+                fl, compression=dataclasses.replace(fl.compression,
+                                                    **{field: value}))
     return fl, sched, wcfg
 
 
@@ -117,6 +127,15 @@ class SweepSpec:
     execution detail — per-scenario streams are chunk-invariant by the
     fold_in contract — but it *is* part of the resume schedule, so it
     joins :meth:`fingerprint`.
+
+    ``ci_target > 0`` enables adaptive per-grid-point scenario counts:
+    once a point's final-accuracy 95% CI half-width (from the Welford
+    carry the engine already maintains) drops to ``ci_target`` or
+    below, the point's remaining chunks are skipped — tight points stop
+    early, noisy points spend the full budget.  Deterministic given the
+    folded chunks, so resumes stay reproducible; the executed scenario
+    set is data-dependent, which is exactly the feature.  It joins the
+    fingerprint (it shapes the effective schedule).
     """
 
     fl: federated.FLConfig = federated.FLConfig()
@@ -127,6 +146,7 @@ class SweepSpec:
     chunk_scenarios: int = 0        # 0 -> one chunk per grid point
     base_seed: int = 0
     eval_every: int = 1
+    ci_target: float = 0.0          # 0 -> fixed scenario counts
     # Common random numbers (True, the default): every grid point runs
     # the SAME scenario indices 0..S-1, i.e. identical channel/PRNG
     # realizations — paired comparisons across config points (DAS vs
@@ -205,7 +225,7 @@ class SweepSpec:
         canon = repr((self.fl, self.sched, self.wireless, self.axes,
                       self.scenarios_per_point, self.chunk_scenarios,
                       self.base_seed, self.eval_every,
-                      self.common_random_numbers))
+                      self.common_random_numbers, self.ci_target))
         return hashlib.sha1(canon.encode()).hexdigest()
 
 

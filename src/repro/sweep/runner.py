@@ -11,6 +11,14 @@ fingerprint, and the Welford fold re-enters at exactly the chunk the
 cursor names — so the resumed final aggregates are bitwise identical to
 an uninterrupted run (``tests/test_sweep.py``).
 
+Two live-operations hooks ride the same chunk walk: ``jsonl_path``
+streams one JSON line of scalar aggregates per chunk for dashboards
+(resume-safe: lines are keyed by cursor and rewound to the resumed
+checkpoint before appending), and ``SweepSpec.ci_target`` skips a
+point's remaining chunks once its final-accuracy CI is tight enough
+(adaptive scenario counts — the Welford carry already holds the needed
+moments).
+
 Checkpoints refuse to resume across incompatible writers twice over:
 the msgpack container's ``FORMAT_VERSION`` header guards the leaf
 encoding, and ``STATE_VERSION`` in the meta dict guards the runner's
@@ -21,6 +29,8 @@ the checkpoint) is an error, not a silent restart.
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
 import os
 from typing import Dict, List, Optional, Tuple
 
@@ -56,20 +66,100 @@ class SweepRunner:
     ``max_chunks`` bounds how many chunks one ``run`` call executes —
     the hook the kill/resume test uses, and a natural fit for
     preemptible allocations (run until evicted, resume later).
+
+    ``jsonl_path`` streams one JSON line per walked chunk — the point's
+    *current* scalar aggregates (mean/std/count of final accuracy,
+    totals, energy per device, ...) plus the chunk coordinates — so a
+    live dashboard can tail the file while the sweep runs.  The append
+    contract is resume-safe: every line carries the post-chunk
+    ``cursor``, and on startup the file is rewound to the resumed
+    cursor (lines from a killed run's un-checkpointed tail are
+    dropped), so the line sequence always matches the Welford carry
+    that produced it.  ``ckpt_path=None`` runs without checkpoints
+    (JSONL streaming still works; resume obviously doesn't).
+
+    With ``spec.ci_target > 0`` (adaptive scenario counts) a chunk
+    whose point already reached the final-accuracy CI target is
+    *skipped*: the cursor advances, a ``"skipped": true`` line is
+    streamed, and no compute is spent.  Skipping is a pure function of
+    the folded aggregate, so kill/resume reproduces the same schedule.
     """
 
     engine: engine_lib.SweepEngine
-    ckpt_path: str
+    ckpt_path: Optional[str]
     checkpoint_every: int = 1
+    jsonl_path: Optional[str] = None
 
     def __post_init__(self):
         self.spec = self.engine.spec
         self._schedule = self.spec.schedule()
         self._points = self.engine.points
 
+    # -- JSONL streaming -------------------------------------------------
+
+    def _jsonl_rewind(self, cursor: int) -> None:
+        """Drop lines past the resumed cursor (the resume-safe append
+        contract): a killed run may have streamed chunks that were
+        never checkpointed; those re-execute, so their stale lines must
+        go before the re-run appends duplicates."""
+        if self.jsonl_path is None or not os.path.exists(self.jsonl_path):
+            return
+        kept = []
+        with open(self.jsonl_path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    break                     # torn tail write: drop rest
+                if rec.get("cursor", 0) > cursor:
+                    break
+                kept.append(line)
+        with open(self.jsonl_path, "w") as f:
+            for line in kept:
+                f.write(line + "\n")
+
+    def _jsonl_emit(self, cursor: int, point: grid_lib.GridPoint,
+                    start: int, size: int, agg, skipped: bool) -> None:
+        if self.jsonl_path is None:
+            return
+
+        def _num(x) -> Optional[float]:
+            v = float(x)
+            return v if math.isfinite(v) else None
+
+        summary = engine_lib.aggregate_summary(agg)
+        scalars = {
+            name.split(".", 1)[1]: {
+                "mean": _num(stats["mean"]),
+                "std": _num(stats["std"]),
+                "min": _num(stats["min"]),
+                "max": _num(stats["max"]),
+                "count": float(stats["count"]),
+            }
+            for name, stats in summary.items()
+            if name.startswith("scalar.")
+        }
+        rec = {
+            "cursor": cursor,
+            "point": point.index,
+            "point_name": point.name,
+            "global_start": start,
+            "size": size,
+            "skipped": skipped,
+            "scalar": scalars,
+        }
+        with open(self.jsonl_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+
     # -- state <-> disk --------------------------------------------------
 
     def _save(self, aggs: Dict[int, object], cursor: int) -> None:
+        if self.ckpt_path is None:
+            return
         # Keyed by the stable point index, not the formatted name: names
         # can collide (two axis values formatting alike) and string axis
         # values may contain '/', the flattener's path separator.
@@ -125,8 +215,10 @@ class SweepRunner:
         """
         aggs: Dict[int, object] = {}
         cursor = 0
-        if resume and os.path.exists(self.ckpt_path):
+        if resume and self.ckpt_path is not None \
+                and os.path.exists(self.ckpt_path):
             aggs, cursor = self._load()
+        self._jsonl_rewind(cursor)
         executed = 0
         while cursor < len(self._schedule):
             if max_chunks is not None and executed >= max_chunks:
@@ -135,12 +227,18 @@ class SweepRunner:
             point_idx, start, size = self._schedule[cursor]
             point = self._points[point_idx]
             agg = aggs.get(point_idx)
-            if agg is None:
-                agg = engine_lib.aggregate_init(point.fl.num_rounds)
-            aggs[point_idx] = self.engine.run_chunk(point, start, size,
-                                                    agg)
+            skipped = agg is not None and engine_lib.point_converged(
+                agg, self.spec.ci_target)
+            if not skipped:
+                if agg is None:
+                    agg = engine_lib.aggregate_init(point.fl.num_rounds)
+                agg = self.engine.run_chunk(point, start, size, agg)
+                aggs[point_idx] = agg
+                # Skips are free — only real compute draws down the
+                # caller's max_chunks budget.
+                executed += 1
             cursor += 1
-            executed += 1
+            self._jsonl_emit(cursor, point, start, size, agg, skipped)
             if cursor % self.checkpoint_every == 0 \
                     or cursor == len(self._schedule):
                 self._save(aggs, cursor)
@@ -151,16 +249,21 @@ class SweepRunner:
 def run_sweep(spec: grid_lib.SweepSpec, *, data, loss_fn, eval_fn,
               init_params, ckpt_path: Optional[str] = None,
               target_accuracy: float = 0.85, use_sharding: bool = True,
-              donate_params: bool = False, resume: bool = True):
+              donate_params: bool = False, resume: bool = True,
+              jsonl_path: Optional[str] = None):
     """One-call sweep: build the engine, optionally resume from
-    ``ckpt_path``, return per-point summaries."""
+    ``ckpt_path``, optionally stream per-chunk aggregates to
+    ``jsonl_path``, return per-point summaries."""
     eng = engine_lib.SweepEngine(
         spec, data=data, loss_fn=loss_fn, eval_fn=eval_fn,
         init_params=init_params, target_accuracy=target_accuracy,
         use_sharding=use_sharding, donate_params=donate_params)
-    if ckpt_path is None:
+    if ckpt_path is None and jsonl_path is None:
+        # engine.run_point honors spec.ci_target on its own, so the
+        # runner layer is only needed for checkpoints/JSONL streaming.
         return eng.run()
-    return SweepRunner(eng, ckpt_path).run(resume=resume)
+    return SweepRunner(eng, ckpt_path,
+                       jsonl_path=jsonl_path).run(resume=resume)
 
 
 __all__ = ["SweepRunner", "run_sweep", "STATE_VERSION"]

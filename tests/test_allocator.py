@@ -359,7 +359,7 @@ def test_policies_route_through_registry():
         params: bw.Sub2Params = bw.Sub2Params()
 
         def solve(self, selected, t_train, gains, tx_power, cfg,
-                  alpha0=None, data_sizes=None):
+                  alpha0=None, data_sizes=None, payload_bits=None):
             mask = (selected > 0.0).astype(jnp.float32)
             alpha = mask / jnp.maximum(jnp.sum(mask), 1.0)
             return alpha, jnp.asarray(0.0, jnp.float32)

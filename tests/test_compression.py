@@ -1,0 +1,454 @@
+"""Compressed-uplink subsystem: codecs, kernel, threading, driver parity.
+
+Contracts under test (ISSUE 5 acceptance, DESIGN.md §9):
+
+* ``kernels/compress.py`` == the ``kernels/ref.py::compress_update``
+  oracle in interpret mode — quant + topk, including the all-zero and
+  single-element edges, the batched ``(S, K, P)`` lane, and vmap of the
+  single entry (the scenario-driver path through ``custom_vmap``)
+* ``payload_bits`` is per-device end-to-end: ``upload_time`` /
+  ``upload_energy`` / ``sub2_objective`` / ``min_time_allocation``
+  accept a ``(K,)`` bits array with the scalar ``model_bits`` staying
+  the working default
+* the ``adaptive`` codec assigns fewer bits to weak-channel devices
+  (regression pin)
+* compressed runs with error feedback are bit-for-bit identical between
+  the scan driver and the legacy loop, and the batched driver equals S
+  independent runs
+* e2e: ``quant`` at 8 bits reduces total transmission energy vs
+  ``none`` at equal round count without degrading final accuracy by
+  more than the EXPERIMENTS.md §Compression recorded tolerance (0.1)
+* the codec registry mirrors the allocator/arrival-process registries
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import bandwidth as bw
+from repro.core import compression, federated, scheduler, wireless
+from repro.data import partition, synthetic
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import paper_nets
+
+WCFG = wireless.WirelessConfig()
+
+# The EXPERIMENTS.md §Compression accuracy tolerance for the quant@8 vs
+# none e2e comparison (probe values recorded there).
+E2E_ACC_TOLERANCE = 0.1
+
+
+def _compress_instance(seed: int, s: int, k: int, p: int,
+                       bits: float = 8.0):
+    u = jax.random.normal(jax.random.key(seed), (s, k, p))
+    r = 0.2 * jax.random.normal(jax.random.key(seed + 1), (s, k, p))
+    widths = jnp.full((s, k), bits, jnp.float32)
+    sel = (jax.random.uniform(jax.random.key(seed + 2), (s, k)) > 0.5
+           ).astype(jnp.float32)
+    noise = jax.random.uniform(jax.random.key(seed + 3), (s, k, p))
+    return u, r, widths, sel, noise
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4), st.integers(2, 12), st.integers(2, 48),
+       st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_compress_kernel_matches_oracle(s, k, p, seed):
+    args = _compress_instance(seed % 1000, s, k, p)
+    for mode, keep in (("quant", 0), ("topk", max(1, p // 4))):
+        want = kernel_ref.compress_update(*args, mode=mode, keep=keep)
+        got = kernel_ops.compress_update(*args, mode=mode, keep=keep)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_compress_kernel_mixed_widths_matches_oracle():
+    """Per-device bit widths (the adaptive codec's shape) through the
+    quant lane."""
+    u, r, _, sel, noise = _compress_instance(5, 2, 6, 40)
+    widths = jnp.asarray([[4.0, 6.0, 8.0, 10.0, 12.0, 5.0]] * 2)
+    want = kernel_ref.compress_update(u, r, widths, sel, noise,
+                                      mode="quant")
+    got = kernel_ops.compress_update(u, r, widths, sel, noise,
+                                     mode="quant")
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_compress_all_zero_and_single_element_edges():
+    """All-zero rows compress to zeros with zero residual advance; a
+    single-coordinate row reconstructs exactly under quant (it IS the
+    row max) and survives topk keep=1."""
+    for mode, keep in (("quant", 0), ("topk", 1)):
+        u = jnp.zeros((1, 3, 1))
+        u = u.at[0, 1, 0].set(2.5)
+        r = jnp.zeros_like(u)
+        widths = jnp.full((1, 3), 8.0)
+        sel = jnp.ones((1, 3))
+        noise = jax.random.uniform(jax.random.key(0), u.shape)
+        c, new_r = kernel_ref.compress_update(u, r, widths, sel, noise,
+                                              mode=mode, keep=keep)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(u),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_r), 0.0, atol=1e-6)
+        ck, rk = kernel_ops.compress_update(u, r, widths, sel, noise,
+                                            mode=mode, keep=keep)
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(c),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(rk), np.asarray(new_r),
+                                   atol=1e-6)
+
+
+def test_compress_error_feedback_semantics():
+    """v = u + r; selected rows advance to v - c, unselected keep r."""
+    u, r, widths, _, noise = _compress_instance(9, 1, 4, 16)
+    sel = jnp.asarray([[1.0, 0.0, 1.0, 0.0]])
+    c, new_r = kernel_ref.compress_update(u, r, widths, sel, noise,
+                                          mode="quant")
+    v = np.asarray(u + r)
+    np.testing.assert_allclose(np.asarray(new_r[0, 0]),
+                               v[0, 0] - np.asarray(c[0, 0]), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(new_r[0, 1]),
+                                  np.asarray(r[0, 1]))
+
+
+def test_topk_keeps_at_most_k_entries():
+    u, r, widths, sel, noise = _compress_instance(11, 2, 5, 64)
+    keep = 6
+    c, _ = kernel_ref.compress_update(u, r, widths, sel, noise,
+                                      mode="topk", keep=keep)
+    nonzero = np.sum(np.asarray(c) != 0.0, axis=-1)
+    assert np.all(nonzero <= keep)
+    assert np.all(nonzero >= 1)
+
+
+def test_compress_single_and_vmap_lane():
+    """Single-instance entry == row of the batched lane == vmap of the
+    single entry, and the custom_vmap rule (not pallas's generic
+    batching) handled the scenario map."""
+    args = _compress_instance(13, 3, 5, 24)
+    got_b = kernel_ops.compress_update(*args, mode="quant")
+    for i in range(3):
+        got_1 = kernel_ops.compress_update(*(a[i] for a in args),
+                                           mode="quant")
+        for g1, gb in zip(got_1, got_b):
+            np.testing.assert_array_equal(np.asarray(g1),
+                                          np.asarray(gb[i]))
+    before = kernel_ops.COMPRESS_LANE_TRACES
+    got_v = jax.vmap(
+        lambda *a: kernel_ops.compress_update(*a, mode="quant"))(*args)
+    assert kernel_ops.COMPRESS_LANE_TRACES > before
+    for gv, gb in zip(got_v, got_b):
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(gb),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_quant_reconstruction_bounded_by_level():
+    """|c - v| <= m / (2^b - 1) per coordinate — one quantization step."""
+    u, r, widths, sel, noise = _compress_instance(17, 1, 4, 128)
+    c, _ = kernel_ref.compress_update(u, r, widths, sel, noise,
+                                      mode="quant")
+    v = np.asarray(u + r)
+    step = np.max(np.abs(v), axis=-1, keepdims=True) / (2.0 ** 8 - 1.0)
+    assert np.all(np.abs(np.asarray(c) - v) <= step + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# payload_bits threading (acceptance: per-device end-to-end)
+# ---------------------------------------------------------------------------
+
+def _channel(k: int, seed: int = 0):
+    net = wireless.sample_network(jax.random.key(seed), k, WCFG)
+    gains = wireless.sample_fading(jax.random.key(seed + 1), net)
+    sizes = jax.random.randint(jax.random.key(seed + 2), (k,), 50, 1500)
+    t_train = wireless.train_time(sizes, net, WCFG)
+    return net, gains, sizes, t_train
+
+
+def test_upload_time_energy_accept_bits_array():
+    net, gains, _, _ = _channel(6)
+    alpha = jnp.full((6,), 1.0 / 6.0)
+    bits = jnp.asarray([1e5, 5e4, 2.5e4, 1e5, 1e4, 7.5e4])
+    t = wireless.upload_time(alpha, gains, net.tx_power, WCFG, bits)
+    e = wireless.upload_energy(alpha, gains, net.tx_power, WCFG, bits)
+    t_scalar = wireless.upload_time(alpha, gains, net.tx_power, WCFG)
+    # Per-device: each row scales by its own bits / model_bits ratio.
+    np.testing.assert_allclose(
+        np.asarray(t), np.asarray(t_scalar * bits / WCFG.model_bits),
+        rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e),
+                               np.asarray(net.tx_power * t), rtol=1e-6)
+    # Scalar default unchanged: a full-payload array equals None bitwise.
+    full = jnp.full((6,), WCFG.model_bits)
+    np.testing.assert_array_equal(
+        np.asarray(wireless.upload_time(alpha, gains, net.tx_power,
+                                        WCFG, full)),
+        np.asarray(t_scalar))
+
+
+def test_sub2_objective_and_min_time_accept_bits_array():
+    net, gains, _, t_train = _channel(8, seed=3)
+    sel = jnp.ones((8,))
+    bits = jnp.full((8,), WCFG.model_bits / 4.0)
+    # Full-payload array == scalar default, bitwise.
+    a_def, t_def = bw.min_time_allocation(sel, t_train, gains,
+                                          net.tx_power, WCFG)
+    a_full, t_full = bw.min_time_allocation(
+        sel, t_train, gains, net.tx_power, WCFG,
+        payload_bits=jnp.full((8,), WCFG.model_bits))
+    np.testing.assert_array_equal(np.asarray(a_def), np.asarray(a_full))
+    assert float(t_def) == float(t_full)
+    # Smaller payloads finish strictly sooner and remain feasible.
+    a_small, t_small = bw.min_time_allocation(sel, t_train, gains,
+                                              net.tx_power, WCFG,
+                                              payload_bits=bits)
+    assert float(t_small) < float(t_def)
+    assert float(jnp.sum(a_small)) <= 1.0 + 1e-5
+    o_def = bw.sub2_objective(a_def, sel, t_train, gains, net.tx_power,
+                              WCFG, rho=0.5)
+    o_small = bw.sub2_objective(a_def, sel, t_train, gains, net.tx_power,
+                                WCFG, rho=0.5, payload_bits=bits)
+    assert float(o_small) < float(o_def)
+    # pgd_allocation prices the bits too (objective drops with payload).
+    _, po_def = bw.pgd_allocation(sel, t_train, gains, net.tx_power,
+                                  WCFG, bw.Sub2Params.fast())
+    _, po_small = bw.pgd_allocation(sel, t_train, gains, net.tx_power,
+                                    WCFG, bw.Sub2Params.fast(),
+                                    payload_bits=bits)
+    assert float(po_small) < float(po_def)
+
+
+def test_schedule_prices_post_compression_bits():
+    """The realized ScheduleResult accounting follows the payload: the
+    same decision inputs with 4x smaller uplinks must report lower
+    per-device energy for the selected set."""
+    k = 10
+    net, gains, sizes, _ = _channel(k, seed=5)
+    ages = jnp.zeros((k,), jnp.int32)
+    index = jnp.linspace(0.2, 0.8, k)
+    sch = scheduler.SchedulerConfig(method="full")
+    res_full = scheduler.schedule(jax.random.key(1), index, ages, sizes,
+                                  gains, net, WCFG, sch)
+    res_comp = scheduler.schedule(jax.random.key(1), index, ages, sizes,
+                                  gains, net, WCFG, sch, None,
+                                  jnp.full((k,), WCFG.model_bits / 4.0))
+    assert float(jnp.sum(res_comp.energy)) \
+        < float(jnp.sum(res_full.energy))
+    assert float(res_comp.round_time) <= float(res_full.round_time)
+
+
+# ---------------------------------------------------------------------------
+# Codec registry + adaptive regression
+# ---------------------------------------------------------------------------
+
+def test_codec_registry_errors():
+    assert {"none", "quant", "topk",
+            "adaptive"} <= set(compression.codec_names())
+    with pytest.raises(ValueError, match="unknown codec"):
+        compression.get_codec("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        compression.register_codec("quant", compression.Quant)
+
+
+def test_payload_bits_per_codec():
+    ccfg = compression.CompressionConfig(bit_width=8, topk_frac=0.1)
+    gains = jnp.ones((4,))
+    index = jnp.linspace(0.0, 1.0, 4)
+    # none -> None: the nominal scalar payload (keeps solvers on their
+    # scalar path, fused_pgd kernel lane included).
+    assert compression.get_codec("none").payload_bits(
+        ccfg, WCFG, gains, index) is None
+    q_bits = compression.get_codec("quant").payload_bits(
+        ccfg, WCFG, gains, index)
+    np.testing.assert_allclose(np.asarray(q_bits),
+                               WCFG.model_bits * 8.0 / 32.0)
+    t_bits = compression.get_codec("topk").payload_bits(
+        ccfg, WCFG, gains, index)
+    idx_bits = compression.topk_index_bits(ccfg, WCFG)
+    assert idx_bits == np.ceil(np.log2(WCFG.model_bits / 32.0))
+    np.testing.assert_allclose(
+        np.asarray(t_bits),
+        WCFG.model_bits * 0.1 * (32.0 + idx_bits) / 32.0)
+
+
+def test_adaptive_assigns_fewer_bits_to_weak_channels():
+    """Regression pin: with diversity held equal, bit width is monotone
+    in channel gain — the weakest channel gets the floor width, the
+    strongest the ceiling."""
+    ccfg = compression.CompressionConfig(codec="adaptive",
+                                         adaptive_min_bits=4,
+                                         adaptive_max_bits=12,
+                                         adaptive_channel_weight=1.0)
+    gains = jnp.asarray([1e-9, 5e-8, 2e-7, 1e-6, 4e-6])
+    index = jnp.full((5,), 0.5)
+    widths = compression.adaptive_bit_widths(ccfg, gains, index)
+    w = np.asarray(widths)
+    assert np.all(np.diff(w) >= 0.0)          # monotone in gain
+    assert w[0] == 4.0 and w[-1] == 12.0
+    # And the per-device payload follows the widths.
+    bits = compression.get_codec("adaptive").payload_bits(
+        ccfg, WCFG, gains, index)
+    np.testing.assert_allclose(np.asarray(bits),
+                               WCFG.model_bits * w / 32.0)
+    # Diversity rank matters at channel_weight < 1: richer data earns
+    # more bits on an equal channel.
+    ccfg_mix = compression.CompressionConfig(
+        codec="adaptive", adaptive_channel_weight=0.0)
+    widths_div = compression.adaptive_bit_widths(
+        ccfg_mix, jnp.full((5,), 1e-7), jnp.linspace(0.1, 0.9, 5))
+    assert np.all(np.diff(np.asarray(widths_div)) >= 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Driver parity + e2e acceptance
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def comp_world():
+    imgs, labs = synthetic.generate(0, samples_per_class=400)
+    pspec = partition.PartitionSpec(num_devices=8, num_shards=60,
+                                    shard_size=50)
+    data = partition.partition(imgs, labs, seed=1, spec=pspec)
+    net = wireless.sample_network(jax.random.key(0), 8, WCFG)
+    mspec = paper_nets.PaperNetSpec(kind="mlp")
+    params = paper_nets.init(jax.random.key(3), mspec)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    return data, net, params, loss, ev
+
+
+def _fcfg(codec: str, rounds: int = 3,
+          **comp_kw) -> federated.FLConfig:
+    return federated.FLConfig(
+        num_rounds=rounds, batch_size=50, learning_rate=0.1,
+        compression=compression.CompressionConfig(codec=codec,
+                                                  bit_width=8,
+                                                  **comp_kw))
+
+
+@pytest.mark.parametrize("codec", ["quant", "topk", "adaptive"])
+def test_scan_matches_legacy_under_compression(comp_world, codec):
+    """Compressed runs with error feedback must stay bit-for-bit
+    identical between the scan driver (residual in the scan carry) and
+    the legacy per-round loop."""
+    data, net, params, loss, ev = comp_world
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    kw = dict(init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+              net=net, wcfg=WCFG, scfg=scfg, fcfg=_fcfg(codec),
+              key=jax.random.key(4))
+    p_scan, h_scan = federated.run_federated(**kw)
+    p_loop, h_loop = federated.run_federated_loop(**kw)
+    assert len(h_scan) == len(h_loop)
+    for a, b in zip(h_scan, h_loop):
+        assert np.array_equal(a.selected, b.selected)
+        assert a.round_time == b.round_time
+        np.testing.assert_allclose(a.energy_total, b.energy_total,
+                                   rtol=1e-6)
+        if b.accuracy == b.accuracy:
+            assert a.accuracy == b.accuracy
+    for a, b in zip(jax.tree_util.tree_leaves(p_scan),
+                    jax.tree_util.tree_leaves(p_loop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batch_matches_independent_compressed_runs(comp_world):
+    """S compressed scenarios through run_federated_batch == S
+    independent run_federated calls (the error-feedback residual rides
+    the vmapped carry per lane)."""
+    data, _, params, loss, ev = comp_world
+    s = 2
+    nets = wireless.sample_networks(jax.random.key(21), s,
+                                    data.num_devices, WCFG)
+    keys = jax.random.split(jax.random.key(22), s)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    fcfg = _fcfg("quant")
+    p_b, metrics = federated.run_federated_batch(
+        init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+        nets=nets, wcfg=WCFG, scfg=scfg, fcfg=fcfg, keys=keys)
+    hists_b = federated.batch_metrics_to_records(metrics)
+    for i in range(s):
+        net_i = jax.tree_util.tree_map(lambda a, i=i: a[i], nets)
+        p_i, hist_i = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net_i, wcfg=WCFG, scfg=scfg, fcfg=fcfg, key=keys[i])
+        for a, b in zip(hists_b[i], hist_i):
+            assert np.array_equal(a.selected, b.selected)
+            assert a.round_time == b.round_time
+            if b.accuracy == b.accuracy:
+                assert a.accuracy == b.accuracy
+        for a, b in zip(jax.tree_util.tree_leaves(p_b),
+                        jax.tree_util.tree_leaves(p_i)):
+            np.testing.assert_array_equal(np.asarray(a[i]),
+                                          np.asarray(b))
+
+
+def test_kernel_compress_matches_reference_in_driver(comp_world):
+    """use_kernel=True routes the round's uplink through the Pallas
+    compress kernel; the whole run must match the jnp path."""
+    data, net, params, loss, ev = comp_world
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    outs = {}
+    for use_kernel in (False, True):
+        kw = dict(init_params=params, loss_fn=loss, eval_fn=ev,
+                  data=data, net=net, wcfg=WCFG, scfg=scfg,
+                  fcfg=_fcfg("quant", rounds=2, use_kernel=use_kernel),
+                  key=jax.random.key(4))
+        outs[use_kernel] = federated.run_federated(**kw)
+    for a, b in zip(outs[False][1], outs[True][1]):
+        assert np.array_equal(a.selected, b.selected)
+        np.testing.assert_allclose(a.round_time, b.round_time, rtol=1e-6)
+        np.testing.assert_allclose(a.energy_total, b.energy_total,
+                                   rtol=1e-5)
+
+
+def test_quant8_cuts_energy_without_accuracy_loss_e2e(comp_world):
+    """Acceptance: quant@8 vs none at equal round count — total
+    transmission energy drops (the payload is 4x smaller and the
+    schedulers price it), final accuracy within the EXPERIMENTS.md
+    §Compression tolerance."""
+    data, net, params, loss, ev = comp_world
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    out = {}
+    for codec in ("none", "quant"):
+        _, hist = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net, wcfg=WCFG, scfg=scfg, fcfg=_fcfg(codec, rounds=5),
+            key=jax.random.key(4), eval_every=5)
+        out[codec] = (sum(r.energy_total for r in hist),
+                      hist[-1].accuracy)
+    e_none, acc_none = out["none"]
+    e_quant, acc_quant = out["quant"]
+    assert e_quant < 0.5 * e_none, (e_quant, e_none)
+    assert acc_none - acc_quant <= E2E_ACC_TOLERANCE, out
+
+
+def test_error_feedback_off_still_runs_and_differs(comp_world):
+    """error_feedback=False is the biased compressor: same plumbing, no
+    residual accumulation — the two settings genuinely diverge."""
+    data, net, params, loss, ev = comp_world
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    leaves = {}
+    for ef in (True, False):
+        p, _ = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net, wcfg=WCFG, scfg=scfg,
+            fcfg=_fcfg("quant", rounds=2, error_feedback=ef),
+            key=jax.random.key(4), eval_every=2)
+        leaves[ef] = jax.tree_util.tree_leaves(p)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(leaves[True], leaves[False]))

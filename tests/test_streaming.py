@@ -455,3 +455,87 @@ def test_staleness_hook_inert_at_zero_weight():
                                    gains, net, WCFG, sch, staleness)
     np.testing.assert_array_equal(np.asarray(res_none.selected),
                                   np.asarray(res_stale.selected))
+
+
+# ---------------------------------------------------------------------------
+# Trace arrival process (ROADMAP trace-driven item, minimal version)
+# ---------------------------------------------------------------------------
+
+def test_trace_process_replays_deltas_and_wraps():
+    k, c = 5, 4
+    deltas = np.zeros((3, k, c), np.float32)
+    deltas[0, :, 0] = 6.0
+    deltas[1, :, 1] = 2.0
+    deltas[2, :, 2] = -1.5
+    proc = streaming.Trace(deltas)
+    cfg = streaming.StreamConfig(process="trace")
+    h0 = jnp.full((k, c), 10.0)
+    state = proc.init(jax.random.key(0), h0, cfg)
+    for r in range(5):                       # wraps past the trace end
+        d, arr, state = proc.sample(jax.random.key(r), state, cfg)
+        np.testing.assert_array_equal(np.asarray(d), deltas[r % 3])
+        np.testing.assert_allclose(
+            np.asarray(arr),
+            np.sum(np.maximum(deltas[r % 3], 0.0), axis=-1))
+        state = dataclasses.replace(state, round=state.round + 1)
+
+
+def test_trace_process_traceable_and_vmappable():
+    deltas = np.arange(2 * 3 * 4, dtype=np.float32).reshape(2, 3, 4)
+    proc = streaming.Trace(deltas)
+    cfg = streaming.StreamConfig(process="trace")
+    h0 = jnp.ones((3, 4))
+
+    def step(r):
+        st = proc.init(jax.random.key(0), h0, cfg)
+        st = dataclasses.replace(st, round=r)
+        d, arr, _ = proc.sample(jax.random.key(1), st, cfg)
+        return d, arr
+
+    d_j, _ = jax.jit(step)(jnp.asarray(1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(d_j), deltas[1])
+    # Per-lane round counters under vmap select per-lane trace rows.
+    d_v, _ = jax.vmap(step)(jnp.asarray([0, 1], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(d_v), deltas)
+
+
+def test_trace_placeholder_registration_raises_with_recipe():
+    assert "trace" in streaming.process_names()
+    proc = streaming.get_process("trace")
+    with pytest.raises(ValueError, match="register_process"):
+        proc.init(jax.random.key(0), jnp.ones((2, 3)),
+                  streaming.StreamConfig(process="trace"))
+    with pytest.raises(ValueError, match="\\(R, K, C\\)"):
+        streaming.Trace(np.ones((4, 3))).init(
+            jax.random.key(0), jnp.ones((4, 3)),
+            streaming.StreamConfig(process="trace"))
+
+
+def test_trace_process_in_both_drivers(stream_world):
+    """A registered trace drives the scan driver and the legacy loop to
+    the same bit-for-bit run, and the traced arrivals move the live
+    histograms."""
+    data, net, params, loss, ev = stream_world
+    k = data.num_devices
+    deltas = np.zeros((2, k, 10), np.float32)
+    deltas[0, :, 0] = 30.0
+    deltas[1, :, 5] = 12.0
+    streaming.register_process(
+        "trace_test", lambda: streaming.Trace(deltas), overwrite=True)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3,
+                                     staleness_weight=0.25)
+    fcfg = federated.FLConfig(
+        num_rounds=3, batch_size=50, learning_rate=0.1,
+        stream=streaming.StreamConfig(process="trace_test"))
+    kw = dict(init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+              net=net, wcfg=WCFG, scfg=scfg, fcfg=fcfg,
+              key=jax.random.key(4))
+    p_scan, h_scan = federated.run_federated(**kw)
+    p_loop, h_loop = federated.run_federated_loop(**kw)
+    for a, b in zip(h_scan, h_loop):
+        assert np.array_equal(a.selected, b.selected)
+        assert a.round_time == b.round_time
+    for a, b in zip(jax.tree_util.tree_leaves(p_scan),
+                    jax.tree_util.tree_leaves(p_loop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -488,3 +488,168 @@ def test_shard_map_parity_on_four_host_devices():
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "SHARDED_PARITY_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# JSONL streaming (--sweep-jsonl): per-chunk lines, resume-safe append
+# ---------------------------------------------------------------------------
+
+def test_runner_jsonl_streams_per_chunk(world, engine, tmp_path):
+    import json
+    ck = str(tmp_path / "sweep.msgpack")
+    jl = str(tmp_path / "sweep.jsonl")
+    out = runner_lib.SweepRunner(engine, ck, jsonl_path=jl).run()
+    lines = [json.loads(ln) for ln in open(jl)]
+    assert [ln["cursor"] for ln in lines] == \
+        list(range(1, len(engine.spec.schedule()) + 1))
+    # The last line of each point carries that point's final aggregate.
+    last_by_point = {ln["point"]: ln for ln in lines}
+    for point, summary in out:
+        rec = last_by_point[point.index]
+        assert rec["point_name"] == point.name
+        assert not rec["skipped"]
+        want = float(summary["scalar.final_accuracy"]["mean"])
+        assert rec["scalar"]["final_accuracy"]["mean"] == \
+            pytest.approx(want, rel=1e-6)
+        assert rec["scalar"]["final_accuracy"]["count"] == \
+            engine.spec.scenarios_per_point
+
+
+def test_runner_jsonl_resume_safe_append(world, engine, tmp_path):
+    """Kill after one chunk, resume: the file must hold exactly one
+    line per chunk with monotone cursors — stale lines past the resumed
+    checkpoint (including a torn tail write) are rewound, never
+    duplicated."""
+    import json
+    ck = str(tmp_path / "sweep.msgpack")
+    jl = str(tmp_path / "sweep.jsonl")
+    r = runner_lib.SweepRunner(engine, ck, jsonl_path=jl)
+    assert r.run(max_chunks=1) is None
+    # Simulate a crash that streamed past the checkpoint: one stale
+    # whole line and one torn partial line.
+    with open(jl, "a") as f:
+        f.write(json.dumps({"cursor": 2, "point": 0, "stale": True})
+                + "\n")
+        f.write('{"cursor": 3, "torn')
+    r.run()
+    lines = [json.loads(ln) for ln in open(jl)]
+    total = len(engine.spec.schedule())
+    assert [ln["cursor"] for ln in lines] == list(range(1, total + 1))
+    assert not any(ln.get("stale") for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive per-point scenario counts (SweepSpec.ci_target)
+# ---------------------------------------------------------------------------
+
+def test_ci_target_skips_converged_chunks(world, tmp_path):
+    """A generous CI target stops every point after its first chunk —
+    in the engine's run_point loop and in the runner (which streams the
+    skip) alike; ci_target=0 keeps the fixed schedule."""
+    import json
+    data, params, loss, ev = world
+    spec = _spec(ci_target=10.0)
+    eng = engine_lib.SweepEngine(spec, data=data, loss_fn=loss,
+                                 eval_fn=ev, init_params=params,
+                                 target_accuracy=0.3)
+    agg = eng.run_point(eng.points[0])
+    assert float(jax.device_get(
+        agg["scalar"]["final_accuracy"].count)) == spec.chunk_scenarios
+    jl = str(tmp_path / "ci.jsonl")
+    out = runner_lib.SweepRunner(eng, None, jsonl_path=jl).run()
+    assert float(out[0][1]["scalar.final_accuracy"]["count"]) == \
+        spec.chunk_scenarios
+    flags = [json.loads(ln)["skipped"] for ln in open(jl)]
+    assert flags == [False, True]
+
+
+def test_ci_halfwidth_from_welford_carry():
+    """The half-width helper matches the closed form on a known batch
+    and is inf below two scenarios."""
+    batch = jnp.asarray([0.1, 0.4, 0.7, 0.9])
+    agg = engine_lib.aggregate_init(2)
+    agg["scalar"]["final_accuracy"] = engine_lib.welford_fold(
+        agg["scalar"]["final_accuracy"], batch)
+    n = 4.0
+    want = 1.96 * np.std(np.asarray(batch), ddof=1) / np.sqrt(n)
+    assert engine_lib.final_accuracy_ci_halfwidth(agg) == \
+        pytest.approx(want, rel=1e-5)
+    fresh = engine_lib.aggregate_init(2)
+    assert engine_lib.final_accuracy_ci_halfwidth(fresh) == float("inf")
+    assert not engine_lib.point_converged(fresh, 10.0)
+    assert not engine_lib.point_converged(agg, 0.0)   # disabled
+
+
+def test_ci_target_joins_fingerprint():
+    assert _spec().fingerprint() != \
+        _spec(ci_target=0.02).fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# Compression axis (comp target) through the grid
+# ---------------------------------------------------------------------------
+
+def test_grid_comp_axis_patches_compression_config():
+    from repro.core import compression
+    fl = federated.FLConfig(
+        num_rounds=3, batch_size=50, learning_rate=0.1,
+        compression=compression.CompressionConfig(codec="none"))
+    spec = _spec(fl=fl,
+                 axes=(grid_lib.Axis("comp", "codec",
+                                     ("none", "quant", "topk")),
+                       grid_lib.Axis("comp", "bit_width", (4, 8))))
+    points = spec.expand()
+    assert len(points) == 6
+    assert points[-1].fl.compression.codec == "topk"
+    assert points[-1].fl.compression.bit_width == 8
+    assert points[0].fl.compression.codec == "none"
+    # Base config untouched.
+    assert spec.fl.compression.bit_width == 8
+
+
+def test_grid_comp_axis_requires_compression_config():
+    spec = _spec(axes=(grid_lib.Axis("comp", "codec", ("quant",)),))
+    with pytest.raises(ValueError, match="comp"):
+        spec.expand()
+
+
+def test_codec_axis_grid_through_engine(world):
+    """An accuracy-vs-energy codec grid runs through the sharded
+    engine: the quant point's folded energy is well below the none
+    point's on identical (common-random-number) scenarios."""
+    from repro.core import compression
+    data, params, loss, ev = world
+    fl = federated.FLConfig(
+        num_rounds=2, batch_size=50, learning_rate=0.1,
+        compression=compression.CompressionConfig(codec="none"))
+    spec = _spec(fl=fl, scenarios_per_point=2, chunk_scenarios=0,
+                 axes=(grid_lib.Axis("comp", "codec",
+                                     ("none", "quant")),))
+    eng = engine_lib.SweepEngine(spec, data=data, loss_fn=loss,
+                                 eval_fn=ev, init_params=params,
+                                 target_accuracy=0.3)
+    out = [(p, engine_lib.aggregate_summary(eng.run_point(p)))
+           for p in eng.points]
+    by_name = {p.name: s for p, s in out}
+    e_none = float(by_name["codec=none"]["scalar.energy_total"]["mean"])
+    e_quant = float(
+        by_name["codec=quant"]["scalar.energy_total"]["mean"])
+    assert e_quant < 0.5 * e_none
+
+
+def test_ci_skips_do_not_burn_max_chunks_budget(world, tmp_path):
+    """Skipped (converged) chunks are free: a resumed run whose
+    remaining chunks all skip completes in one call instead of
+    returning None with the budget spent on no-ops."""
+    data, params, loss, ev = world
+    spec = _spec(ci_target=10.0)
+    eng = engine_lib.SweepEngine(spec, data=data, loss_fn=loss,
+                                 eval_fn=ev, init_params=params,
+                                 target_accuracy=0.3)
+    ck = str(tmp_path / "ci_budget.msgpack")
+    r = runner_lib.SweepRunner(eng, ck)
+    assert r.run(max_chunks=1) is None      # chunk 1: real compute
+    out = r.run(max_chunks=1)               # chunk 2 skips -> finishes
+    assert out is not None
+    assert float(out[0][1]["scalar.final_accuracy"]["count"]) == \
+        spec.chunk_scenarios
