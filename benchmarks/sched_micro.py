@@ -24,12 +24,20 @@ residual-accumulate -> quantize/top-k -> dequantize pass over the
 ``compress_update`` kernel, single scenario and the batched
 ``(S, K, P)`` lane.
 
+The ``faults/*`` rows measure what the unreliable-edge subsystem
+(DESIGN.md §10) adds to a full scan-driver round: an outage-heavy
+profile (Bernoulli drops + bounded retries + reliability-EMA
+scheduling) and a straggler-heavy profile (heavy-tailed compute
+multipliers + dropouts), each a miniature FEEL run reported as
+ms/round.
+
 The ``sweep/*`` rows cover the Monte-Carlo sweep engine (DESIGN.md §8):
 the jitted Welford chunk-fold (the O(R) aggregation every chunk pays)
 and one engine chunk execution on a miniature FEEL world, shard_map'd
-over the present devices vs the plain vmap program — plus a
-``chunk_compressed`` row running the same chunk with a ``quant`` codec
-grid point (the CI compressed-sweep smoke).  Under
+over the present devices vs the plain vmap program — plus
+``chunk_compressed`` / ``chunk_faulty`` rows running the same chunk
+with a ``quant`` codec grid point and a fault-injected grid point (the
+CI compressed/faulty sweep smokes).  Under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI sweep
 smoke) the sharded rows exercise the real multi-device partitioning.
 """
@@ -159,6 +167,61 @@ def bench_compress(path: str, k: int, p: int = 4096, s: int = 1,
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def bench_faults(profile: str, k: int = 16, rounds: int = 4,
+                 iters: int = 3) -> float:
+    """ms per round of the full scan driver under a fault profile.
+
+    ``outage`` = Bernoulli drops + bounded retries + reliability-EMA
+    discounting (the retransmission machinery on the hot path);
+    ``straggler`` = heavy-tailed compute multipliers + mid-round
+    dropouts.  Measures the steady-state per-round cost the fault
+    subsystem adds to the one-jit simulation (DESIGN.md §10).
+    """
+    import functools as _ft
+
+    from repro.core import faults as faults_lib
+    from repro.core import federated
+    from repro.data import partition, synthetic
+    from repro.models import paper_nets
+
+    imgs, labs = synthetic.generate(0, samples_per_class=260)
+    data = partition.partition(
+        imgs, labs, seed=1,
+        spec=partition.PartitionSpec(num_devices=k, num_shards=50,
+                                     shard_size=50))
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=16)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    if profile == "outage":
+        flt = faults_lib.FaultConfig(drop_prob=0.3, max_retries=2,
+                                     reliability_ema=0.3, overprovision=1)
+    else:
+        flt = faults_lib.FaultConfig(straggler_prob=0.3,
+                                     straggler_scale=4.0,
+                                     dropout_prob=0.05)
+    fcfg = federated.FLConfig(num_rounds=rounds, batch_size=50,
+                              learning_rate=0.1, faults=flt)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    wcfg = wireless.WirelessConfig()
+    net = wireless.sample_network(jax.random.key(0), k, wcfg)
+    loss = _ft.partial(paper_nets.loss_fn, spec=mspec)
+    ev = _ft.partial(paper_nets.accuracy, spec=mspec)
+    sim = federated.make_feel_sim(loss_fn=loss, eval_fn=ev, wcfg=wcfg,
+                                  scfg=scfg, fcfg=fcfg,
+                                  capacity=data.capacity)
+    hists = federated.client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    args = (params, data.images, data.labels, data.mask, data.sizes,
+            hists, test_x, data.test_labels, net, jax.random.key(7))
+    out = sim(*args)
+    jax.block_until_ready(out[0])     # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = sim(*args)
+        jax.block_until_ready(out[0])
+    return (time.perf_counter() - t0) / iters / rounds * 1e3
+
+
 def _sweep_world():
     """Miniature FEEL world for the engine chunk rows (kept tiny so the
     compile inside the bench stays a few seconds)."""
@@ -250,6 +313,30 @@ def sweep_rows(quick: bool = True) -> List[Tuple[str, float, str]]:
                  f"S{cspec.scenarios_per_point}_sharded",
                  round(ms, 2),
                  f"ms_per_chunk codec=quant devices={n_dev}"))
+
+    # Faulty-sweep smoke (DESIGN.md §10): one fault-injected grid point
+    # through the sharded engine — under the CI sweep step's 4 forced
+    # host devices the per-scenario fault draws, retry pricing and the
+    # reliability-EMA carry run inside the real shard_map partitioning.
+    from repro.core import faults as faults_lib
+
+    fspec = dataclasses.replace(
+        spec, fl=dataclasses.replace(
+            spec.fl, faults=faults_lib.FaultConfig(
+                drop_prob=0.3, max_retries=2, reliability_ema=0.3)))
+    eng = sweep_engine.SweepEngine(
+        fspec, data=data, loss_fn=loss, eval_fn=ev, init_params=params)
+    point = eng.points[0]
+    agg = eng.run_point(point)                 # compile + first exec
+    jax.block_until_ready(agg["round"]["accuracy"].mean)
+    t0 = time.perf_counter()
+    agg = eng.run_point(point)
+    jax.block_until_ready(agg["round"]["accuracy"].mean)
+    ms = (time.perf_counter() - t0) * 1e3
+    rows.append((f"sweep/chunk_faulty/"
+                 f"S{fspec.scenarios_per_point}_sharded",
+                 round(ms, 2),
+                 f"ms_per_chunk drop=0.3 devices={n_dev}"))
     return rows
 
 
@@ -290,5 +377,9 @@ def run(quick: bool = True) -> List[Tuple[str, float, str]]:
         us = bench_compress(path, ks[-1], p=p_comp, s=s_batch)
         rows.append((f"compress/{path}_S{s_batch}/K{ks[-1]}",
                      round(us, 1), "us_per_batched_quant_pass"))
+    for profile in ("outage", "straggler"):
+        ms = bench_faults(profile)
+        rows.append((f"faults/{profile}/K16", round(ms, 2),
+                     "ms_per_round scan_driver"))
     rows.extend(sweep_rows(quick))
     return rows

@@ -57,15 +57,37 @@ def save(path: str, tree: Params, meta: Optional[dict] = None) -> None:
             for k, v in flat.items()
         },
     }
+    # Atomic + durable write: serialize into a sibling temp file, fsync
+    # it, then rename over the target.  A kill at any point leaves
+    # either the old complete checkpoint or the new complete one — a
+    # torn ``path`` is impossible (the sweep runner's kill/resume
+    # contract, ``tests/test_faults.py``).  A stale ``.tmp`` from a
+    # kill mid-write is harmless: the next save truncates it.
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
 
 
 def load_flat(path: str) -> tuple[Dict[str, np.ndarray], dict]:
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+        raw = f.read()
+    try:
+        payload = msgpack.unpackb(raw, raw=False)
+        if not isinstance(payload, dict) or "leaves" not in payload:
+            raise ValueError("not a checkpoint container")
+    except Exception as e:
+        # msgpack's unpack errors vary by decoder version (ExtraData,
+        # OutOfData, FormatError, bare ValueError); normalize all of
+        # them to one clear diagnosis with the path instead of a bare
+        # decoder traceback.
+        raise ValueError(
+            f"{path}: corrupt or truncated checkpoint "
+            f"({type(e).__name__}: {e}); the atomic writer never "
+            f"produces this — the file was damaged after the fact"
+        ) from e
     version = payload.get("__version__", 0)   # pre-header files: 0
     if version > FORMAT_VERSION:
         raise ValueError(

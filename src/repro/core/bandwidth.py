@@ -179,6 +179,31 @@ def invert_rate(r_req: Array, gains: Array, tx_power: Array,
 # rho -> 0 water-filling: minimize the round time T
 # ---------------------------------------------------------------------------
 
+def effective_payload_bits(payload_bits: Array | None,
+                           airtime_mult: float,
+                           cfg: wireless.WirelessConfig,
+                           like: Array) -> Array | None:
+    """Retry-priced payload for scheduling-time Sub2 solves (DESIGN.md §10).
+
+    The fault subsystem's expected retransmission multiplier
+    (``faults.expected_time_mult``) converts to *effective* uplink bits
+    here — one boundary, so every deadline function and Sub2 solver
+    prices the retry tax identically (time and energy are both linear in
+    the payload at fixed alpha, Eq. 9/10).  ``airtime_mult == 1.0``
+    returns the input untouched (bitwise-identity guarantee for inert
+    fault configs); with no per-device payload the scalar
+    ``cfg.model_bits`` is materialized as a ``(K,)`` array shaped like
+    ``like`` — which routes ``fused_pgd`` onto its documented
+    per-device-bits jnp fallback (``core.allocator``).
+    """
+    if airtime_mult == 1.0:
+        return payload_bits
+    if payload_bits is None:
+        return jnp.full(like.shape, cfg.model_bits * airtime_mult,
+                        jnp.float32)
+    return payload_bits * jnp.float32(airtime_mult)
+
+
 def _required_rate(deadline: Array, t_train: Array,
                    cfg: wireless.WirelessConfig,
                    payload_bits: Array | None = None) -> Array:

@@ -303,16 +303,30 @@ register_codec("adaptive", Adaptive)
 
 def apply_codec(codec: Codec, updates: Array, residual: Array,
                 selected: Array, key: Array, ccfg: CompressionConfig,
-                gains: Array, index: Array) -> Tuple[Array, Array]:
+                gains: Array, index: Array,
+                success: Optional[Array] = None) -> Tuple[Array, Array]:
     """Driver entry: codec round trip + the error-feedback gate.
 
     With ``error_feedback=False`` the residual is forced back to zero
     after the round (the codec still *sees* the zero residual, so the
     lossy path is the plain biased compressor) — one switch, one code
     path, and the scan carry shape never changes.
+
+    ``success`` (fault subsystem, DESIGN.md §10) is the per-device
+    upload-landed mask: only devices that actually *delivered* consume
+    their residual backlog, and a scheduled device whose upload failed
+    folds its entire raw update back into the residual — the compressed
+    payload is lost on the air, but under error feedback the
+    information is not (``tests/test_faults.py`` proves the round trip
+    is lossless: ``r' = r + u`` bitwise for a failed device).  ``None``
+    keeps the failure-blind contract unchanged.
     """
-    c, res = codec.apply(updates, residual, selected, key, ccfg, gains,
+    transmitted = selected if success is None else selected * success
+    c, res = codec.apply(updates, residual, transmitted, key, ccfg, gains,
                          index)
+    if success is not None and ccfg.error_feedback:
+        failed = selected * (1.0 - success)
+        res = res + updates * failed[..., None]
     if not ccfg.error_feedback:
         res = jnp.zeros_like(res)
     return c, res

@@ -1,0 +1,288 @@
+"""Unreliable-edge subsystem: fault injection + retransmission (DESIGN.md §10).
+
+Every driver in this repo used to assume a perfectly reliable edge: once
+DAS admits a device, its upload always lands.  The FEEL design-issues
+survey names outages and stragglers a first-order challenge (PAPERS.md,
+arXiv 2009.00081), and intermittent availability is routine in streaming
+FEEL (arXiv 2305.01238) — so this module makes unreliability a
+first-class, traceable part of the round:
+
+* **Channel outages** — each upload attempt independently fails with
+  ``drop_prob`` (short-timescale interference), and a round whose
+  sampled fading power ``|h|^2`` falls below ``deep_fade_threshold``
+  fails *every* attempt (block fading: the deep fade outlives the
+  retransmission window).
+* **Retransmission with exponential backoff** — a failed attempt is
+  retried up to ``max_retries`` times; attempt ``j`` waits
+  ``backoff_base * 2^{j-1}`` upload-times before retrying.  Realized
+  airtime and energy flow through ``wireless.upload_time`` /
+  ``upload_energy`` via their ``airtime_mult`` argument, and the
+  *expected* airtime multiplier (:func:`expected_time_mult`, closed form
+  over the attempt distribution) inflates the payload bits the
+  scheduler prices, so Sub2's deadline accounts for retries before they
+  happen.
+* **Heavy-tailed compute stragglers** — with ``straggler_prob`` a
+  device's computation time is multiplied by ``straggler_scale *
+  Pareto(straggler_tail)`` (tail index 2 keeps the mean finite but the
+  variance borderline — the classic straggler tail).
+* **Mid-round dropouts** — with ``dropout_prob`` the device dies before
+  its upload starts: zero attempts, zero uplink energy, but its (possibly
+  straggling) compute time still holds the synchronous round open.
+
+All draws are keyed by a per-round fault key split from the scan carry's
+PRNG stream, so faults are bit-for-bit reproducible across the scan
+driver, the vmapped batch driver, and the legacy loop — the parity
+contracts of DESIGN.md §3 extend to faulty runs unchanged.  A per-device
+empirical-reliability EMA (:func:`reliability_update`) rides the scan
+carry and feeds the scheduler's ``reliability_discount`` hook, making
+selection failure-aware without any host round trip.
+
+``FLConfig.faults = None`` (the default) is bitwise identical to the
+pre-fault behavior: no extra key split, no carry extras, no changed op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wireless
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static fault-process knobs (hashable; rides on ``FLConfig.faults``).
+
+    The all-defaults instance is *inert*: every probability is 0 and no
+    retries are allowed, so enabling it changes payload pricing and the
+    realized accounting by exactly nothing (``tests/test_faults.py``
+    asserts bitwise equality against ``faults=None``).
+    """
+
+    drop_prob: float = 0.0          # per-attempt Bernoulli upload failure
+    deep_fade_threshold: float = 0.0  # |h|^2 floor; below it = block fade
+    max_retries: int = 0            # retransmissions after the first try
+    backoff_base: float = 0.5       # backoff before attempt j: base*2^(j-1)
+    straggler_prob: float = 0.0     # P(device straggles this round)
+    straggler_scale: float = 4.0    # compute-time multiplier floor
+    straggler_tail: float = 2.0     # Pareto tail index of the multiplier
+    dropout_prob: float = 0.0       # P(device dies before uploading)
+    reliability_ema: float = 0.0    # EMA rate beta; 0 freezes rel at 1
+    overprovision: int = 0          # extra devices Sub1 admits (n_min +=)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FaultDraw:
+    """One round's realized fault process over the K device axis.
+
+    ``success`` and ``attempts`` describe the *upload*: a device with
+    ``attempts == 0`` dropped out mid-round; one with ``attempts > 0``
+    and ``success == 0`` burned its whole retry budget.  All float32 so
+    the draw vmaps over scenario lanes without dtype promotion.
+    """
+
+    success: Array       # (K,) {0,1} upload eventually landed
+    attempts: Array      # (K,) attempts actually transmitted (0 = dropout)
+    compute_mult: Array  # (K,) >= 1 computation-time multiplier
+
+    def tree_flatten(self):
+        return ((self.success, self.attempts, self.compute_mult), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def attempt_budget(cfg: FaultConfig) -> int:
+    """Total transmission attempts a device may spend: 1 + retries."""
+    return 1 + max(int(cfg.max_retries), 0)
+
+
+def is_inert(cfg: FaultConfig) -> bool:
+    """True when the config can never produce an observable fault.
+
+    All fault probabilities zero, no deep-fade floor, no
+    overprovisioning bump, and a frozen reliability EMA: such a config
+    is *semantically* ``faults=None`` (retry budgets and backoff bases
+    are irrelevant when nothing ever fails).  ``reliability_ema > 0``
+    is deliberately non-inert — even with every upload succeeding,
+    ``(1-beta) + beta`` need not round to exactly 1.0 in float32, so a
+    live EMA could drift the scheduler's discount off the no-fault
+    trajectory.
+    """
+    return (cfg.drop_prob <= 0.0 and cfg.deep_fade_threshold <= 0.0
+            and cfg.straggler_prob <= 0.0 and cfg.dropout_prob <= 0.0
+            and cfg.overprovision <= 0 and cfg.reliability_ema <= 0.0)
+
+
+def active(cfg: Optional[FaultConfig]) -> Optional[FaultConfig]:
+    """Normalize an inert config to ``None`` (the no-fault fast path).
+
+    Every driver dispatches through this, so an all-zero
+    :class:`FaultConfig` compiles the *same program* as ``faults=None``
+    — the strongest possible form of the disabled-means-identical
+    guarantee (bitwise, because it is the identical computation).
+    """
+    if cfg is None or is_inert(cfg):
+        return None
+    return cfg
+
+
+def sample_faults(key: Array, gains: Array, net: wireless.NetworkState,
+                  cfg: FaultConfig) -> FaultDraw:
+    """Draw one round's fault realization (pure, traceable, vmap-safe).
+
+    The deep fade is deterministic *within* the round — block fading
+    means a faded channel stays faded for all ``attempt_budget``
+    attempts — while the Bernoulli drops are independent per attempt
+    (short interference bursts).  The fading power is recovered from the
+    sampled gains as ``|h|^2 = gains / pathloss``, so the fade test sees
+    exactly the channel the scheduler saw.
+    """
+    k_drop, k_dropout, k_strag, k_tail = jax.random.split(key, 4)
+    budget = attempt_budget(cfg)
+    u_drop = jax.random.uniform(k_drop, gains.shape + (budget,))
+    dropped = u_drop < cfg.drop_prob
+    h2 = gains / jnp.maximum(net.pathloss, 1e-30)
+    faded = h2 < cfg.deep_fade_threshold
+    attempt_ok = (~dropped) & (~faded[..., None])
+    any_ok = jnp.any(attempt_ok, axis=-1)
+    # First successful attempt (1-based); a device that never succeeds
+    # spends the whole budget before giving up.
+    first = jnp.argmax(attempt_ok, axis=-1).astype(jnp.float32) + 1.0
+    dropout = jax.random.uniform(k_dropout, gains.shape) < cfg.dropout_prob
+    success = (any_ok & (~dropout)).astype(jnp.float32)
+    attempts = jnp.where(dropout, 0.0,
+                         jnp.where(any_ok, first, float(budget)))
+    is_strag = jax.random.uniform(k_strag, gains.shape) < cfg.straggler_prob
+    u_tail = jax.random.uniform(k_tail, gains.shape,
+                                minval=1e-6, maxval=1.0)
+    pareto = u_tail ** (-1.0 / max(cfg.straggler_tail, 1e-6))
+    compute_mult = jnp.where(is_strag, cfg.straggler_scale * pareto, 1.0)
+    return FaultDraw(success=success, attempts=attempts,
+                     compute_mult=compute_mult)
+
+
+def time_mult(attempts: Array, cfg: FaultConfig) -> Array:
+    """Realized airtime multiplier of ``n`` attempts with backoff.
+
+    ``n`` attempts transmit for ``n`` upload-times and wait
+    ``backoff_base * (2^{n-1} - 1)`` upload-times in between (geometric
+    sum of the per-retry backoffs).  Zero attempts (dropout) spend zero
+    airtime.
+    """
+    n = attempts
+    waits = cfg.backoff_base * (jnp.exp2(jnp.maximum(n, 1.0) - 1.0) - 1.0)
+    return jnp.where(n > 0.0, n + waits, 0.0)
+
+
+def expected_time_mult(cfg: FaultConfig) -> float:
+    """E[airtime multiplier] over the Bernoulli attempt distribution.
+
+    Closed form in plain Python (the result is a *static* trace
+    constant): ``P(attempts=j) = q^{j-1}(1-q)`` for ``j < budget`` and
+    ``q^{budget-1}`` for the final give-up-or-succeed attempt.  Deep
+    fades and dropouts are left out on purpose — the fade depends on the
+    current gains (already priced by the channel model) and a dropout
+    spends *less* airtime, so pricing only the retry tax is the
+    conservative deadline estimate.  ``drop_prob == 0`` gives exactly
+    1.0, keeping fault-enabled-but-inert runs bitwise identical.
+    """
+    budget = attempt_budget(cfg)
+    q = min(max(float(cfg.drop_prob), 0.0), 1.0)
+    if q <= 0.0 or budget == 1:
+        return 1.0
+
+    def mult(n: int) -> float:
+        return n + cfg.backoff_base * (2.0 ** (n - 1) - 1.0)
+
+    exp = sum(q ** (j - 1) * (1.0 - q) * mult(j)
+              for j in range(1, budget))
+    exp += q ** (budget - 1) * mult(budget)
+    return float(exp)
+
+
+def apply_faults(draw: FaultDraw, selected: Array, alpha: Array,
+                 t_train: Array, gains: Array,
+                 net: wireless.NetworkState,
+                 wcfg: wireless.WirelessConfig,
+                 payload_bits: Optional[Array], cfg: FaultConfig
+                 ) -> Tuple[Array, Array, Array]:
+    """Realized post-fault round accounting -> (ok, energy, round_time).
+
+    Recomputes per-device upload time from the scheduler's bandwidth
+    allocation at the *actual* payload (the scheduler priced
+    retry-inflated bits; the air carries the real ones), then applies
+    the realized attempt counts: airtime stretches by
+    :func:`time_mult` (retries + backoff waits), energy charges
+    ``attempts`` transmissions (backoff waits are radio-idle), and the
+    synchronous round waits for every admitted device's straggling
+    compute plus its full retry window — a failed device holds the
+    round open exactly as long as its last futile attempt.
+    """
+    ok = selected * draw.success
+    t_up = wireless.upload_time(alpha, gains, net.tx_power, wcfg,
+                                payload_bits,
+                                airtime_mult=time_mult(draw.attempts, cfg))
+    t_up = jnp.where((selected > 0.0) & jnp.isfinite(t_up), t_up, 0.0)
+    energy = wireless.upload_energy(alpha, gains, net.tx_power, wcfg,
+                                    payload_bits,
+                                    airtime_mult=draw.attempts)
+    energy = jnp.where((selected > 0.0) & jnp.isfinite(energy),
+                       energy, 0.0)
+    t_total = jnp.where(selected > 0.0,
+                        t_train * draw.compute_mult + t_up, 0.0)
+    return ok, energy, jnp.max(t_total)
+
+
+@functools.partial(jax.jit, static_argnames=("wcfg", "cfg"))
+def fault_step(key: Array, selected: Array, alpha: Array, t_train: Array,
+               gains: Array, net: wireless.NetworkState,
+               wcfg: wireless.WirelessConfig,
+               payload_bits: Optional[Array], cfg: FaultConfig
+               ) -> Tuple[FaultDraw, Array, Array, Array]:
+    """Jitted draw + realized accounting -> (draw, ok, energy, round_time).
+
+    The legacy per-round loop must run the fault arithmetic under jit —
+    not eagerly, op by op — because XLA's fusion (FMA contraction on
+    CPU) rounds differently from the unfused op-at-a-time schedule, and
+    the scan driver compiles the same expressions fused.  One shared
+    jitted step keeps the scan == loop parity contract bitwise
+    (``tests/test_faults.py``).
+    """
+    draw = sample_faults(key, gains, net, cfg)
+    ok, energy, round_time = apply_faults(draw, selected, alpha, t_train,
+                                          gains, net, wcfg, payload_bits,
+                                          cfg)
+    return draw, ok, energy, round_time
+
+
+def reliability_update(rel: Array, selected: Array, ok: Array,
+                       cfg: FaultConfig) -> Array:
+    """Per-device empirical-reliability EMA (scan-carry resident).
+
+    Only scheduled devices produce an observation (the server cannot
+    see whether an unscheduled upload would have failed):
+    ``rel' = (1-beta) rel + beta * success`` on the selected set,
+    unchanged elsewhere.  ``beta == 0`` freezes the carry at its init
+    (1.0), making the reliability signal inert.
+    """
+    beta = cfg.reliability_ema
+    if beta <= 0.0:
+        return rel
+    obs = (ok > 0.0).astype(jnp.float32)
+    return jnp.where(selected > 0.0,
+                     (1.0 - beta) * rel + beta * obs, rel)
+
+
+__all__ = ["FaultConfig", "FaultDraw", "active", "attempt_budget",
+           "fault_step", "is_inert", "sample_faults", "time_mult",
+           "expected_time_mult", "apply_faults", "reliability_update"]

@@ -65,8 +65,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compression, diversity, scheduler, streaming, \
-    wireless
+from repro.core import bandwidth, compression, diversity, faults, \
+    scheduler, streaming, wireless
 from repro.data import partition as partition_lib
 from repro.data import synthetic
 
@@ -96,6 +96,14 @@ class FLConfig:
     # and the error-feedback residual joins the scan carry.  None =
     # full-precision uploads, bit-for-bit the pre-compression behavior.
     compression: Optional[compression.CompressionConfig] = None
+    # Unreliable-edge subsystem (DESIGN.md §10): when set, per-round
+    # fault processes (outages, deep fades, stragglers, dropouts) are
+    # drawn inside the scan, uploads retry with exponential backoff,
+    # FedAvg aggregates over the success mask only, and the scheduler
+    # discounts priorities by a per-device reliability EMA carried in
+    # the scan state.  None = perfectly reliable edge, bit-for-bit the
+    # pre-fault behavior.
+    faults: Optional[faults.FaultConfig] = None
 
 
 @dataclasses.dataclass
@@ -107,6 +115,10 @@ class RoundRecord:
     energy_total: float
     energy_per_device: float
     selected: np.ndarray
+    # Devices whose upload actually landed; equals n_selected on a
+    # reliable edge (faults=None).  Defaulted so pre-fault positional
+    # constructors keep working.
+    n_success: int = -1
 
 
 @jax.tree_util.register_pytree_node_class
@@ -127,11 +139,13 @@ class RoundMetrics:
     energy_total: Array  # (R,)
     selected: Array      # (R, K) {0,1}
     iterations: Array    # (R,) int32 DAS outer iterations
+    n_success: Array     # (R,) int32 uploads that landed (= n_selected
+                         # on a reliable edge)
 
     def tree_flatten(self):
         return ((self.accuracy, self.n_selected, self.round_time,
                  self.energy, self.energy_total, self.selected,
-                 self.iterations), None)
+                 self.iterations, self.n_success), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -254,11 +268,90 @@ def _masked_local_train(trainer: Callable, max_steps: int, cfg: FLConfig,
 def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
                  params: Params, images: Array, labels: Array, mask: Array,
                  sizes: Array, selected: Array, key: Array) -> Params:
-    """Masked local training for all K clients + FedAvg. Pure, traceable."""
+    """Masked local training for all K clients + FedAvg. Pure, traceable.
+
+    An empty admitted set (possible when ``n_min == 0`` and every device
+    misses the deadline) must carry the previous model forward — the
+    all-zero weights would otherwise *replace* the global model with
+    zeros.  The guard is a scalar select, so any non-empty round keeps
+    the aggregated value bitwise unchanged.
+    """
     client_params, w = _masked_local_train(trainer, max_steps, cfg, params,
                                            images, labels, mask, sizes,
                                            selected, key)
-    return fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
+    agg = fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
+    any_sel = jnp.sum(selected) > 0.0
+    return jax.tree_util.tree_map(
+        lambda a, p: jnp.where(any_sel, a, p), agg, params)
+
+
+def fedavg_aggregate_masked(params: Params, client_params: Params,
+                            weights: Array, mask: Array,
+                            use_kernel: bool = False) -> Params:
+    """Failure-aware FedAvg in update form (fault subsystem, DESIGN.md §10).
+
+    ``g' = g + sum_k w_k m_k (w^k - g)`` with ``weights`` normalized by
+    the caller over the success set and ``mask`` the upload-success
+    indicator.  The update form is the graceful-degradation guarantee:
+    all-zero masked weights leave ``g`` exactly unchanged (the server
+    carries the previous model when every upload fails), with no branch.
+    The kernel path flattens the per-client deltas once and runs the
+    masked ``fedavg_agg`` Pallas lane.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        leaves, _ = jax.tree_util.tree_flatten(client_params)
+        p_leaves, p_treedef = jax.tree_util.tree_flatten(params)
+        dtypes = {leaf.dtype for leaf in p_leaves}
+        if len(dtypes) != 1:
+            raise TypeError(
+                f"kernel FedAvg path needs uniform leaf dtype, got "
+                f"{sorted(map(str, dtypes))}")
+        k = leaves[0].shape[0]
+        deltas = jnp.concatenate(
+            [(cl - p[None]).reshape(k, -1)
+             for cl, p in zip(leaves, p_leaves)], axis=1)
+        agg = kernel_ops.fedavg_agg_masked(deltas, weights, mask)
+        outs, offset = [], 0
+        for p in p_leaves:
+            size = int(np.prod(p.shape))
+            outs.append(p + agg[offset:offset + size].reshape(p.shape)
+                        .astype(p.dtype))
+            offset += size
+        return jax.tree_util.tree_unflatten(p_treedef, outs)
+    # Broadcast-multiply-reduce, NOT tensordot: a batched dot_general
+    # lowers through a different CPU matmul tiling than the single-lane
+    # one, so the vmapped batch driver would drift a few ULP off the
+    # per-scenario runs.  The explicit sum keeps one reduction order in
+    # every context (the batch == singles bitwise contract).
+    wm = weights * mask
+    return jax.tree_util.tree_map(
+        lambda p, st: p + jnp.sum(
+            wm.reshape(wm.shape + (1,) * (st.ndim - 1)) * (st - p[None]),
+            axis=0).astype(p.dtype),
+        params, client_params)
+
+
+def _train_round_faulty(trainer: Callable, max_steps: int, cfg: FLConfig,
+                        params: Params, images: Array, labels: Array,
+                        mask: Array, sizes: Array, selected: Array,
+                        ok: Array, key: Array) -> Params:
+    """Fault-aware round: train the *selected* set, aggregate the *ok* set.
+
+    Every admitted device runs its local epochs (the failure happens at
+    upload time, after the compute was spent), but only devices whose
+    upload landed contribute to FedAvg — weights are renormalized over
+    the success set, so the aggregate stays a convex combination and an
+    all-fail round degrades to carrying the previous model
+    (:func:`fedavg_aggregate_masked`).
+    """
+    client_params, _ = _masked_local_train(trainer, max_steps, cfg, params,
+                                           images, labels, mask, sizes,
+                                           selected, key)
+    w = sizes.astype(jnp.float32) * ok
+    w = w / jnp.maximum(jnp.sum(w), 1.0)
+    return fedavg_aggregate_masked(params, client_params, w, ok,
+                                   cfg.use_kernel_agg)
 
 
 def _max_local_steps(cfg: FLConfig, capacity: int) -> int:
@@ -288,7 +381,9 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
                             params: Params, images: Array, labels: Array,
                             mask: Array, sizes: Array, selected: Array,
                             key: Array, residual: Array, gains: Array,
-                            index: Array) -> Tuple[Params, Array]:
+                            index: Array,
+                            success: Optional[Array] = None
+                            ) -> Tuple[Params, Array]:
     """Masked local training + compressed-uplink FedAvg.  Pure, traceable.
 
     Local SGD is identical to :func:`_train_round`; the aggregation
@@ -301,6 +396,14 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
     error-feedback residual (only selected devices consume backlog).
     Unselected clients are frozen, so their raw update is exactly zero
     and their decoded row is multiplied by a zero weight.
+
+    ``success`` (fault subsystem, DESIGN.md §10) is the upload-landed
+    mask: FedAvg weights renormalize over the *successful* set, the
+    codec consumes backlog only for devices that delivered, and a
+    failed device's whole update folds back into its error-feedback
+    residual (``compression.apply_codec``).  The update-form aggregate
+    means an all-fail round carries the previous model unchanged.
+    ``None`` is the reliable-edge path, bitwise the pre-fault behavior.
     """
     k = images.shape[0]
     k_sgd, k_comp = jax.random.split(key)
@@ -318,9 +421,12 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
     updates = jnp.concatenate(
         [(cl - p[None]).reshape(k, -1)
          for cl, p in zip(leaves, p_leaves)], axis=1)
+    if success is not None:
+        w = sizes.astype(jnp.float32) * selected * success
+        w = w / jnp.maximum(jnp.sum(w), 1.0)
     c, residual = compression.apply_codec(
         codec, updates, residual, selected, k_comp, fcfg.compression,
-        gains, index)
+        gains, index, success=success)
     agg = jnp.tensordot(w, c, axes=1)               # (P,)
     outs, offset = [], 0
     for p in p_leaves:
@@ -329,6 +435,24 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
                     .astype(p.dtype))
         offset += size
     return jax.tree_util.tree_unflatten(p_treedef, outs), residual
+
+
+def _sched_cfg(scfg: scheduler.SchedulerConfig,
+               fcfg: FLConfig) -> scheduler.SchedulerConfig:
+    """Round-time scheduler config shared by the scan driver and the
+    legacy loop (the parity contract depends on both deriving it
+    identically).  Syncs ``local_epochs`` and — with faults enabled —
+    applies the overprovisioning bump: Sub1 admits ``overprovision``
+    extra devices so the *expected* surviving set still meets the
+    original floor (DESIGN.md §10)."""
+    sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
+    flt = faults.active(fcfg.faults)
+    if flt is not None and flt.overprovision > 0:
+        sch = dataclasses.replace(
+            sch, n_min=sch.n_min + flt.overprovision,
+            n_fixed=None if sch.n_fixed is None
+            else sch.n_fixed + flt.overprovision)
+    return sch
 
 
 def make_round_fn(loss_fn: Callable, cfg: FLConfig,
@@ -342,6 +466,10 @@ def make_round_fn(loss_fn: Callable, cfg: FLConfig,
     returned function is the compressed-uplink round
     (:func:`_train_round_compressed`): it additionally takes
     ``(residual, gains, index)`` and returns ``(params, residual)``.
+    With ``cfg.faults`` set (and no compression) it is the fault-aware
+    round (:func:`_train_round_faulty`), taking the upload-success mask
+    ``ok`` after ``selected``; the compressed round takes the mask as
+    its ``success`` keyword either way.
     """
     trainer = make_local_trainer(loss_fn, cfg)
     max_steps = _max_local_steps(cfg, capacity)
@@ -349,6 +477,9 @@ def make_round_fn(loss_fn: Callable, cfg: FLConfig,
         codec = _comp_setup(cfg)
         return jax.jit(functools.partial(_train_round_compressed, trainer,
                                          max_steps, cfg, codec))
+    if faults.active(cfg.faults) is not None:
+        return jax.jit(functools.partial(_train_round_faulty, trainer,
+                                         max_steps, cfg))
     return jax.jit(functools.partial(_train_round, trainer, max_steps, cfg))
 
 
@@ -447,7 +578,7 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
     """
     trainer = make_local_trainer(loss_fn, fcfg)
     max_steps = _max_local_steps(fcfg, capacity)
-    sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
+    sch = _sched_cfg(scfg, fcfg)
     do_eval = jnp.asarray(_eval_mask(fcfg.num_rounds, eval_every))
     stream = fcfg.stream
     if stream is not None:
@@ -455,6 +586,8 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
     comp = fcfg.compression
     if comp is not None:
         codec = _comp_setup(fcfg)
+    flt = faults.active(fcfg.faults)
+    exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
 
     def sim(params: Params, images: Array, labels: Array, mask: Array,
             sizes: Array, hists: Array, test_x: Array, test_labels: Array,
@@ -470,38 +603,80 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
 
         def body(carry, do_ev):
             params, ages, key = carry[:3]
-            extras = carry[3:]
+            pos = 3
+            if stream is not None:
+                st = carry[pos]
+                pos += 1
+            if comp is not None:
+                residual = carry[pos]
+                pos += 1
+            if flt is not None:
+                rel = carry[pos]
+            # One extra split for streaming, appended at the end; the
+            # fault stream is *folded* off the carried key instead of
+            # widening the split, because ``split(key, n)`` re-keys every
+            # output when ``n`` changes — folding keeps every other
+            # stream bitwise identical, so an inert FaultConfig (all
+            # probabilities zero) reproduces ``faults=None`` exactly
+            # (``tests/test_faults.py``).
+            n_keys = 4 + (stream is not None)
+            subkeys = jax.random.split(key, n_keys)
+            key, k_fade, k_sched, k_train = subkeys[:4]
+            if stream is not None:
+                k_arr = subkeys[4]
+            if flt is not None:
+                k_fault = jax.random.fold_in(key, 0xFA17)
             if stream is None:
-                key, k_fade, k_sched, k_train = jax.random.split(key, 4)
                 index = diversity.diversity_index(
                     label_hists=hists, data_sizes=sizes, ages=ages,
                     weights=fcfg.index_weights, measure=fcfg.measure)
                 sizes_r, stale = sizes, None
             else:
-                st = extras[0]
-                key, k_fade, k_sched, k_train, k_arr = jax.random.split(
-                    key, 5)
                 index, sizes_r, stale, hists_r, st = _stream_round(
                     process, fcfg, size_cap, measure_col, k_arr, st, ages)
             gains = wireless.sample_fading(k_fade, net)
             payload = codec.payload_bits(comp, wcfg, gains, index) \
                 if comp is not None else None
-            result = scheduler.schedule_impl(k_sched, index, ages, sizes_r,
-                                             gains, net, wcfg, sch,
-                                             staleness=stale,
-                                             payload_bits=payload)
+            # Scheduling prices retry-inflated bits (expected airtime
+            # multiplier, a static constant) so Sub2's deadline reserves
+            # the retransmission window before it happens.
+            payload_sched = bandwidth.effective_payload_bits(
+                payload, exp_mult, wcfg, gains) if flt is not None \
+                else payload
+            result = scheduler.schedule_impl(
+                k_sched, index, ages, sizes_r, gains, net, wcfg, sch,
+                staleness=stale, payload_bits=payload_sched,
+                reliability=rel if flt is not None else None)
             selected = result.selected
-            if comp is None:
-                params = _train_round(trainer, max_steps, fcfg, params,
-                                      images, labels, mask, sizes_r,
-                                      selected, k_train)
+            if flt is None:
+                ok = selected
+                energy = result.energy
+                round_time = result.round_time
             else:
-                residual = extras[-1]
+                draw = faults.sample_faults(k_fault, gains, net, flt)
+                ok, energy, round_time = faults.apply_faults(
+                    draw, selected, result.alpha, result.t_train, gains,
+                    net, wcfg, payload, flt)
+            if comp is None:
+                if flt is None:
+                    params = _train_round(trainer, max_steps, fcfg, params,
+                                          images, labels, mask, sizes_r,
+                                          selected, k_train)
+                else:
+                    params = _train_round_faulty(
+                        trainer, max_steps, fcfg, params, images, labels,
+                        mask, sizes_r, selected, ok, k_train)
+            else:
                 params, residual = _train_round_compressed(
                     trainer, max_steps, fcfg, codec, params, images,
                     labels, mask, sizes_r, selected, k_train, residual,
-                    gains, index)
-            ages = jnp.where(selected > 0.0, 0, ages + 1)
+                    gains, index,
+                    success=draw.success if flt is not None else None)
+            # Participation = delivered: ages reset and streaming
+            # backlog clears only for uploads that landed.
+            ages = jnp.where(ok > 0.0, 0, ages + 1)
+            if flt is not None:
+                rel = faults.reliability_update(rel, selected, ok, flt)
             acc = jax.lax.cond(
                 do_ev,
                 lambda p: jnp.asarray(eval_fn(p, test_x, test_labels),
@@ -511,17 +686,20 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
             met = RoundMetrics(
                 accuracy=acc,
                 n_selected=jnp.sum(selected).astype(jnp.int32),
-                round_time=result.round_time,
-                energy=result.energy,
-                energy_total=jnp.sum(result.energy),
+                round_time=round_time,
+                energy=energy,
+                energy_total=jnp.sum(energy),
                 selected=selected,
                 iterations=result.iterations,
+                n_success=jnp.sum(ok).astype(jnp.int32),
             )
             out = (params, ages, key)
             if stream is not None:
-                out += (_stream_advance(st, hists_r, stale, selected),)
+                out += (_stream_advance(st, hists_r, stale, ok),)
             if comp is not None:
                 out += (residual,)
+            if flt is not None:
+                out += (rel,)
             return out, met
 
         ages0 = jnp.zeros((k_dev,), jnp.int32)
@@ -530,6 +708,8 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
             carry0 += (state0,)
         if comp is not None:
             carry0 += (residual0,)
+        if flt is not None:
+            carry0 += (jnp.ones((k_dev,), jnp.float32),)
         out_carry, metrics = jax.lax.scan(body, carry0, do_eval)
         return out_carry[0], metrics
 
@@ -654,6 +834,7 @@ def metrics_to_records(metrics: RoundMetrics) -> List[RoundRecord]:
             energy_total=e_total,
             energy_per_device=e_total / max(n_sel, 1),
             selected=np.asarray(m.selected[r]),
+            n_success=int(m.n_success[r]),
         ))
     return history
 
@@ -800,6 +981,10 @@ def run_federated_loop(
         codec = _comp_setup(fcfg)
         residual = jnp.zeros((k_dev, flat_param_size(init_params)),
                              jnp.float32)
+    flt = faults.active(fcfg.faults)
+    exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
+    rel = jnp.ones((k_dev,), jnp.float32) if flt is not None else None
+    sch = _sched_cfg(scfg, fcfg)
 
     ages = jnp.zeros((k_dev,), jnp.int32)
     params = init_params
@@ -807,45 +992,73 @@ def run_federated_loop(
     test_x = synthetic.to_float(data.test_images)
 
     for r in range(fcfg.num_rounds):
+        # Same split counts and order as the scan body (parity contract):
+        # base 4, +1 streaming arrivals; the fault draw folds off the
+        # carried key (never widens the split — inert-config identity).
+        n_keys = 4 + (stream is not None)
+        subkeys = jax.random.split(key, n_keys)
+        key, k_fade, k_sched, k_train = subkeys[:4]
+        if flt is not None:
+            k_fault = jax.random.fold_in(key, 0xFA17)
         if stream is None:
-            key, k_fade, k_sched, k_train = jax.random.split(key, 4)
             index = diversity.diversity_index(
                 label_hists=hists, data_sizes=data.sizes, ages=ages,
                 weights=fcfg.index_weights, measure=fcfg.measure)
             sizes_r, stale = data.sizes, None
         else:
-            key, k_fade, k_sched, k_train, k_arr = jax.random.split(key, 5)
             index, sizes_r, stale, hists_r, st = _stream_round(
-                process, fcfg, size_cap, measure_col, k_arr, st, ages)
+                process, fcfg, size_cap, measure_col, subkeys[4], st, ages)
         gains = wireless.sample_fading(k_fade, net)
         payload = codec.payload_bits(comp, wcfg, gains, index) \
             if comp is not None else None
-        sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
+        payload_sched = bandwidth.effective_payload_bits(
+            payload, exp_mult, wcfg, gains) if flt is not None else payload
         result = scheduler.schedule(k_sched, index, ages, sizes_r,
-                                    gains, net, wcfg, sch, stale, payload)
+                                    gains, net, wcfg, sch, stale,
+                                    payload_sched, rel)
         selected = result.selected
-        if comp is None:
-            params = round_fn(params, data.images, data.labels, data.mask,
-                              sizes_r, selected, k_train)
+        if flt is None:
+            ok = selected
+            energy = result.energy
+            round_time = result.round_time
         else:
-            params, residual = round_fn(params, data.images, data.labels,
-                                        data.mask, sizes_r, selected,
-                                        k_train, residual, gains, index)
-        ages = jnp.where(selected > 0.0, 0, ages + 1)
+            # Jitted (not eager) on purpose: the scan driver compiles
+            # the same arithmetic fused, and CPU XLA's FMA contraction
+            # rounds differently from the op-at-a-time eager schedule.
+            draw, ok, energy, round_time = faults.fault_step(
+                k_fault, selected, result.alpha, result.t_train, gains,
+                net, wcfg, payload, flt)
+        if comp is None:
+            if flt is None:
+                params = round_fn(params, data.images, data.labels,
+                                  data.mask, sizes_r, selected, k_train)
+            else:
+                params = round_fn(params, data.images, data.labels,
+                                  data.mask, sizes_r, selected, ok,
+                                  k_train)
+        else:
+            params, residual = round_fn(
+                params, data.images, data.labels, data.mask, sizes_r,
+                selected, k_train, residual, gains, index,
+                success=draw.success if flt is not None else None)
+        ages = jnp.where(ok > 0.0, 0, ages + 1)
+        if flt is not None:
+            rel = faults.reliability_update(rel, selected, ok, flt)
         if stream is not None:
-            st = _stream_advance(st, hists_r, stale, selected)
+            st = _stream_advance(st, hists_r, stale, ok)
 
         if (r % eval_every) == 0 or r == fcfg.num_rounds - 1:
             acc = float(eval_fn(params, test_x, data.test_labels))
         else:
             acc = float("nan")
         n_sel = int(jnp.sum(selected))
-        e_total = float(jnp.sum(result.energy))
+        e_total = float(jnp.sum(energy))
         history.append(RoundRecord(
             round=r, accuracy=acc, n_selected=n_sel,
-            round_time=float(result.round_time),
+            round_time=float(round_time),
             energy_total=e_total,
             energy_per_device=e_total / max(n_sel, 1),
             selected=np.asarray(selected),
+            n_success=int(jnp.sum(ok)),
         ))
     return params, history

@@ -69,6 +69,13 @@ class SchedulerConfig:
     # core.streaming).  0 disables the hook — bit-identical to pre-
     # streaming behavior whether or not staleness is passed.
     staleness_weight: float = 0.0
+    # Unreliable-edge hook (DESIGN.md §10): weight gamma_r of the
+    # empirical-reliability discount applied to DAS's index and ABS's
+    # age priority when the driver supplies the per-device reliability
+    # EMA (``core.faults.reliability_update``).  0 disables the hook —
+    # bit-identical to failure-blind ranking whether or not a
+    # reliability signal is passed.
+    reliability_weight: float = 0.0
     # Alg. 2 under-specifies how Sub1 prices a currently-unselected
     # device's energy.  "strict" uses the current allocation (alpha ~ 0 ->
     # infinite energy -> monotone shrinking selection, the literal
@@ -116,6 +123,27 @@ def staleness_boost(priority: Array, staleness: Optional[Array],
         return priority
     boost = diversity.normalize_metric(jnp.log1p(staleness))
     return priority + sch.staleness_weight * boost
+
+
+def reliability_discount(priority: Array, reliability: Optional[Array],
+                         sch: SchedulerConfig) -> Array:
+    """Failure-aware re-ranking hook (fault subsystem, DESIGN.md §10).
+
+    Scales a selection priority by ``(1 - gamma_r) + gamma_r * rel_k``
+    with ``rel_k`` the per-device empirical-reliability EMA in [0, 1]
+    (``core.faults``): a device that keeps failing its uploads sees its
+    priority shrink toward ``(1 - gamma_r)`` of nominal, while a
+    perfectly reliable one (``rel = 1``) is untouched at any weight.
+    Multiplicative on purpose — DAS's index and ABS's age priority are
+    both nonnegative scores, and a multiplicative discount preserves
+    their zero point (a zero-value device cannot be *promoted* by mere
+    reliability).  Identity when no signal is supplied or the weight is
+    0, keeping failure-blind runs bitwise unchanged.
+    """
+    if reliability is None or sch.reliability_weight == 0.0:
+        return priority
+    w = sch.reliability_weight
+    return priority * ((1.0 - w) + w * reliability)
 
 
 def _finalize(selected: Array, alpha: Array, t_train: Array, gains: Array,
@@ -249,7 +277,8 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
                  deadline: Optional[float] = None,
                  alloc: Optional[alloc_lib.Allocator] = None,
                  staleness: Optional[Array] = None,
-                 payload_bits: Optional[Array] = None) -> ScheduleResult:
+                 payload_bits: Optional[Array] = None,
+                 reliability: Optional[Array] = None) -> ScheduleResult:
     """Age-based scheduling (paper §VI baselines, Yang et al. f(k)).
 
     Priority is ``log(1 + age)`` with a small random tiebreak (all-zero
@@ -265,6 +294,7 @@ def abs_schedule(ages: Array, data_sizes: Array, gains: Array,
     t_train = wireless.train_time(data_sizes, net, cfg, sch.local_epochs)
     priority = jnp.log1p(ages.astype(jnp.float32))
     priority = staleness_boost(priority, staleness, sch)
+    priority = reliability_discount(priority, reliability, sch)
     if key is not None:
         priority = priority + 1e-4 * jax.random.uniform(key, priority.shape)
     if sch.n_fixed is not None:
@@ -353,7 +383,8 @@ def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
                   cfg: wireless.WirelessConfig,
                   sch: SchedulerConfig,
                   staleness: Optional[Array] = None,
-                  payload_bits: Optional[Array] = None) -> ScheduleResult:
+                  payload_bits: Optional[Array] = None,
+                  reliability: Optional[Array] = None) -> ScheduleResult:
     """Un-jitted :func:`schedule` body.
 
     Call this from code that is already inside a trace — the
@@ -368,11 +399,16 @@ def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
     subsystem, DESIGN.md §9) is the per-device ``(K,)`` codec payload —
     every policy's time/energy terms, Sub2 solves and the realized
     :class:`ScheduleResult` accounting price those bits instead of the
-    scalar ``cfg.model_bits``.
+    scalar ``cfg.model_bits``.  ``reliability`` (fault subsystem,
+    DESIGN.md §10) is the per-device empirical-reliability EMA —
+    :func:`reliability_discount` shrinks the priority of devices whose
+    uploads keep failing; random/full ignore it like they ignore
+    staleness (failure-blind baselines).
     """
     alloc = alloc_lib.get(sch.allocator, sch.sub2)
     if sch.method == "das":
         index = staleness_boost(index, staleness, sch)
+        index = reliability_discount(index, reliability, sch)
         if sch.n_fixed is not None:
             return topn_schedule(index, sch.n_fixed, data_sizes, gains, net,
                                  cfg, sch, alloc, payload_bits)
@@ -381,7 +417,8 @@ def schedule_impl(key: Array, index: Array, ages: Array, data_sizes: Array,
     if sch.method == "abs":
         return abs_schedule(ages, data_sizes, gains, net, cfg, sch, key,
                             alloc=alloc, staleness=staleness,
-                            payload_bits=payload_bits)
+                            payload_bits=payload_bits,
+                            reliability=reliability)
     if sch.method == "random":
         return random_schedule(key, data_sizes, gains, net, cfg, sch, alloc,
                                payload_bits)
@@ -397,7 +434,8 @@ def schedule(key: Array, index: Array, ages: Array, data_sizes: Array,
              cfg: wireless.WirelessConfig,
              sch: SchedulerConfig,
              staleness: Optional[Array] = None,
-             payload_bits: Optional[Array] = None) -> ScheduleResult:
+             payload_bits: Optional[Array] = None,
+             reliability: Optional[Array] = None) -> ScheduleResult:
     """Dispatch on ``sch.method``; one jit for the whole round's decision."""
     return schedule_impl(key, index, ages, data_sizes, gains, net, cfg, sch,
-                         staleness, payload_bits)
+                         staleness, payload_bits, reliability)

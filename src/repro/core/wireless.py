@@ -154,25 +154,40 @@ def achievable_rate(alpha: Array, gains: Array, tx_power: Array,
 
 def upload_time(alpha: Array, gains: Array, tx_power: Array,
                 cfg: WirelessConfig,
-                model_bits: Optional[float | Array] = None) -> Array:
+                model_bits: Optional[float | Array] = None,
+                airtime_mult: Optional[Array] = None) -> Array:
     """t_up_k = s_k / r_k (Eq. 9).  Infinite when alpha_k == 0.
 
     ``model_bits`` overrides the config's scalar payload; a ``(K,)``
     array gives each device its own codec-dependent payload (the
     compressed-uplink subsystem, DESIGN.md §9) — any shape
     broadcastable against the rate is accepted.
+
+    ``airtime_mult`` scales the single-shot time by a realized
+    retransmission multiplier (attempts + backoff waits, the fault
+    subsystem of DESIGN.md §10); a multiplier of 0 — a device that
+    dropped out before transmitting — yields exactly 0 airtime even
+    where the single-shot time is infinite.
     """
     s = cfg.model_bits if model_bits is None else model_bits
     rate = achievable_rate(alpha, gains, tx_power, cfg)
-    return jnp.where(rate > 0.0, s / jnp.maximum(rate, 1e-12), jnp.inf)
+    t = jnp.where(rate > 0.0, s / jnp.maximum(rate, 1e-12), jnp.inf)
+    if airtime_mult is None:
+        return t
+    return jnp.where(airtime_mult > 0.0, t * airtime_mult, 0.0)
 
 
 def upload_energy(alpha: Array, gains: Array, tx_power: Array,
                   cfg: WirelessConfig,
-                  model_bits: Optional[float | Array] = None) -> Array:
+                  model_bits: Optional[float | Array] = None,
+                  airtime_mult: Optional[Array] = None) -> Array:
     """E_k = P_k * t_up_k (Eq. 10).  ``model_bits`` may be per-device
-    ``(K,)`` like :func:`upload_time`."""
-    t = upload_time(alpha, gains, tx_power, cfg, model_bits)
+    ``(K,)`` like :func:`upload_time`.  ``airtime_mult`` charges a
+    realized *transmitting* multiplier — for retransmissions pass the
+    attempt count, not the backoff-stretched airtime (the radio idles
+    through backoff waits, Eq. 10 only bills transmission)."""
+    t = upload_time(alpha, gains, tx_power, cfg, model_bits,
+                    airtime_mult=airtime_mult)
     return tx_power * t
 
 

@@ -44,3 +44,41 @@ def fedavg_agg_kernel(updates: jax.Array, weights: jax.Array,
         out_shape=jax.ShapeDtypeStruct((p,), updates.dtype),
         interpret=interpret,
     )(updates, weights[:, None])
+
+
+def _fedavg_masked_kernel(updates_ref, weights_ref, mask_ref, out_ref):
+    u = updates_ref[...].astype(jnp.float32)          # (K, BP)
+    w = weights_ref[...].astype(jnp.float32)          # (K, 1)
+    m = mask_ref[...].astype(jnp.float32)             # (K, 1)
+    out_ref[...] = jnp.sum(u * (w * m), axis=0).astype(out_ref.dtype)
+
+
+def fedavg_agg_masked_kernel(updates: jax.Array, weights: jax.Array,
+                             mask: jax.Array,
+                             block_p: int = DEFAULT_BLOCK_P,
+                             interpret: bool = True) -> jax.Array:
+    """Failure-masked FedAvg reduction (fault subsystem, DESIGN.md §10).
+
+    ``out[p] = sum_k w[k] * m[k] * updates[k, p]`` — the unmasked
+    reduction with a success mask fused into the weight load.  The
+    kernel does NOT renormalize over the mask: callers own the weight
+    normalization, which is what makes an all-ones mask bitwise equal
+    to :func:`fedavg_agg_kernel` (``w * 1.0 == w`` exactly in f32 —
+    the property ``tests/test_faults.py`` pins).  Same grid/VMEM
+    mapping as the unmasked kernel; the extra (K, 1) mask tile is
+    noise against the (K, BLOCK_P) update tile.
+    """
+    k, p = updates.shape
+    grid = (p // block_p,)
+    return pl.pallas_call(
+        _fedavg_masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, block_p), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), updates.dtype),
+        interpret=interpret,
+    )(updates, weights[:, None], mask[:, None])

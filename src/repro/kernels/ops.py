@@ -49,6 +49,27 @@ def fedavg_agg(updates: jax.Array, weights: jax.Array,
     return out[:p] if pad else out
 
 
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedavg_agg_masked(updates: jax.Array, weights: jax.Array,
+                      mask: jax.Array,
+                      block_p: int = _agg.DEFAULT_BLOCK_P,
+                      interpret: bool | None = None) -> jax.Array:
+    """Success-masked FedAvg aggregation: (K, P) x (K,) x (K,) -> (P,).
+
+    The fault subsystem's degraded-aggregation lane (DESIGN.md §10):
+    same padding/tiling as :func:`fedavg_agg`, with the upload-success
+    mask folded into the weights inside the kernel.  No internal
+    renormalization — an all-ones mask is bitwise the unmasked kernel.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    k, p = updates.shape
+    bp = min(block_p, max(128, 1 << (p - 1).bit_length()))
+    padded, pad = _pad_to(updates, 1, bp)
+    out = _agg.fedavg_agg_masked_kernel(padded, weights, mask, block_p=bp,
+                                        interpret=interpret)
+    return out[:p] if pad else out
+
+
 # Test/observability hook: counts how many times the batched-lane vmap
 # rule below was traced.  A vmap of the single-instance `sub2_pgd` entry
 # (the batched FEEL driver) is wired straight onto the kernel's (S, K)

@@ -18,6 +18,20 @@ def fedavg_agg(updates: jax.Array, weights: jax.Array) -> jax.Array:
     return out.astype(updates.dtype)
 
 
+def fedavg_agg_masked(updates: jax.Array, weights: jax.Array,
+                      mask: jax.Array) -> jax.Array:
+    """(K, P), (K,), (K,) -> (P,): success-masked FedAvg weighted sum.
+
+    Mirrors ``fedavg_agg_masked_kernel`` exactly: the mask multiplies
+    the weights *before* the reduction and nothing renormalizes — an
+    all-ones mask reproduces :func:`fedavg_agg` bit for bit (the
+    fault-subsystem property test).
+    """
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)
+    out = jnp.einsum("kp,k->p", updates.astype(jnp.float32), w)
+    return out.astype(updates.dtype)
+
+
 def diversity(labels: jax.Array, mask: jax.Array,
               num_classes: int) -> jax.Array:
     """(K, N) labels/mask -> (K, 3) [gini, shannon, count]."""

@@ -139,7 +139,8 @@ def welford_fold(state: Welford, batch: Array,
 # Per-point aggregate: per-round Welford + per-scenario scalar Welford
 # ---------------------------------------------------------------------------
 
-ROUND_METRICS = ("accuracy", "round_time", "energy_total", "n_selected")
+ROUND_METRICS = ("accuracy", "round_time", "energy_total", "n_selected",
+                 "n_success")
 SCALAR_METRICS = ("final_accuracy", "time_total", "energy_total",
                   "energy_per_device", "mean_selected", "rounds_to_target",
                   "reached_target")
@@ -187,6 +188,7 @@ def aggregate_fold(agg: Dict[str, Dict[str, Welford]],
         "round_time": metrics.round_time,
         "energy_total": metrics.energy_total,
         "n_selected": metrics.n_selected.astype(jnp.float32),
+        "n_success": metrics.n_success.astype(jnp.float32),
     }
     scalars, masks = _scenario_scalars(metrics, target)
     return {

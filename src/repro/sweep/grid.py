@@ -38,14 +38,14 @@ from typing import Any, List, Tuple
 from repro.core import federated, scheduler, wireless
 
 # Axis targets -> which base config the field override applies to.
-TARGETS = ("fl", "sched", "wireless", "stream", "comp")
+TARGETS = ("fl", "sched", "wireless", "stream", "comp", "fault")
 
 
 @dataclasses.dataclass(frozen=True)
 class Axis:
     """One swept dimension: ``target.field`` ranging over ``values``."""
 
-    target: str            # fl | sched | wireless | stream
+    target: str            # fl | sched | wireless | stream | comp | fault
     field: str
     values: Tuple[Any, ...]
 
@@ -98,7 +98,7 @@ def _apply(fl: federated.FLConfig, sched: scheduler.SchedulerConfig,
             _check_field(fl.stream, target, field)
             fl = dataclasses.replace(
                 fl, stream=dataclasses.replace(fl.stream, **{field: value}))
-        else:  # comp
+        elif target == "comp":
             if fl.compression is None:
                 raise ValueError(
                     f"axis comp.{field}: base FLConfig.compression is "
@@ -108,6 +108,16 @@ def _apply(fl: federated.FLConfig, sched: scheduler.SchedulerConfig,
             fl = dataclasses.replace(
                 fl, compression=dataclasses.replace(fl.compression,
                                                     **{field: value}))
+        else:  # fault
+            if fl.faults is None:
+                raise ValueError(
+                    f"axis fault.{field}: base FLConfig.faults is None "
+                    f"(set a FaultConfig to sweep unreliable-edge "
+                    f"knobs)")
+            _check_field(fl.faults, target, field)
+            fl = dataclasses.replace(
+                fl, faults=dataclasses.replace(fl.faults,
+                                               **{field: value}))
     return fl, sched, wcfg
 
 

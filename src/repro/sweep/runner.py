@@ -114,6 +114,8 @@ class SweepRunner:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
                     break                     # torn tail write: drop rest
+                if not isinstance(rec, dict):
+                    break                     # valid JSON, wrong shape: ditto
                 if rec.get("cursor", 0) > cursor:
                     break
                 kept.append(line)

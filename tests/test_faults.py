@@ -1,0 +1,513 @@
+"""Unreliable-edge subsystem tests (DESIGN.md §10): fault processes,
+retry/backoff accounting, masked aggregation, failure-aware scheduling,
+driver parity under faults, and faulty-sweep kill/resume."""
+
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import msgpack_ckpt
+from repro.core import compression, faults, federated, scheduler, wireless
+from repro.data import partition, synthetic
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import paper_nets
+from repro.sweep import engine as engine_lib
+from repro.sweep import grid as grid_lib
+from repro.sweep import runner as runner_lib
+
+
+# ---------------------------------------------------------------------------
+# Fixtures: one tiny world shared module-wide (compiles dominate runtime)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world():
+    imgs, labs = synthetic.generate(0, samples_per_class=200)
+    data = partition.partition(
+        imgs, labs, seed=1,
+        spec=partition.PartitionSpec(num_devices=8, num_shards=36,
+                                     shard_size=50))
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=8)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    return data, params, loss, ev
+
+
+WCFG = wireless.WirelessConfig()
+SCFG = scheduler.SchedulerConfig(method="das", n_min=2, iterations_max=3,
+                                 reliability_weight=0.4)
+FL = federated.FLConfig(num_rounds=3, batch_size=50, learning_rate=0.1)
+# Every fault channel live at once: drops, retries, stragglers,
+# dropouts, a moving reliability EMA and an overprovisioned floor.
+FULL_FAULTS = faults.FaultConfig(
+    drop_prob=0.35, max_retries=2, backoff_base=0.5, straggler_prob=0.3,
+    straggler_scale=3.0, dropout_prob=0.1, reliability_ema=0.3,
+    overprovision=1)
+
+
+def _run_kwargs(world):
+    data, params, loss, ev = world
+    net = wireless.sample_network(jax.random.key(0), data.num_devices,
+                                  WCFG)
+    return dict(init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+                net=net, wcfg=WCFG, scfg=SCFG, key=jax.random.key(42))
+
+
+def _same_tree(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _assert_history_equal(ha, hb):
+    for a, b in zip(ha, hb):
+        assert a.accuracy == b.accuracy
+        assert a.round_time == b.round_time
+        assert a.energy_total == b.energy_total
+        assert a.n_selected == b.n_selected
+        assert a.n_success == b.n_success
+        assert np.array_equal(a.selected, b.selected)
+
+
+# ---------------------------------------------------------------------------
+# Config semantics: inert normalization, closed-form retry pricing
+# ---------------------------------------------------------------------------
+
+def test_inert_detection_and_normalization():
+    assert faults.is_inert(faults.FaultConfig())
+    # Retry/backoff/straggler-shape knobs are irrelevant with zero
+    # probabilities — still inert.
+    assert faults.is_inert(faults.FaultConfig(max_retries=5,
+                                              backoff_base=2.0,
+                                              straggler_scale=100.0))
+    for live in (dict(drop_prob=0.1), dict(deep_fade_threshold=0.5),
+                 dict(straggler_prob=0.1), dict(dropout_prob=0.1),
+                 dict(overprovision=1), dict(reliability_ema=0.2)):
+        assert not faults.is_inert(faults.FaultConfig(**live))
+    assert faults.active(None) is None
+    assert faults.active(faults.FaultConfig()) is None
+    cfg = faults.FaultConfig(drop_prob=0.1)
+    assert faults.active(cfg) is cfg
+
+
+def test_expected_time_mult_closed_form():
+    assert faults.expected_time_mult(faults.FaultConfig()) == 1.0
+    assert faults.expected_time_mult(
+        faults.FaultConfig(max_retries=4)) == 1.0     # q = 0
+    # drop=0.5, one retry, backoff 0.5: P(1)=0.5 at mult 1,
+    # P(2)=0.5 at mult 2 + 0.5*(2^1 - 1) = 2.5 -> E = 1.75.
+    cfg = faults.FaultConfig(drop_prob=0.5, max_retries=1,
+                             backoff_base=0.5)
+    assert faults.expected_time_mult(cfg) == pytest.approx(1.75)
+    # Monotone in drop probability and in the retry budget.
+    mults_q = [faults.expected_time_mult(
+        faults.FaultConfig(drop_prob=q, max_retries=2))
+        for q in (0.1, 0.3, 0.5, 0.8)]
+    assert all(a < b for a, b in zip(mults_q, mults_q[1:]))
+    mults_r = [faults.expected_time_mult(
+        faults.FaultConfig(drop_prob=0.5, max_retries=r))
+        for r in (0, 1, 2, 4)]
+    assert mults_r[0] == 1.0
+    assert all(a < b for a, b in zip(mults_r, mults_r[1:]))
+
+
+def test_time_mult_retry_geometry():
+    cfg = faults.FaultConfig(max_retries=3, backoff_base=0.5)
+    n = jnp.asarray([0.0, 1.0, 2.0, 3.0, 4.0])
+    got = np.asarray(faults.time_mult(n, cfg))
+    # n attempts + backoff_base * (2^(n-1) - 1) waits; dropout spends 0.
+    np.testing.assert_allclose(got, [0.0, 1.0, 2.5, 4.5, 7.5])
+
+
+def test_sample_faults_distribution_edges():
+    net = wireless.sample_network(jax.random.key(0), 64, WCFG)
+    gains = wireless.sample_fading(jax.random.key(1), net)
+    key = jax.random.key(2)
+    # No fault channel live: every upload lands on attempt 1.
+    d = faults.sample_faults(key, gains, net,
+                             faults.FaultConfig(max_retries=3))
+    assert np.all(np.asarray(d.success) == 1.0)
+    assert np.all(np.asarray(d.attempts) == 1.0)
+    assert np.all(np.asarray(d.compute_mult) == 1.0)
+    # Certain drop: nobody succeeds, everyone burns the whole budget.
+    d = faults.sample_faults(key, gains, net,
+                             faults.FaultConfig(drop_prob=1.0,
+                                                max_retries=2))
+    assert np.all(np.asarray(d.success) == 0.0)
+    assert np.all(np.asarray(d.attempts) == 3.0)
+    # Certain dropout: zero attempts regardless of the channel.
+    d = faults.sample_faults(key, gains, net,
+                             faults.FaultConfig(dropout_prob=1.0))
+    assert np.all(np.asarray(d.success) == 0.0)
+    assert np.all(np.asarray(d.attempts) == 0.0)
+    # Deep fade above every |h|^2: block fading kills all attempts.
+    d = faults.sample_faults(key, gains, net,
+                             faults.FaultConfig(deep_fade_threshold=1e30,
+                                                max_retries=1))
+    assert np.all(np.asarray(d.success) == 0.0)
+    # Stragglers stretch compute by at least the scale floor.
+    d = faults.sample_faults(key, gains, net,
+                             faults.FaultConfig(straggler_prob=1.0,
+                                                straggler_scale=4.0))
+    assert np.all(np.asarray(d.compute_mult) >= 4.0)
+
+
+def test_apply_faults_retry_accounting():
+    """Energy charges attempts; airtime stretches by the backoff sum; a
+    failed device still holds the round open."""
+    k = 4
+    net = wireless.sample_network(jax.random.key(0), k, WCFG)
+    gains = wireless.sample_fading(jax.random.key(1), net)
+    selected = jnp.ones((k,))
+    alpha = jnp.full((k,), 1.0 / k)
+    t_train = jnp.full((k,), 0.1)
+    cfg = faults.FaultConfig(drop_prob=0.5, max_retries=2,
+                             backoff_base=0.5)
+    base = faults.FaultDraw(success=jnp.ones((k,)),
+                            attempts=jnp.ones((k,)),
+                            compute_mult=jnp.ones((k,)))
+    _, e1, t1 = faults.apply_faults(base, selected, alpha, t_train, gains,
+                                    net, WCFG, None, cfg)
+    tripled = faults.FaultDraw(success=jnp.zeros((k,)),
+                               attempts=jnp.full((k,), 3.0),
+                               compute_mult=jnp.ones((k,)))
+    ok, e3, t3 = faults.apply_faults(tripled, selected, alpha, t_train,
+                                     gains, net, WCFG, None, cfg)
+    assert np.all(np.asarray(ok) == 0.0)
+    np.testing.assert_allclose(np.asarray(e3), 3.0 * np.asarray(e1),
+                               rtol=1e-6)
+    assert float(t3) > float(t1)        # retries hold the round open
+    dropout = faults.FaultDraw(success=jnp.zeros((k,)),
+                               attempts=jnp.zeros((k,)),
+                               compute_mult=jnp.ones((k,)))
+    _, e0, t0 = faults.apply_faults(dropout, selected, alpha, t_train,
+                                    gains, net, WCFG, None, cfg)
+    assert np.all(np.asarray(e0) == 0.0)    # dead radio spends nothing
+    np.testing.assert_allclose(float(t0), 0.1)  # compute still waits
+
+
+def test_reliability_update_and_discount():
+    rel = jnp.ones((4,), jnp.float32)
+    sel = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    ok = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    frozen = faults.reliability_update(rel, sel, ok,
+                                       faults.FaultConfig())
+    assert frozen is rel                     # beta = 0: carry untouched
+    upd = np.asarray(faults.reliability_update(
+        rel, sel, ok, faults.FaultConfig(reliability_ema=0.25)))
+    np.testing.assert_allclose(upd, [1.0, 0.75, 1.0, 1.0])
+    # Discount hook: identity with no signal or zero weight; a failing
+    # device shrinks toward (1 - w) of nominal, a reliable one is
+    # untouched at any weight.
+    pri = jnp.asarray([2.0, 2.0, 2.0, 2.0])
+    sch = scheduler.SchedulerConfig(reliability_weight=0.0)
+    assert scheduler.reliability_discount(pri, jnp.asarray(upd),
+                                          sch) is pri
+    assert scheduler.reliability_discount(pri, None, SCFG) is pri
+    got = np.asarray(scheduler.reliability_discount(
+        pri, jnp.asarray([1.0, 0.0, 0.5, 1.0]),
+        scheduler.SchedulerConfig(reliability_weight=0.5)))
+    np.testing.assert_allclose(got, [2.0, 1.0, 1.5, 2.0])
+
+
+def test_sched_cfg_overprovision_bumps_floors():
+    base = scheduler.SchedulerConfig(n_min=2, n_fixed=3)
+    fl = dataclasses.replace(
+        FL, faults=faults.FaultConfig(drop_prob=0.2, overprovision=2))
+    sch = federated._sched_cfg(base, fl)
+    assert sch.n_min == 4 and sch.n_fixed == 5
+    # No faults (or inert config): floors untouched.
+    assert federated._sched_cfg(base, FL).n_min == 2
+    assert federated._sched_cfg(base, FL).n_fixed == 3
+
+
+# ---------------------------------------------------------------------------
+# Masked FedAvg: kernel oracle + all-success and all-fail properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,p", [(1, 128), (7, 1000), (16, 4096)])
+def test_fedavg_agg_masked_kernel_matches_ref(k, p):
+    u = jax.random.normal(jax.random.key(k * 100 + p), (k, p))
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(1), (k,)))
+    m = (jax.random.uniform(jax.random.key(2), (k,)) > 0.4
+         ).astype(jnp.float32)
+    got = kernel_ops.fedavg_agg_masked(u, w, m)
+    want = kernel_ref.fedavg_agg_masked(u, w, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_agg_masked_all_success_bitwise_equals_unmasked():
+    """The masked lane with an all-ones mask IS the unmasked kernel:
+    w * 1.0 == w in f32, no renormalization inside the kernel."""
+    u = jax.random.normal(jax.random.key(5), (9, 1536))
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(6), (9,)))
+    ones = jnp.ones((9,), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(kernel_ops.fedavg_agg_masked(u, w, ones)),
+        np.asarray(kernel_ops.fedavg_agg(u, w)))
+    np.testing.assert_array_equal(
+        np.asarray(kernel_ref.fedavg_agg_masked(u, w, ones)),
+        np.asarray(kernel_ref.fedavg_agg(u, w)))
+
+
+def test_fedavg_aggregate_masked_all_fail_carries_params(world):
+    """Update form: all-zero masked weights leave the global model
+    bitwise unchanged — the no-branch graceful-degradation guarantee."""
+    _, params, _, _ = world
+    k = 5
+    client = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (k,) + p.shape) + 1.0, params)
+    w = jnp.full((k,), 0.2)
+    out = federated.fedavg_aggregate_masked(params, client, w,
+                                            jnp.zeros((k,)))
+    assert _same_tree(out, params)
+
+
+def test_apply_codec_failed_upload_folds_back_losslessly():
+    """A scheduled-but-failed device's raw update lands in the residual
+    bit for bit (r' = r + u): the air lost the payload, error feedback
+    did not."""
+    ccfg = compression.CompressionConfig(codec="quant", bit_width=4,
+                                         error_feedback=True)
+    codec = compression.get_codec("quant")
+    k, p = 4, 64
+    u = jax.random.normal(jax.random.key(0), (k, p))
+    r = 0.3 * jax.random.normal(jax.random.key(1), (k, p))
+    gains = jnp.ones((k,))
+    index = jnp.ones((k,))
+    selected = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    success = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    c, res = compression.apply_codec(codec, u, r, selected,
+                                     jax.random.key(2), ccfg, gains,
+                                     index, success=success)
+    # Device 1 (selected, failed): entire update folded back.
+    np.testing.assert_array_equal(np.asarray(res[1]),
+                                  np.asarray(r[1] + u[1]))
+    # Device 3 (never scheduled): residual untouched.
+    np.testing.assert_array_equal(np.asarray(res[3]), np.asarray(r[3]))
+    # Delivered devices match the failure-blind path with the success
+    # set as the transmitted set.
+    c_ref, res_ref = compression.apply_codec(
+        codec, u, r, selected * success, jax.random.key(2), ccfg, gains,
+        index)
+    np.testing.assert_array_equal(np.asarray(c[0]), np.asarray(c_ref[0]))
+    np.testing.assert_array_equal(np.asarray(res[0]),
+                                  np.asarray(res_ref[0]))
+    # error_feedback=False: the fold-back is gated off with the rest of
+    # the residual machinery.
+    _, res_off = compression.apply_codec(
+        codec, u, r, selected, jax.random.key(2),
+        dataclasses.replace(ccfg, error_feedback=False), gains, index,
+        success=success)
+    assert np.all(np.asarray(res_off) == 0.0)
+
+
+def test_empty_selection_carries_model(world):
+    """Satellite fix: an empty admitted set returns the carried model
+    (0 participants), not a 0/0 aggregate."""
+    data, params, loss, _ = world
+    round_fn = federated.make_round_fn(loss, FL, data.capacity)
+    none_sel = jnp.zeros((data.num_devices,))
+    out = round_fn(params, data.images, data.labels, data.mask,
+                   data.sizes, none_sel, jax.random.key(0))
+    assert _same_tree(out, params)
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(out)]
+    assert all(np.isfinite(l).all() for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Driver parity under faults (the DESIGN.md §3 contracts extended)
+# ---------------------------------------------------------------------------
+
+def test_inert_fault_config_bitwise_identical_to_none(world):
+    kw = _run_kwargs(world)
+    p0, h0 = federated.run_federated(fcfg=FL, **kw)
+    p1, h1 = federated.run_federated(
+        fcfg=dataclasses.replace(FL, faults=faults.FaultConfig()), **kw)
+    assert _same_tree(p0, p1)
+    _assert_history_equal(h0, h1)
+    # Reliable edge: every admitted upload lands.
+    assert all(r.n_success == r.n_selected for r in h0)
+
+
+def test_scan_matches_loop_under_faults(world):
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(FL, faults=FULL_FAULTS)
+    p_scan, h_scan = federated.run_federated(fcfg=fl, **kw)
+    p_loop, h_loop = federated.run_federated_loop(fcfg=fl, **kw)
+    assert _same_tree(p_scan, p_loop)
+    _assert_history_equal(h_scan, h_loop)
+    # The faults actually fired somewhere in the run.
+    assert any(r.n_success < r.n_selected for r in h_scan)
+
+
+def test_compressed_scan_matches_loop_under_faults(world):
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(
+        FL, faults=FULL_FAULTS,
+        compression=compression.CompressionConfig(codec="quant",
+                                                  bit_width=8))
+    p_scan, h_scan = federated.run_federated(fcfg=fl, **kw)
+    p_loop, h_loop = federated.run_federated_loop(fcfg=fl, **kw)
+    assert _same_tree(p_scan, p_loop)
+    _assert_history_equal(h_scan, h_loop)
+
+
+def test_batch_matches_singles_under_faults(world):
+    data, params, loss, ev = world
+    fl = dataclasses.replace(FL, faults=FULL_FAULTS)
+    s = 2
+    nets = wireless.sample_networks(jax.random.key(5), s,
+                                    data.num_devices, WCFG)
+    keys = federated.scenario_keys(jax.random.key(9), 0, s)
+    p_b, m_b = federated.run_federated_batch(
+        fcfg=fl, init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+        nets=nets, wcfg=WCFG, scfg=SCFG, keys=keys)
+    recs = federated.batch_metrics_to_records(m_b)
+    for i in range(s):
+        net_i = jax.tree_util.tree_map(lambda a, i=i: a[i], nets)
+        p_i, h_i = federated.run_federated(
+            fcfg=fl, init_params=params, loss_fn=loss, eval_fn=ev,
+            data=data, net=net_i, wcfg=WCFG, scfg=SCFG, key=keys[i])
+        assert _same_tree(
+            p_i, jax.tree_util.tree_map(lambda a, i=i: a[i], p_b))
+        _assert_history_equal(h_i, recs[i])
+
+
+def test_all_uploads_fail_carries_model(world):
+    data, params, loss, ev = world
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(
+        FL, faults=faults.FaultConfig(drop_prob=1.0, max_retries=1))
+    p, h = federated.run_federated(fcfg=fl, **kw)
+    assert _same_tree(p, params)            # server never moved
+    assert all(r.n_success == 0 for r in h)
+    assert all(np.isfinite(r.accuracy) for r in h)
+    assert all(r.energy_total > 0.0 for r in h)   # futile attempts billed
+
+
+def test_overprovision_admits_extra_devices(world):
+    kw = _run_kwargs(world)
+    scfg = scheduler.SchedulerConfig(method="das", n_fixed=3,
+                                     iterations_max=3)
+    kw["scfg"] = scfg
+    _, h_base = federated.run_federated(fcfg=FL, **kw)
+    fl = dataclasses.replace(
+        FL, faults=faults.FaultConfig(drop_prob=0.2, overprovision=2))
+    _, h_over = federated.run_federated(fcfg=fl, **kw)
+    assert all(r.n_selected == 3 for r in h_base)
+    assert all(r.n_selected == 5 for r in h_over)
+
+
+# ---------------------------------------------------------------------------
+# Sweep integration: fault axis, fingerprint, kill/resume durability
+# ---------------------------------------------------------------------------
+
+def _fault_spec(**kw):
+    base = dict(
+        fl=dataclasses.replace(
+            FL, faults=faults.FaultConfig(drop_prob=0.3, max_retries=1,
+                                          reliability_ema=0.3)),
+        sched=SCFG, wireless=WCFG,
+        scenarios_per_point=4, chunk_scenarios=2, base_seed=7)
+    base.update(kw)
+    return grid_lib.SweepSpec(**base)
+
+
+def test_fault_axis_expansion_and_fingerprint():
+    spec = _fault_spec(axes=(grid_lib.Axis("fault", "drop_prob",
+                                           (0.0, 0.2, 0.4)),))
+    points = spec.expand()
+    assert [p.fl.faults.drop_prob for p in points] == [0.0, 0.2, 0.4]
+    assert [p.name for p in points] == \
+        ["drop_prob=0", "drop_prob=0.2", "drop_prob=0.4"]
+    # Base configs untouched; fingerprints differ per fault setting.
+    assert spec.fl.faults.drop_prob == 0.3
+    assert spec.fingerprint() != _fault_spec().fingerprint()
+    with pytest.raises(ValueError, match="faults is None"):
+        grid_lib.SweepSpec(
+            fl=FL, axes=(grid_lib.Axis("fault", "drop_prob",
+                                       (0.1,)),)).expand()
+    with pytest.raises(ValueError, match="no field"):
+        _fault_spec(axes=(grid_lib.Axis("fault", "nope", (1,)),)).expand()
+
+
+@pytest.fixture(scope="module")
+def fault_engine(world):
+    data, params, loss, ev = world
+    return engine_lib.SweepEngine(
+        _fault_spec(), data=data, loss_fn=loss, eval_fn=ev,
+        init_params=params, target_accuracy=0.3)
+
+
+def test_faulty_sweep_kill_resume_bitwise(fault_engine, tmp_path):
+    """Kill a faulty-scenario sweep mid-run — including a simulated
+    kill *mid checkpoint write* (garbage .tmp left behind) — and resume:
+    aggregates must be bitwise identical to the uninterrupted run."""
+    ck = str(tmp_path / "faulty.msgpack")
+    r = runner_lib.SweepRunner(fault_engine, ck)
+    assert r.run(max_chunks=1) is None
+    # Simulated kill mid-write: the atomic writer's temp file holds
+    # torn garbage, the real checkpoint is intact.  Resume must ignore
+    # the temp file entirely.
+    with open(ck + ".tmp", "wb") as f:
+        f.write(b"\x93torn-garbage")
+    out = r.run()
+    assert out is not None
+    full = runner_lib.SweepRunner(
+        fault_engine, str(tmp_path / "full.msgpack")).run()
+    for (p, s), (pf, sf) in zip(out, full):
+        assert p.name == pf.name
+        for metric in s:
+            for stat in ("mean", "var", "count"):
+                assert np.array_equal(np.asarray(s[metric][stat]),
+                                      np.asarray(sf[metric][stat]),
+                                      equal_nan=True), metric
+    # Faults visibly fired: fewer successes than admissions on average.
+    ok = np.asarray(out[0][1]["round.n_success"]["mean"])
+    sel = np.asarray(out[0][1]["round.n_selected"]["mean"])
+    assert np.all(ok <= sel)
+    assert np.any(ok < sel)
+
+
+def test_truncated_checkpoint_fails_loudly(fault_engine, tmp_path):
+    """Satellite hardening: a checkpoint damaged after the fact (the
+    atomic writer cannot produce one) raises a clear ValueError instead
+    of a bare decoder traceback."""
+    ck = str(tmp_path / "trunc.msgpack")
+    r = runner_lib.SweepRunner(fault_engine, ck)
+    assert r.run(max_chunks=1) is None
+    raw = open(ck, "rb").read()
+    with open(ck, "wb") as f:
+        f.write(raw[:len(raw) // 2])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        msgpack_ckpt.load_flat(ck)
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        r.run()
+
+
+def test_jsonl_rewind_tolerates_torn_and_nondict_lines(fault_engine,
+                                                       tmp_path):
+    """Satellite hardening: the resume rewind drops a torn final line
+    AND a valid-JSON-but-not-an-object line instead of crashing."""
+    ck = str(tmp_path / "jl.msgpack")
+    jl = str(tmp_path / "jl.jsonl")
+    r = runner_lib.SweepRunner(fault_engine, ck, jsonl_path=jl)
+    assert r.run(max_chunks=1) is None
+    with open(jl, "a") as f:
+        f.write("[1, 2, 3]\n")              # valid JSON, wrong shape
+        f.write('{"cursor": 99, "tor')      # torn tail write
+    out = r.run()
+    assert out is not None
+    lines = [json.loads(ln) for ln in open(jl)]
+    assert [ln["cursor"] for ln in lines] == \
+        list(range(1, len(fault_engine.spec.schedule()) + 1))
