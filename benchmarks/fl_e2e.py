@@ -31,6 +31,25 @@ Measures, per device count K:
   DAS's admission economics and the selected set grows, so total energy
   can RISE (1.46x measured) while per-device energy falls — see
   EXPERIMENTS.md §Compression.
+* ``dispatch/*`` (at K=``batch_devices``, admitted pinned to
+  ``n_fixed=15``) — the admitted-set dense-block dispatch (DESIGN.md
+  §11): the scan driver with ``dispatch_cap=16`` (train 16 lanes,
+  scatter back) vs the masked all-K body, same realized selection.
+  The steady-state ratio is the PR's headline: training FLOPs scale
+  with the *scheduled* set instead of the population.
+* ``phase/*`` — per-phase wall clock of one round's stages (schedule /
+  local-train / aggregate / stream-refresh), each as its own warmed
+  jit, so perf work can see where the round budget goes instead of
+  guessing from end-to-end aggregates.
+
+Timing protocol (fairness): every arm reports ``*_compile_s`` (first
+call, includes tracing+XLA compile) and a warm steady/exec number
+separately, and every ``speedup``/ratio row says which of the two it is
+built from — steady ratios never fold one arm's compile into the other
+arm's denominator.  ``legacy_invocation`` is the one deliberate
+exception: it measures the legacy driver exactly as the old sweep
+harness invoked it (rebuilding the round jit every call), which *is*
+that driver's real per-scenario cost.
 
 The legacy driver is measured with the reference Sub2 allocator preset
 it shipped with; the scan/batch drivers use ``Sub2Params.fast()`` — the
@@ -156,7 +175,9 @@ def _bench_single(k: int, cfg: E2EConfig) -> Dict[str, float]:
             _ = float(res.round_time), int(jnp.sum(res.selected))
         jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
 
+    t0 = time.perf_counter()
     legacy_steady()
+    out["legacy_steady_compile_s"] = time.perf_counter() - t0
     out["legacy_steady_s"] = _median(legacy_steady, cfg.repeats)
 
     # Scan driver: compile once, reuse across invocations (net and key
@@ -172,6 +193,10 @@ def _bench_single(k: int, cfg: E2EConfig) -> Dict[str, float]:
     out["scan_first_call_s"] = time.perf_counter() - t0
     out["scan_invocation_s"] = _median(
         lambda: jax.block_until_ready(sim(*args)), cfg.repeats)
+    # Compile/steady split: first call = trace + XLA compile + one warm
+    # execution, so the compile share is the difference.
+    out["scan_compile_s"] = (out["scan_first_call_s"]
+                             - out["scan_invocation_s"])
 
     out["legacy_rounds_per_s"] = rounds / out["legacy_invocation_s"]
     out["scan_rounds_per_s"] = rounds / out["scan_invocation_s"]
@@ -205,6 +230,7 @@ def _bench_batch(cfg: E2EConfig,
     return {
         "devices": k, "rounds": rounds, "scenarios": s,
         "batch_first_call_s": first,
+        "batch_compile_s": first - exec_s,
         "batch_exec_s": exec_s,
         "scenarios_per_s": s / exec_s,
         "scenario_rounds_per_s": s * rounds / exec_s,
@@ -251,6 +277,8 @@ def _bench_sweep(cfg: E2EConfig,
             jax.block_until_ready(agg["round"]["accuracy"].mean)
 
         out[f"{mode}_exec_s"] = _median(exec_once, cfg.repeats)
+        out[f"{mode}_compile_s"] = (out[f"{mode}_first_call_s"]
+                                    - out[f"{mode}_exec_s"])
         out[f"{mode}_scenarios_per_s"] = s / out[f"{mode}_exec_s"]
     out["sharded_vs_vmap"] = out["vmap_exec_s"] / out["sharded_exec_s"]
     out["aggregate_speedup_vs_legacy"] = (
@@ -285,6 +313,8 @@ def _bench_compressed(cfg: E2EConfig) -> Dict[str, float]:
         out[f"{codec}_invocation_s"] = _median(
             lambda: jax.block_until_ready(sim(*args)[1].energy_total),
             cfg.repeats)
+        out[f"{codec}_compile_s"] = (out[f"{codec}_first_call_s"]
+                                     - out[f"{codec}_invocation_s"])
         totals[codec] = (float(jnp.sum(metrics.energy_total)),
                          float(metrics.accuracy[-1]))
     out["energy_none_j"], out["final_acc_none"] = totals["none"]
@@ -294,6 +324,191 @@ def _bench_compressed(cfg: E2EConfig) -> Dict[str, float]:
     out["invocation_overhead_vs_none"] = (
         out["quant_invocation_s"] / out["none_invocation_s"])
     return out
+
+
+def _bench_dispatch(cfg: E2EConfig, k: int = 0, n_sched: int = 15,
+                    n_cap: int = 16) -> Dict[str, float]:
+    """Masked all-K scan vs dense-block dispatch at the same selection.
+
+    The scheduler is pinned to ``n_fixed=n_sched`` admitted devices (the
+    paper's DAS regime: a small rich subset of a large population) and
+    ``dispatch_cap=n_cap >= n_sched`` so no device is capacity-dropped —
+    both arms simulate the *identical* round sequence and the ratio is
+    pure dispatch win: the vmapped trainer runs ``n_cap`` lanes instead
+    of ``K``.
+    """
+    k = k or cfg.batch_devices
+    data, net, wcfg, params, loss, ev, fcfg = _world(k, cfg)
+    rounds = fcfg.num_rounds
+    scfg = dataclasses.replace(_scfg(cfg, True), n_min=1,
+                               n_fixed=n_sched)
+    hists = federated.client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    out: Dict[str, float] = {"devices": k, "rounds": rounds,
+                             "n_scheduled": n_sched,
+                             "dispatch_cap": n_cap}
+    metrics_by_arm = {}
+    for label, fcfg_a in (("masked", fcfg),
+                          ("dispatch",
+                           dataclasses.replace(fcfg,
+                                               dispatch_cap=n_cap))):
+        sim = federated.make_feel_sim(
+            loss_fn=loss, eval_fn=ev, wcfg=wcfg, scfg=scfg, fcfg=fcfg_a,
+            capacity=data.capacity, eval_every=rounds)
+        args = (params, data.images, data.labels, data.mask, data.sizes,
+                hists, test_x, data.test_labels, net, jax.random.key(4))
+        t0 = time.perf_counter()
+        _, metrics = sim(*args)
+        jax.block_until_ready(metrics.energy_total)
+        out[f"{label}_first_call_s"] = time.perf_counter() - t0
+        out[f"{label}_steady_s"] = _median(
+            lambda: jax.block_until_ready(sim(*args)[1].energy_total),
+            cfg.repeats)
+        out[f"{label}_compile_s"] = (out[f"{label}_first_call_s"]
+                                     - out[f"{label}_steady_s"])
+        out[f"{label}_rounds_per_s"] = rounds / out[f"{label}_steady_s"]
+        metrics_by_arm[label] = metrics
+    # Same simulation on both arms (no capacity drops at cap>=n_fixed):
+    # assert it so a parity regression can't masquerade as a speedup.
+    import numpy as np
+    m_m, m_d = metrics_by_arm["masked"], metrics_by_arm["dispatch"]
+    out["parity_ok"] = float(
+        np.array_equal(np.asarray(m_m.selected), np.asarray(m_d.selected))
+        # equal_nan: non-evaluated rounds hold the NaN sentinel.
+        and np.array_equal(np.asarray(m_m.accuracy),
+                           np.asarray(m_d.accuracy), equal_nan=True))
+    out["dropped_total"] = float(jnp.sum(m_d.n_dropped))
+    out["steady_speedup"] = (out["masked_steady_s"]
+                             / out["dispatch_steady_s"])
+    out["compile_speedup"] = (out["masked_compile_s"]
+                              / max(out["dispatch_compile_s"], 1e-9))
+    return out
+
+
+def _bench_phases(cfg: E2EConfig) -> Dict[str, float]:
+    """One round's wall clock split into separately jitted+timed stages.
+
+    Each stage is warmed and timed on its own: ``schedule`` (diversity
+    index + DAS + Sub2), ``local_train`` (the vmapped masked local-SGD
+    over all K), ``local_train_dispatch`` (the same trainer over a
+    16-lane dense block, gather+scatter included), ``aggregate``
+    (FedAvg over stacked client params) and ``stream_refresh`` (the
+    fused arrival->refresh pass).  Stage sums won't exactly reproduce
+    the fused scan round (XLA fuses across stages there) — the point is
+    the *ratio* between stages, i.e. where optimization effort pays.
+    """
+    from repro.core import diversity as div_lib
+    from repro.core import streaming
+
+    k = cfg.batch_devices
+    data, net, wcfg, params, loss, ev, fcfg = _world(k, cfg)
+    scfg = dataclasses.replace(_scfg(cfg, True), n_min=1, n_fixed=15)
+    sch = dataclasses.replace(scfg, local_epochs=fcfg.local_epochs)
+    hists = federated.client_histograms(data, fcfg.num_classes)
+    ages = jnp.zeros((k,), jnp.int32)
+    gains = wireless.sample_fading(jax.random.key(1), net)
+    out: Dict[str, float] = {"devices": k}
+
+    def timed(label, fn, *args):
+        jax.block_until_ready(fn(*args))          # compile + warm
+        out[f"{label}_s"] = _median(
+            lambda: jax.block_until_ready(fn(*args)), cfg.repeats)
+
+    # Phase 1: scheduling (index + Sub1/Sub2 through the jitted entry).
+    @jax.jit
+    def phase_schedule(key, ages):
+        index = div_lib.diversity_index(
+            label_hists=hists, data_sizes=data.sizes, ages=ages,
+            weights=fcfg.index_weights, measure=fcfg.measure)
+        return scheduler.schedule_impl(key, index, ages, data.sizes,
+                                       gains, net, wcfg, sch)
+    timed("schedule", lambda: phase_schedule(jax.random.key(2), ages))
+    res = phase_schedule(jax.random.key(2), ages)
+    selected = res.selected
+
+    # Phase 2: masked local training over all K lanes vs the dense
+    # block (the tentpole's before/after, isolated from the driver).
+    trainer = federated.make_local_trainer(loss, fcfg)
+    max_steps = federated._max_local_steps(fcfg, data.capacity)
+    train = jax.jit(functools.partial(
+        federated._masked_local_train, trainer, max_steps, fcfg))
+    timed("local_train",
+          lambda: train(params, data.images, data.labels, data.mask,
+                        data.sizes, selected, jax.random.key(3))[0])
+    idx, sel_eff, _ = federated.dispatch_plan(selected, 16)
+    train_d = jax.jit(functools.partial(
+        federated._masked_local_train, trainer, max_steps, fcfg))
+    timed("local_train_dispatch",
+          lambda: train_d(params, data.images, data.labels, data.mask,
+                          data.sizes, sel_eff, jax.random.key(3),
+                          dispatch_idx=idx)[0])
+
+    # Phase 3: FedAvg aggregation over stacked client params.
+    client_params, w = train(params, data.images, data.labels, data.mask,
+                             data.sizes, selected, jax.random.key(3))
+    agg = jax.jit(functools.partial(federated.fedavg_aggregate,
+                                    use_kernel=False))
+    timed("aggregate", lambda: agg(client_params, w))
+
+    # Phase 4: streaming refresh (arrival sample + fused stats pass).
+    stream = streaming.StreamConfig(process="poisson")
+    fcfg_s = dataclasses.replace(fcfg, stream=stream)
+    process, size_cap, col = federated._stream_setup(fcfg_s,
+                                                     data.capacity)
+    st = process.init(jax.random.key(5), hists, stream)
+    refresh = jax.jit(lambda key, st, ages: federated._stream_round(
+        process, fcfg_s, size_cap, col, key, st, ages)[:3])
+    timed("stream_refresh",
+          lambda: refresh(jax.random.key(6), st, ages))
+
+    total = sum(out[f"{p}_s"] for p in
+                ("schedule", "local_train", "aggregate",
+                 "stream_refresh"))
+    for p in ("schedule", "local_train", "aggregate", "stream_refresh"):
+        out[f"{p}_frac"] = out[f"{p}_s"] / total
+    out["local_train_dispatch_speedup"] = (
+        out["local_train_s"] / out["local_train_dispatch_s"])
+    return out
+
+
+def dispatch_rows(quick: bool = True) -> List[Row]:
+    """Standalone dispatch smoke for CI (``benchmarks.run --only
+    dispatch``, run under 4 forced host devices): a small-K masked vs
+    dispatched comparison plus a batched dispatch run, so gather/scatter
+    regressions in the round body fail fast without paying the full
+    fl_e2e suite."""
+    cfg = E2EConfig(rounds=3 if quick else 8, repeats=3,
+                    batch_devices=32 if quick else 100)
+    k = cfg.batch_devices
+    d = _bench_dispatch(cfg, k=k, n_sched=max(3, k // 8),
+                        n_cap=max(4, k // 8 + 1))
+    rows: List[Row] = [
+        (f"dispatch/K{k}/steady_speedup", round(d["steady_speedup"], 2),
+         f"cap={int(d['dispatch_cap'])} vs masked all-K, "
+         f"parity_ok={int(d['parity_ok'])}"),
+        (f"dispatch/K{k}/masked_steady_s",
+         round(d["masked_steady_s"], 4), "warm scan invocation"),
+        (f"dispatch/K{k}/dispatch_steady_s",
+         round(d["dispatch_steady_s"], 4), "warm scan invocation"),
+    ]
+    # Batched dispatch under whatever host devices CI forced: the
+    # vmapped gather/scatter path must run and drop deterministically.
+    data, _, wcfg, params, loss, ev, fcfg = _world(k, cfg)
+    s = 4
+    nets = wireless.sample_networks(jax.random.key(7), s, k, wcfg)
+    keys = federated.scenario_keys(jax.random.key(4), 0, s)
+    fcfg_d = dataclasses.replace(fcfg, dispatch_cap=max(2, k // 16))
+    scfg = dataclasses.replace(_scfg(cfg, True), n_min=max(3, k // 8))
+    t0 = time.perf_counter()
+    _, metrics = federated.run_federated_batch(
+        fcfg=fcfg_d, init_params=params, loss_fn=loss, eval_fn=ev,
+        data=data, nets=nets, wcfg=wcfg, scfg=scfg, keys=keys)
+    jax.block_until_ready(metrics.n_dropped)
+    rows.append((f"dispatch/K{k}/batch_S{s}_first_call_s",
+                 round(time.perf_counter() - t0, 3),
+                 f"dropped_total={int(jnp.sum(metrics.n_dropped))} "
+                 f"devices={len(jax.devices())}"))
+    return rows
 
 
 def run(quick: bool = True) -> List[Row]:
@@ -317,19 +532,32 @@ def run(quick: bool = True) -> List[Row]:
                      "target >=5 at K=100"))
         rows.append((f"fl_e2e/K{k}/speedup_vs_legacy_steady",
                      round(r["speedup_vs_legacy_steady"], 2),
-                     "prebuilt-jit legacy floor"))
+                     "warm scan vs warm legacy floor (steady/steady)"))
+        rows.append((f"fl_e2e/K{k}/scan_compile_s",
+                     round(r["scan_compile_s"], 2),
+                     f"steady={r['scan_invocation_s']:.3f}s "
+                     f"(compile reported separately)"))
     b = _bench_batch(cfg, singles[cfg.batch_devices])
     results["batch"] = b
     rows.append((f"fl_e2e/batch_S{cfg.batch_scenarios}/scenarios_per_s",
                  round(b["scenarios_per_s"], 3),
-                 f"K={cfg.batch_devices}"))
+                 f"K={cfg.batch_devices} steady exec"))
+    rows.append((f"fl_e2e/batch_S{cfg.batch_scenarios}/compile_s",
+                 round(b["batch_compile_s"], 2),
+                 f"steady exec={b['batch_exec_s']:.3f}s"))
     rows.append((f"fl_e2e/batch_S{cfg.batch_scenarios}/aggregate_speedup",
                  round(b["aggregate_speedup_vs_legacy"], 2),
-                 "vs sequential legacy invocations; target >=20"))
+                 "steady batch vs sequential legacy invocations "
+                 "(legacy recompiles per call by design); target >=20"))
     rows.append((f"fl_e2e/batch_S{cfg.batch_scenarios}/"
                  f"aggregate_speedup_same_preset",
                  round(b["aggregate_speedup_vs_legacy_fast"], 2),
                  "vs sequential legacy_fast invocations (driver only)"))
+    rows.append((f"fl_e2e/batch_S{cfg.batch_scenarios}/"
+                 f"aggregate_speedup_vs_legacy_steady",
+                 round(b["aggregate_speedup_vs_legacy_steady"], 2),
+                 "steady vs steady: warm batch exec vs S x warm legacy "
+                 "rounds"))
     comp = _bench_compressed(cfg)
     results["compressed"] = comp
     rows.append((f"fl_e2e/compressed_K{cfg.batch_devices}/"
@@ -347,6 +575,32 @@ def run(quick: bool = True) -> List[Row]:
                  round(comp["final_acc_quant8"]
                        - comp["final_acc_none"], 4),
                  "quant8 - none at equal rounds"))
+    d = _bench_dispatch(cfg)
+    results[f"dispatch_K{cfg.batch_devices}"] = d
+    rows.append((f"fl_e2e/dispatch_K{cfg.batch_devices}/steady_speedup",
+                 round(d["steady_speedup"], 2),
+                 f"cap={int(d['dispatch_cap'])} lanes vs masked all-K at "
+                 f"admitted={int(d['n_scheduled'])}; steady/steady; "
+                 f"target >=2"))
+    rows.append((f"fl_e2e/dispatch_K{cfg.batch_devices}/"
+                 f"dispatch_rounds_per_s",
+                 round(d["dispatch_rounds_per_s"], 2),
+                 f"masked={d['masked_rounds_per_s']:.2f} rounds/s; "
+                 f"parity_ok={int(d['parity_ok'])}"))
+    rows.append((f"fl_e2e/dispatch_K{cfg.batch_devices}/compile_s",
+                 round(d["dispatch_compile_s"], 2),
+                 f"masked compile={d['masked_compile_s']:.2f}s"))
+    ph = _bench_phases(cfg)
+    results[f"phases_K{cfg.batch_devices}"] = ph
+    for p in ("schedule", "local_train", "aggregate", "stream_refresh"):
+        rows.append((f"fl_e2e/phase_K{cfg.batch_devices}/{p}_ms",
+                     round(1e3 * ph[f"{p}_s"], 3),
+                     f"{100 * ph[f'{p}_frac']:.1f}% of stage sum"))
+    rows.append((f"fl_e2e/phase_K{cfg.batch_devices}/"
+                 f"local_train_dispatch_ms",
+                 round(1e3 * ph["local_train_dispatch_s"], 3),
+                 f"{ph['local_train_dispatch_speedup']:.2f}x vs masked "
+                 f"all-K stage"))
     sw = _bench_sweep(cfg, singles[cfg.batch_devices])
     results["sweep"] = sw
     rows.append((f"fl_e2e/sweep_S{cfg.batch_scenarios}/"

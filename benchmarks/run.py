@@ -1,6 +1,7 @@
 """Benchmark orchestrator: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,...]
+                                            [--host-tuned]
 
 Prints ``name,value,derived`` CSV rows.  Default (quick) mode shrinks the
 FL scale so the whole suite runs on the CPU container; ``--full`` is the
@@ -11,17 +12,70 @@ driver), fig3 (local epochs), fig45 (model size), fig67 (energy/time vs
 baseline+ABS), divergence (selected-fraction probe), fl_e2e (legacy loop
 vs scan vs batch vs sharded-sweep simulation throughput; writes
 BENCH_fl_e2e.json), sched (scheduler latency, includes sweep/* rows),
-sweep (sweep engine rows only — the CI shard_map smoke), kernels
-(Pallas micro), roofline (requires dryrun_results.json from
+sweep (sweep engine rows only — the CI shard_map smoke), dispatch
+(dense-block dispatch smoke — the CI gather/scatter regression guard),
+kernels (Pallas micro), roofline (requires dryrun_results.json from
 repro.launch.dryrun).
+
+``--host-tuned`` re-execs the process with the host-tuning idioms the
+related training repos bake into their launchers (SNIPPETS.md §1-2):
+``LD_PRELOAD`` tcmalloc when the library is present on the box,
+``--xla_force_host_platform_device_count=<cores>`` so the sharded sweep
+rows get real host devices, and quieted TF logging.  Env applied before
+jax is imported (the re-exec happens before any suite import); a guard
+variable prevents exec loops, and existing ``XLA_FLAGS``/``LD_PRELOAD``
+settings are extended, never clobbered.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import os
 import sys
 import time
+
+_TUNED_GUARD = "REPRO_HOST_TUNED"
+
+_TCMALLOC_GLOBS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc*.so*",
+    "/usr/lib/*/libtcmalloc*.so*",
+    "/usr/lib64/libtcmalloc*.so*",
+    "/usr/local/lib/libtcmalloc*.so*",
+)
+
+
+def _host_tuned_env() -> dict:
+    """Tuned environment for the re-exec (pure; tested separately)."""
+    env = dict(os.environ)
+    env[_TUNED_GUARD] = "1"
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    cores = os.cpu_count() or 1
+    flags = env.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        flags = (f"{flags} " if flags else "") + \
+            f"--xla_force_host_platform_device_count={cores}"
+        env["XLA_FLAGS"] = flags
+    tcmalloc = sorted(p for pat in _TCMALLOC_GLOBS
+                      for p in glob.glob(pat))
+    if tcmalloc and "tcmalloc" not in env.get("LD_PRELOAD", ""):
+        preload = env.get("LD_PRELOAD", "")
+        env["LD_PRELOAD"] = (f"{preload} {tcmalloc[0]}".strip())
+        # Silence tcmalloc's large-alloc spam for the big scan buffers.
+        env.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                       "10000000000")
+    return env
+
+
+def _reexec_host_tuned() -> None:
+    env = _host_tuned_env()
+    has_tcm = "tcmalloc" in env.get("LD_PRELOAD", "")
+    print(f"# host-tuned re-exec: devices={os.cpu_count() or 1}, "
+          f"tcmalloc={'yes' if has_tcm else 'absent'}",
+          file=sys.stderr)
+    os.execve(sys.executable,
+              [sys.executable, "-m", "benchmarks.run"] + sys.argv[1:],
+              env)
 
 
 def main() -> None:
@@ -32,9 +86,15 @@ def main() -> None:
                          "CI smoke step)")
     ap.add_argument("--only", default="")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    ap.add_argument("--host-tuned", action="store_true",
+                    help="re-exec with tcmalloc LD_PRELOAD (if present) "
+                         "and one forced XLA host device per core "
+                         "before importing jax")
     args = ap.parse_args()
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
+    if args.host_tuned and os.environ.get(_TUNED_GUARD) != "1":
+        _reexec_host_tuned()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
@@ -78,6 +138,14 @@ def main() -> None:
         # sharded row exercises the real shard_map partitioning).
         from benchmarks import sched_micro
         for r in sched_micro.sweep_rows(quick):
+            _emit(r)
+
+    if want("dispatch") and not want("fl_e2e"):
+        # Standalone dispatch smoke (CI runs this under 4 forced host
+        # devices): masked vs dense-block scan + a batched dispatched
+        # run, without paying the full fl_e2e suite.
+        from benchmarks import fl_e2e
+        for r in fl_e2e.dispatch_rows(quick):
             _emit(r)
 
     if want("kernels"):

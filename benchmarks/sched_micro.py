@@ -222,6 +222,56 @@ def bench_faults(profile: str, k: int = 16, rounds: int = 4,
     return (time.perf_counter() - t0) / iters / rounds * 1e3
 
 
+def bench_dispatch(cap, k: int = 32, rounds: int = 4,
+                   iters: int = 3) -> float:
+    """ms per round of the scan driver with a dense-block dispatch cap.
+
+    ``cap=None`` is the masked all-K round body; an integer cap gathers
+    the admitted devices into that many trainer lanes (DESIGN.md §11).
+    The admitted set is pinned to ``n_fixed = k // 8`` so the two rows
+    compare identical round sequences and the ratio is pure dispatch
+    win.
+    """
+    import functools as _ft
+
+    from repro.core import federated
+    from repro.data import partition, synthetic
+    from repro.models import paper_nets
+
+    imgs, labs = synthetic.generate(0, samples_per_class=400)
+    data = partition.partition(
+        imgs, labs, seed=1,
+        spec=partition.PartitionSpec(num_devices=k, num_shards=2 * k,
+                                     shard_size=50, min_shards=1,
+                                     max_shards=1))
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=16)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    fcfg = federated.FLConfig(num_rounds=rounds, batch_size=50,
+                              learning_rate=0.1, dispatch_cap=cap)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=1,
+                                     n_fixed=max(2, k // 8),
+                                     iterations_max=3)
+    wcfg = wireless.WirelessConfig()
+    net = wireless.sample_network(jax.random.key(0), k, wcfg)
+    loss = _ft.partial(paper_nets.loss_fn, spec=mspec)
+    ev = _ft.partial(paper_nets.accuracy, spec=mspec)
+    sim = federated.make_feel_sim(loss_fn=loss, eval_fn=ev, wcfg=wcfg,
+                                  scfg=scfg, fcfg=fcfg,
+                                  capacity=data.capacity,
+                                  eval_every=rounds)
+    hists = federated.client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    args = (params, data.images, data.labels, data.mask, data.sizes,
+            hists, test_x, data.test_labels, net, jax.random.key(7))
+    out = sim(*args)
+    jax.block_until_ready(out[0])     # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = sim(*args)
+        jax.block_until_ready(out[0])
+    return (time.perf_counter() - t0) / iters / rounds * 1e3
+
+
 def _sweep_world():
     """Miniature FEEL world for the engine chunk rows (kept tiny so the
     compile inside the bench stays a few seconds)."""
@@ -381,5 +431,15 @@ def run(quick: bool = True) -> List[Tuple[str, float, str]]:
         ms = bench_faults(profile)
         rows.append((f"faults/{profile}/K16", round(ms, 2),
                      "ms_per_round scan_driver"))
+    k_disp = 32
+    ms_masked = bench_dispatch(None, k=k_disp)
+    ms_block = bench_dispatch(max(2, k_disp // 8) + 1, k=k_disp)
+    rows.append((f"dispatch/masked/K{k_disp}", round(ms_masked, 2),
+                 "ms_per_round scan_driver all-K lanes"))
+    rows.append((f"dispatch/block/K{k_disp}", round(ms_block, 2),
+                 f"ms_per_round cap={max(2, k_disp // 8) + 1} lanes"))
+    rows.append((f"dispatch/speedup/K{k_disp}",
+                 round(ms_masked / ms_block, 2),
+                 "masked / dense-block steady per-round"))
     rows.extend(sweep_rows(quick))
     return rows

@@ -31,6 +31,13 @@ feedback, the scheduler and Sub2 price the per-device post-compression
 payload bits, and the reported energy/time reflect the smaller uploads.
 ``--sweep-jsonl PATH`` streams per-chunk aggregates as JSON lines for
 live dashboards while a ``--scenarios`` sweep runs.
+
+``--dispatch-cap N`` trains only a dense N-lane block of the admitted
+devices instead of masking all K lanes (dense-block dispatch,
+DESIGN.md §11) — the steady-state win at the paper's small-admitted-set
+regime; admitted devices beyond the cap are dropped by schedule rank
+and reported per round.  ``--carry-dtype bfloat16`` stores the large
+scan-carry tensors (EF residual, stream stats) at reduced precision.
 """
 
 import argparse
@@ -82,6 +89,12 @@ def main() -> None:
                     help="mean arrivals per device per round")
     ap.add_argument("--staleness-weight", type=float, default=0.25,
                     help="gamma_s staleness boost for streaming runs")
+    ap.add_argument("--dispatch-cap", type=int, default=0,
+                    help="dense-block training lanes (0: masked all-K "
+                         "path; see DESIGN.md §11)")
+    ap.add_argument("--carry-dtype", default="",
+                    choices=["", "float32", "bfloat16", "float16"],
+                    help="storage dtype for the big scan-carry tensors")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -117,7 +130,9 @@ def main() -> None:
     fcfg = federated.FLConfig(
         num_rounds=args.rounds, local_epochs=args.epochs, batch_size=50,
         learning_rate=0.1 if args.model == "mlp" else 0.05,
-        stream=stream_cfg, compression=comp_cfg)
+        stream=stream_cfg, compression=comp_cfg,
+        dispatch_cap=args.dispatch_cap or None,
+        carry_dtype=args.carry_dtype or None)
     loss_fn = functools.partial(paper_nets.loss_fn, spec=mspec)
     eval_fn = functools.partial(paper_nets.accuracy, spec=mspec)
 
@@ -160,9 +175,10 @@ def main() -> None:
     for r in hist:
         e_tot += r.energy_total
         t_tot += r.round_time
+        drop = f" drop={r.n_dropped:2d}" if args.dispatch_cap else ""
         print(f"round {r.round:3d}: acc={r.accuracy:.4f} "
               f"sel={r.n_selected:3d} T={r.round_time:7.3f}s "
-              f"E/dev={r.energy_per_device:7.3f}J")
+              f"E/dev={r.energy_per_device:7.3f}J{drop}")
     print(f"[feel] total: time={t_tot:.1f}s energy={e_tot:.1f}J "
           f"final acc={hist[-1].accuracy:.4f}")
 

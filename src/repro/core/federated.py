@@ -104,6 +104,23 @@ class FLConfig:
     # the scan state.  None = perfectly reliable edge, bit-for-bit the
     # pre-fault behavior.
     faults: Optional[faults.FaultConfig] = None
+    # Admitted-set dense-block dispatch (DESIGN.md §11): static capacity
+    # of the training block.  When set, each round gathers the admitted
+    # devices into a fixed ``(n_cap, ...)`` block (stable argsort on the
+    # selection mask), runs the vmapped local trainer over only those
+    # lanes, and scatters the results back for FedAvg.  Admitted devices
+    # beyond the capacity are dropped deterministically by schedule rank
+    # and counted in ``RoundMetrics.n_dropped``.  None = today's
+    # masked-all-K path, bitwise unchanged.
+    dispatch_cap: Optional[int] = None
+    # Scan-carry memory diet (DESIGN.md §11): storage dtype for the
+    # ``(K, P)`` error-feedback residual and the ``(K, C)`` stream
+    # stats between rounds ("bfloat16"/"float16").  Arithmetic stays
+    # float32 — state is downcast on carry write and upcast on read, in
+    # helpers shared by both drivers so the scan==legacy parity holds at
+    # reduced precision too.  None (or "float32") = full-precision
+    # carry, bitwise unchanged.
+    carry_dtype: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -119,6 +136,9 @@ class RoundRecord:
     # reliable edge (faults=None).  Defaulted so pre-fault positional
     # constructors keep working.
     n_success: int = -1
+    # Admitted devices dropped by the dispatch capacity this round
+    # (always 0 with ``dispatch_cap=None``).  Defaulted like n_success.
+    n_dropped: int = 0
 
 
 @jax.tree_util.register_pytree_node_class
@@ -141,11 +161,13 @@ class RoundMetrics:
     iterations: Array    # (R,) int32 DAS outer iterations
     n_success: Array     # (R,) int32 uploads that landed (= n_selected
                          # on a reliable edge)
+    n_dropped: Array     # (R,) int32 admitted devices dropped by the
+                         # dispatch capacity (0 with dispatch_cap=None)
 
     def tree_flatten(self):
         return ((self.accuracy, self.n_selected, self.round_time,
                  self.energy, self.energy_total, self.selected,
-                 self.iterations, self.n_success), None)
+                 self.iterations, self.n_success, self.n_dropped), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -236,19 +258,102 @@ def fedavg_aggregate(client_params: Params, weights: Array,
 
 
 # ---------------------------------------------------------------------------
+# Admitted-set dense-block dispatch (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def dispatch_plan(selected: Array, n_cap: int
+                  ) -> Tuple[Array, Array, Array]:
+    """Gather plan for the dense training block: ``(idx, sel_eff, n_dropped)``.
+
+    ``idx`` is the ``(min(n_cap, K),)`` device indices that occupy the
+    block's lanes, ``sel_eff`` the ``(K,)`` realized selection mask after
+    capacity drops, and ``n_dropped`` the int32 count of admitted devices
+    that did not fit.
+
+    Schedule rank: ``jnp.argsort`` is stable, so ``argsort(-selected)``
+    lists the admitted devices first *in device-index order*, then the
+    rest.  The rank is a pure function of the selection mask — no
+    data-dependent shapes, no host sync, identical under ``vmap`` — which
+    is what makes overflow drops deterministic across the batch/shard_map
+    drivers (the batch == singles contract).  Admitted devices with rank
+    ``>= n_cap`` are dropped for the round.
+    """
+    k = selected.shape[0]
+    n_lanes = min(int(n_cap), k)                    # static
+    order = jnp.argsort(-selected)
+    idx = order[:n_lanes]
+    sel_eff = jnp.zeros_like(selected).at[idx].set(selected[idx])
+    n_dropped = (jnp.sum(selected) - jnp.sum(sel_eff)).astype(jnp.int32)
+    return idx, sel_eff, n_dropped
+
+
+def _dispatch_accounting(result, sel_eff: Array) -> Tuple[Array, Array]:
+    """Re-price a scheduled round on the *realized* (post-drop) set.
+
+    The scheduler already charged energy/airtime for every admitted
+    device; capacity-dropped devices never train or transmit, so their
+    energy is zeroed and the round's wall clock is the max over the
+    surviving set only.  Shared by the scan body and the (jitted) legacy
+    loop so both drivers price drops identically.
+    """
+    energy = result.energy * sel_eff
+    t_up = jnp.where(jnp.isinf(result.t_up), 0.0, result.t_up)
+    return energy, wireless.round_time(sel_eff, result.t_train, t_up)
+
+
+# Legacy-loop entries: jitted (not eager) on purpose, mirroring
+# ``faults.fault_step`` — the scan driver compiles the same arithmetic
+# fused, and op-at-a-time eager scheduling is the one way the loop could
+# drift off the scan bitwise.
+_dispatch_plan_jit = jax.jit(dispatch_plan, static_argnums=(1,))
+_dispatch_accounting_jit = jax.jit(_dispatch_accounting)
+
+
+def _carry_dtype(fcfg: FLConfig):
+    """Storage dtype for the dieted scan-carry state, or None.
+
+    ``float32`` normalizes to None (the storage dtype already is f32, so
+    emitting casts would only change the jaxpr, not the values).
+    """
+    if fcfg.carry_dtype is None:
+        return None
+    dt = jnp.dtype(fcfg.carry_dtype)
+    if dt == jnp.dtype(jnp.float32):
+        return None
+    if dt not in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        raise ValueError(
+            f"carry_dtype must be one of bfloat16/float16/float32, got "
+            f"{fcfg.carry_dtype!r}")
+    return dt
+
+
+# ---------------------------------------------------------------------------
 # One federated round (shared by the scan driver and the legacy loop)
 # ---------------------------------------------------------------------------
 
 def _masked_local_train(trainer: Callable, max_steps: int, cfg: FLConfig,
                         params: Params, images: Array, labels: Array,
                         mask: Array, sizes: Array, selected: Array,
-                        key: Array) -> Tuple[Params, Array]:
+                        key: Array,
+                        dispatch_idx: Optional[Array] = None
+                        ) -> Tuple[Params, Array]:
     """Masked local SGD for all K clients -> (stacked params, FedAvg w).
 
     The single definition of the per-client step schedule and the
     ``D_k / D_r`` weight normalization — the plain and compressed round
     bodies both call it, so the scan==legacy parity contracts cannot be
     broken by editing one copy.
+
+    ``dispatch_idx`` (DESIGN.md §11) switches on the dense-block path:
+    the per-device operands are gathered into a ``(n_cap, ...)`` block,
+    the vmapped trainer runs over only those lanes, and the trained
+    params scatter back into the ``(K, ...)`` layout with the global
+    model as filler.  Two invariants make ``dispatch_cap >= K`` bitwise
+    equal to the masked path: (a) device ``d``'s PRNG key is
+    ``split(key, K)[d]`` gathered by lane — a device's SGD noise never
+    depends on which lane it lands in — and (b) the scatter restores
+    device order *before* FedAvg, so the aggregation's float reduction
+    order is the same one the masked path uses.
     """
     k = images.shape[0]
     # Per-client active step schedule: E * ceil(size_k / B) steps.
@@ -258,7 +363,19 @@ def _masked_local_train(trainer: Callable, max_steps: int, cfg: FLConfig,
     active = (step_idx < steps_k[:, None]).astype(jnp.float32)
     active = active * selected[:, None]             # frozen if unselected
     keys = jax.random.split(key, k)
-    client_params = trainer(params, images, labels, mask, active, keys)
+    if dispatch_idx is None:
+        client_params = trainer(params, images, labels, mask, active, keys)
+    else:
+        idx = dispatch_idx
+        block = trainer(params, images[idx], labels[idx], mask[idx],
+                        active[idx], keys[idx])
+        # Scatter the trained lanes back to device order; every
+        # off-block device is frozen at the global model (exactly what
+        # its masked-path lane would have returned).
+        client_params = jax.tree_util.tree_map(
+            lambda p, b: jnp.broadcast_to(p[None], (k,) + p.shape)
+            .at[idx].set(b),
+            params, block)
     # FedAvg weights D_k / D_r over the selected set.
     w = sizes.astype(jnp.float32) * selected
     w = w / jnp.maximum(jnp.sum(w), 1.0)
@@ -267,18 +384,22 @@ def _masked_local_train(trainer: Callable, max_steps: int, cfg: FLConfig,
 
 def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
                  params: Params, images: Array, labels: Array, mask: Array,
-                 sizes: Array, selected: Array, key: Array) -> Params:
+                 sizes: Array, selected: Array, key: Array,
+                 dispatch_idx: Optional[Array] = None) -> Params:
     """Masked local training for all K clients + FedAvg. Pure, traceable.
 
     An empty admitted set (possible when ``n_min == 0`` and every device
     misses the deadline) must carry the previous model forward — the
     all-zero weights would otherwise *replace* the global model with
     zeros.  The guard is a scalar select, so any non-empty round keeps
-    the aggregated value bitwise unchanged.
+    the aggregated value bitwise unchanged.  Under dispatch the guard
+    still works: an all-dropped/all-unselected round scatters nothing
+    but frozen lanes and the zero-weight aggregate is discarded.
     """
     client_params, w = _masked_local_train(trainer, max_steps, cfg, params,
                                            images, labels, mask, sizes,
-                                           selected, key)
+                                           selected, key,
+                                           dispatch_idx=dispatch_idx)
     agg = fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
     any_sel = jnp.sum(selected) > 0.0
     return jax.tree_util.tree_map(
@@ -335,7 +456,8 @@ def fedavg_aggregate_masked(params: Params, client_params: Params,
 def _train_round_faulty(trainer: Callable, max_steps: int, cfg: FLConfig,
                         params: Params, images: Array, labels: Array,
                         mask: Array, sizes: Array, selected: Array,
-                        ok: Array, key: Array) -> Params:
+                        ok: Array, key: Array,
+                        dispatch_idx: Optional[Array] = None) -> Params:
     """Fault-aware round: train the *selected* set, aggregate the *ok* set.
 
     Every admitted device runs its local epochs (the failure happens at
@@ -347,7 +469,8 @@ def _train_round_faulty(trainer: Callable, max_steps: int, cfg: FLConfig,
     """
     client_params, _ = _masked_local_train(trainer, max_steps, cfg, params,
                                            images, labels, mask, sizes,
-                                           selected, key)
+                                           selected, key,
+                                           dispatch_idx=dispatch_idx)
     w = sizes.astype(jnp.float32) * ok
     w = w / jnp.maximum(jnp.sum(w), 1.0)
     return fedavg_aggregate_masked(params, client_params, w, ok,
@@ -382,7 +505,8 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
                             mask: Array, sizes: Array, selected: Array,
                             key: Array, residual: Array, gains: Array,
                             index: Array,
-                            success: Optional[Array] = None
+                            success: Optional[Array] = None,
+                            dispatch_idx: Optional[Array] = None
                             ) -> Tuple[Params, Array]:
     """Masked local training + compressed-uplink FedAvg.  Pure, traceable.
 
@@ -404,12 +528,28 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
     residual (``compression.apply_codec``).  The update-form aggregate
     means an all-fail round carries the previous model unchanged.
     ``None`` is the reliable-edge path, bitwise the pre-fault behavior.
+
+    ``dispatch_idx`` (DESIGN.md §11): the dense block trains ``n_cap``
+    lanes and the trained params scatter back to the ``(K, ...)`` layout
+    *before* the updates are flattened — off-block rows equal the global
+    model bitwise, so their raw update is exactly zero, the codec sees
+    them as untransmitted, and the ``(K, P)`` EF residual carry keeps
+    its population shape under dispatch.
+
+    With ``fcfg.carry_dtype`` set the residual is *stored* at reduced
+    precision between rounds: upcast to f32 here on entry, advanced in
+    f32 by the codec, and downcast on return.  Both drivers call this
+    one body, so the cast points cannot drift apart.
     """
     k = images.shape[0]
+    cdt = _carry_dtype(fcfg)
+    if cdt is not None:
+        residual = residual.astype(jnp.float32)
     k_sgd, k_comp = jax.random.split(key)
     client_params, w = _masked_local_train(trainer, max_steps, fcfg,
                                            params, images, labels, mask,
-                                           sizes, selected, k_sgd)
+                                           sizes, selected, k_sgd,
+                                           dispatch_idx=dispatch_idx)
     leaves, _ = jax.tree_util.tree_flatten(client_params)
     p_leaves, p_treedef = jax.tree_util.tree_flatten(params)
     dtypes = {leaf.dtype for leaf in p_leaves}
@@ -427,6 +567,8 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
     c, residual = compression.apply_codec(
         codec, updates, residual, selected, k_comp, fcfg.compression,
         gains, index, success=success)
+    if cdt is not None:
+        residual = residual.astype(cdt)
     agg = jnp.tensordot(w, c, axes=1)               # (P,)
     outs, offset = [], 0
     for p in p_leaves:
@@ -469,7 +611,9 @@ def make_round_fn(loss_fn: Callable, cfg: FLConfig,
     With ``cfg.faults`` set (and no compression) it is the fault-aware
     round (:func:`_train_round_faulty`), taking the upload-success mask
     ``ok`` after ``selected``; the compressed round takes the mask as
-    its ``success`` keyword either way.
+    its ``success`` keyword either way.  Every variant accepts a
+    ``dispatch_idx`` keyword (the dense-block gather indices from
+    :func:`dispatch_plan`; None = masked all-K path).
     """
     trainer = make_local_trainer(loss_fn, cfg)
     max_steps = _max_local_steps(cfg, capacity)
@@ -529,7 +673,17 @@ def _stream_round(process, fcfg: FLConfig, size_cap: float,
     single definition of the streaming round sequence — the scan body
     and the legacy loop both call it, so the bit-for-bit parity between
     them cannot be broken by editing one copy.
+
+    With ``fcfg.carry_dtype`` set the ``(K, C)`` hists and ``(K,)``
+    staleness arrive at storage precision (see :func:`_stream_advance`);
+    they are upcast here before any arithmetic so the whole refresh runs
+    in f32 and only the carried state pays the diet.
     """
+    cdt = _carry_dtype(fcfg)
+    if cdt is not None:
+        st = dataclasses.replace(
+            st, hists=st.hists.astype(jnp.float32),
+            staleness=st.staleness.astype(jnp.float32))
     deltas, arrivals, st = process.sample(k_arr, st, fcfg.stream)
     hists_r, stats, stale = streaming.refresh(
         st.hists, deltas, arrivals, st.staleness, st.selected_prev,
@@ -542,11 +696,31 @@ def _stream_round(process, fcfg: FLConfig, size_cap: float,
 
 
 def _stream_advance(st: streaming.StreamState, hists_r: Array,
-                    stale: Array, selected: Array) -> streaming.StreamState:
-    """Post-decision carry update (driver-owned StreamState fields)."""
+                    stale: Array, selected: Array,
+                    cdt=None) -> streaming.StreamState:
+    """Post-decision carry update (driver-owned StreamState fields).
+
+    ``cdt`` (from :func:`_carry_dtype`) is the storage dtype of the
+    dieted carry: the refreshed hists/staleness are downcast on write
+    and :func:`_stream_round` upcasts them on the next read.
+    """
+    if cdt is not None:
+        hists_r = hists_r.astype(cdt)
+        stale = stale.astype(cdt)
     return dataclasses.replace(st, hists=hists_r, staleness=stale,
                                selected_prev=selected,
                                round=st.round + 1)
+
+
+def _diet_stream_state(st: streaming.StreamState,
+                       cdt) -> streaming.StreamState:
+    """Cast a fresh StreamState's carried stats to storage precision so
+    the round-0 carry structure matches what :func:`_stream_advance`
+    writes (scan carries must be dtype-stable)."""
+    if cdt is None:
+        return st
+    return dataclasses.replace(st, hists=st.hists.astype(cdt),
+                               staleness=st.staleness.astype(cdt))
 
 
 def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
@@ -580,6 +754,10 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
     max_steps = _max_local_steps(fcfg, capacity)
     sch = _sched_cfg(scfg, fcfg)
     do_eval = jnp.asarray(_eval_mask(fcfg.num_rounds, eval_every))
+    n_cap = fcfg.dispatch_cap
+    if n_cap is not None and n_cap < 1:
+        raise ValueError(f"dispatch_cap must be >= 1, got {n_cap}")
+    cdt = _carry_dtype(fcfg)
     stream = fcfg.stream
     if stream is not None:
         process, size_cap, measure_col = _stream_setup(fcfg, capacity)
@@ -596,10 +774,11 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
         k_dev = sizes.shape[0]
         if stream is not None:
             key, k_init = jax.random.split(key)
-            state0 = process.init(k_init, hists, stream)
+            state0 = _diet_stream_state(
+                process.init(k_init, hists, stream), cdt)
         if comp is not None:
             residual0 = jnp.zeros((k_dev, flat_param_size(params)),
-                                  jnp.float32)
+                                  cdt or jnp.float32)
 
         def body(carry, do_ev):
             params, ages, key = carry[:3]
@@ -648,10 +827,22 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 staleness=stale, payload_bits=payload_sched,
                 reliability=rel if flt is not None else None)
             selected = result.selected
+            # Dense-block dispatch (DESIGN.md §11): the plan runs right
+            # after scheduling so faults, training, ages, reliability
+            # and metrics all see the *realized* (post-drop) selection.
+            if n_cap is None:
+                didx = None
+                n_dropped = jnp.zeros((), jnp.int32)
+            else:
+                didx, selected, n_dropped = dispatch_plan(selected, n_cap)
             if flt is None:
                 ok = selected
-                energy = result.energy
-                round_time = result.round_time
+                if n_cap is None:
+                    energy = result.energy
+                    round_time = result.round_time
+                else:
+                    energy, round_time = _dispatch_accounting(result,
+                                                              selected)
             else:
                 draw = faults.sample_faults(k_fault, gains, net, flt)
                 ok, energy, round_time = faults.apply_faults(
@@ -661,17 +852,20 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 if flt is None:
                     params = _train_round(trainer, max_steps, fcfg, params,
                                           images, labels, mask, sizes_r,
-                                          selected, k_train)
+                                          selected, k_train,
+                                          dispatch_idx=didx)
                 else:
                     params = _train_round_faulty(
                         trainer, max_steps, fcfg, params, images, labels,
-                        mask, sizes_r, selected, ok, k_train)
+                        mask, sizes_r, selected, ok, k_train,
+                        dispatch_idx=didx)
             else:
                 params, residual = _train_round_compressed(
                     trainer, max_steps, fcfg, codec, params, images,
                     labels, mask, sizes_r, selected, k_train, residual,
                     gains, index,
-                    success=draw.success if flt is not None else None)
+                    success=draw.success if flt is not None else None,
+                    dispatch_idx=didx)
             # Participation = delivered: ages reset and streaming
             # backlog clears only for uploads that landed.
             ages = jnp.where(ok > 0.0, 0, ages + 1)
@@ -692,10 +886,11 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 selected=selected,
                 iterations=result.iterations,
                 n_success=jnp.sum(ok).astype(jnp.int32),
+                n_dropped=n_dropped,
             )
             out = (params, ages, key)
             if stream is not None:
-                out += (_stream_advance(st, hists_r, stale, ok),)
+                out += (_stream_advance(st, hists_r, stale, ok, cdt),)
             if comp is not None:
                 out += (residual,)
             if flt is not None:
@@ -835,6 +1030,7 @@ def metrics_to_records(metrics: RoundMetrics) -> List[RoundRecord]:
             energy_per_device=e_total / max(n_sel, 1),
             selected=np.asarray(m.selected[r]),
             n_success=int(m.n_success[r]),
+            n_dropped=int(m.n_dropped[r]),
         ))
     return history
 
@@ -971,16 +1167,20 @@ def run_federated_loop(
     k_dev = data.num_devices
     round_fn = make_round_fn(loss_fn, fcfg, data.capacity)
     hists = client_histograms(data, fcfg.num_classes)
+    n_cap = fcfg.dispatch_cap
+    if n_cap is not None and n_cap < 1:
+        raise ValueError(f"dispatch_cap must be >= 1, got {n_cap}")
+    cdt = _carry_dtype(fcfg)
     stream = fcfg.stream
     if stream is not None:
         process, size_cap, measure_col = _stream_setup(fcfg, data.capacity)
         key, k_init = jax.random.split(key)
-        st = process.init(k_init, hists, stream)
+        st = _diet_stream_state(process.init(k_init, hists, stream), cdt)
     comp = fcfg.compression
     if comp is not None:
         codec = _comp_setup(fcfg)
         residual = jnp.zeros((k_dev, flat_param_size(init_params)),
-                             jnp.float32)
+                             cdt or jnp.float32)
     flt = faults.active(fcfg.faults)
     exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
     rel = jnp.ones((k_dev,), jnp.float32) if flt is not None else None
@@ -1017,10 +1217,21 @@ def run_federated_loop(
                                     gains, net, wcfg, sch, stale,
                                     payload_sched, rel)
         selected = result.selected
+        # Same dispatch plan + re-pricing as the scan body, through the
+        # jitted entries (parity: fused == loop bitwise).
+        if n_cap is None:
+            didx = None
+            n_dropped = jnp.zeros((), jnp.int32)
+        else:
+            didx, selected, n_dropped = _dispatch_plan_jit(selected, n_cap)
         if flt is None:
             ok = selected
-            energy = result.energy
-            round_time = result.round_time
+            if n_cap is None:
+                energy = result.energy
+                round_time = result.round_time
+            else:
+                energy, round_time = _dispatch_accounting_jit(result,
+                                                              selected)
         else:
             # Jitted (not eager) on purpose: the scan driver compiles
             # the same arithmetic fused, and CPU XLA's FMA contraction
@@ -1031,21 +1242,23 @@ def run_federated_loop(
         if comp is None:
             if flt is None:
                 params = round_fn(params, data.images, data.labels,
-                                  data.mask, sizes_r, selected, k_train)
+                                  data.mask, sizes_r, selected, k_train,
+                                  dispatch_idx=didx)
             else:
                 params = round_fn(params, data.images, data.labels,
                                   data.mask, sizes_r, selected, ok,
-                                  k_train)
+                                  k_train, dispatch_idx=didx)
         else:
             params, residual = round_fn(
                 params, data.images, data.labels, data.mask, sizes_r,
                 selected, k_train, residual, gains, index,
-                success=draw.success if flt is not None else None)
+                success=draw.success if flt is not None else None,
+                dispatch_idx=didx)
         ages = jnp.where(ok > 0.0, 0, ages + 1)
         if flt is not None:
             rel = faults.reliability_update(rel, selected, ok, flt)
         if stream is not None:
-            st = _stream_advance(st, hists_r, stale, ok)
+            st = _stream_advance(st, hists_r, stale, ok, cdt)
 
         if (r % eval_every) == 0 or r == fcfg.num_rounds - 1:
             acc = float(eval_fn(params, test_x, data.test_labels))
@@ -1060,5 +1273,6 @@ def run_federated_loop(
             energy_per_device=e_total / max(n_sel, 1),
             selected=np.asarray(selected),
             n_success=int(jnp.sum(ok)),
+            n_dropped=int(n_dropped),
         ))
     return params, history

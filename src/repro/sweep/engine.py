@@ -140,7 +140,7 @@ def welford_fold(state: Welford, batch: Array,
 # ---------------------------------------------------------------------------
 
 ROUND_METRICS = ("accuracy", "round_time", "energy_total", "n_selected",
-                 "n_success")
+                 "n_success", "n_dropped")
 SCALAR_METRICS = ("final_accuracy", "time_total", "energy_total",
                   "energy_per_device", "mean_selected", "rounds_to_target",
                   "reached_target")
@@ -189,6 +189,7 @@ def aggregate_fold(agg: Dict[str, Dict[str, Welford]],
         "energy_total": metrics.energy_total,
         "n_selected": metrics.n_selected.astype(jnp.float32),
         "n_success": metrics.n_success.astype(jnp.float32),
+        "n_dropped": metrics.n_dropped.astype(jnp.float32),
     }
     scalars, masks = _scenario_scalars(metrics, target)
     return {

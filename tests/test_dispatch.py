@@ -1,0 +1,338 @@
+"""Admitted-set dense-block dispatch + scan-carry diet (DESIGN.md §11).
+
+Covers the ISSUE-7 contracts: ``dispatch_cap >= K`` bitwise-equals the
+masked all-K path for the plain/compressed/faulty round bodies,
+overflow drops are schedule-rank-deterministic (and identical under
+vmap), the empty-admitted-set carry survives dispatch, and the
+``carry_dtype`` diet keeps the scan==legacy parity while documenting
+what the EF fold-back property loses at bf16 storage precision.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression, faults, federated, scheduler, \
+    streaming, wireless
+from repro.data import partition, synthetic
+from repro.models import paper_nets
+
+
+# ---------------------------------------------------------------------------
+# Fixtures: one tiny world shared module-wide (compiles dominate runtime)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world():
+    imgs, labs = synthetic.generate(0, samples_per_class=200)
+    data = partition.partition(
+        imgs, labs, seed=1,
+        spec=partition.PartitionSpec(num_devices=8, num_shards=36,
+                                     shard_size=50))
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=8)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    return data, params, loss, ev
+
+
+WCFG = wireless.WirelessConfig()
+SCFG = scheduler.SchedulerConfig(method="das", n_min=2, iterations_max=3)
+FL = federated.FLConfig(num_rounds=3, batch_size=50, learning_rate=0.1)
+QUANT8 = compression.CompressionConfig(codec="quant", bit_width=8)
+FAULTS = faults.FaultConfig(drop_prob=0.35, max_retries=2,
+                            reliability_ema=0.3)
+
+
+def _run_kwargs(world):
+    data, params, loss, ev = world
+    net = wireless.sample_network(jax.random.key(0), data.num_devices,
+                                  WCFG)
+    return dict(init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+                net=net, wcfg=WCFG, scfg=SCFG, key=jax.random.key(42))
+
+
+def _same_tree(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _assert_history_equal(ha, hb):
+    for a, b in zip(ha, hb):
+        assert a.accuracy == b.accuracy
+        assert a.round_time == b.round_time
+        assert a.energy_total == b.energy_total
+        assert a.n_selected == b.n_selected
+        assert a.n_success == b.n_success
+        assert a.n_dropped == b.n_dropped
+        assert np.array_equal(a.selected, b.selected)
+
+
+# ---------------------------------------------------------------------------
+# The plan itself: schedule rank, overflow, vmap determinism
+# ---------------------------------------------------------------------------
+
+def test_dispatch_plan_schedule_rank_and_overflow():
+    """Admitted devices occupy the block in device-index order (stable
+    argsort = the documented schedule rank); overflow drops the highest
+    ranks and counts them."""
+    selected = jnp.asarray([0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0])
+    idx, sel_eff, n_dropped = federated.dispatch_plan(selected, 3)
+    np.testing.assert_array_equal(np.asarray(idx), [1, 2, 4])
+    np.testing.assert_array_equal(np.asarray(sel_eff),
+                                  [0, 1, 1, 0, 1, 0, 0])
+    assert int(n_dropped) == 2
+    # Capacity beyond the population clamps to K and drops nothing.
+    idx_all, sel_all, nd_all = federated.dispatch_plan(selected, 99)
+    assert idx_all.shape == (7,)
+    np.testing.assert_array_equal(np.asarray(sel_all),
+                                  np.asarray(selected))
+    assert int(nd_all) == 0
+    # Un-admitted lanes in a non-full block stay masked out.
+    few = jnp.asarray([0.0, 1.0, 0.0, 0.0])
+    idx_f, sel_f, nd_f = federated.dispatch_plan(few, 3)
+    assert int(jnp.sum(sel_f)) == 1 and int(nd_f) == 0
+
+
+def test_dispatch_plan_vmap_matches_singles():
+    """The plan is a pure function of the mask — batching it cannot
+    change any scenario's gather order (the batch == singles contract's
+    dispatch leg)."""
+    masks = jnp.asarray([[1.0, 0.0, 1.0, 1.0, 0.0],
+                         [0.0, 1.0, 1.0, 1.0, 1.0],
+                         [0.0, 0.0, 0.0, 0.0, 0.0]])
+    plan = functools.partial(federated.dispatch_plan, n_cap=2)
+    bi, bs, bn = jax.vmap(plan)(masks)
+    for i in range(masks.shape[0]):
+        si, ss, sn = plan(masks[i])
+        np.testing.assert_array_equal(np.asarray(bi[i]), np.asarray(si))
+        np.testing.assert_array_equal(np.asarray(bs[i]), np.asarray(ss))
+        assert int(bn[i]) == int(sn)
+
+
+def test_dispatch_cap_validation(world):
+    kw = _run_kwargs(world)
+    with pytest.raises(ValueError, match="dispatch_cap"):
+        federated.run_federated(
+            fcfg=dataclasses.replace(FL, dispatch_cap=0), **kw)
+    with pytest.raises(ValueError, match="dispatch_cap"):
+        federated.run_federated_loop(
+            fcfg=dataclasses.replace(FL, dispatch_cap=-3), **kw)
+
+
+# ---------------------------------------------------------------------------
+# cap >= K: the dispatched program must be bitwise the masked path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["plain", "compressed", "faulty"])
+def test_dispatch_cap_ge_k_bitwise_equals_masked(world, variant):
+    kw = _run_kwargs(world)
+    fl = {"plain": FL,
+          "compressed": dataclasses.replace(FL, compression=QUANT8),
+          "faulty": dataclasses.replace(FL, faults=FAULTS)}[variant]
+    k = kw["data"].num_devices
+    p_mask, h_mask = federated.run_federated(fcfg=fl, **kw)
+    for cap in (k, k + 3):
+        p_disp, h_disp = federated.run_federated(
+            fcfg=dataclasses.replace(fl, dispatch_cap=cap), **kw)
+        assert _same_tree(p_mask, p_disp)
+        _assert_history_equal(h_mask, h_disp)
+        assert all(r.n_dropped == 0 for r in h_disp)
+
+
+# ---------------------------------------------------------------------------
+# cap < admitted: real drops, every driver parity contract extended
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["plain", "compressed", "faulty"])
+def test_dispatch_scan_matches_loop_with_drops(world, variant):
+    kw = _run_kwargs(world)
+    base = {"plain": FL,
+            "compressed": dataclasses.replace(FL, compression=QUANT8),
+            "faulty": dataclasses.replace(FL, faults=FAULTS)}[variant]
+    fl = dataclasses.replace(base, dispatch_cap=2)
+    p_scan, h_scan = federated.run_federated(fcfg=fl, **kw)
+    p_loop, h_loop = federated.run_federated_loop(fcfg=fl, **kw)
+    assert _same_tree(p_scan, p_loop)
+    _assert_history_equal(h_scan, h_loop)
+    # The cap actually bit: overflow drops happened and were counted.
+    assert any(r.n_dropped > 0 for r in h_scan)
+    assert all(r.n_selected <= 2 for r in h_scan)
+
+
+def test_dispatch_batch_matches_singles(world):
+    """Overflow-drop determinism under vmap: scenario i of a dispatched
+    batch is bit-for-bit the dispatched single run."""
+    data, params, loss, ev = world
+    fl = dataclasses.replace(FL, dispatch_cap=3)
+    s = 2
+    nets = wireless.sample_networks(jax.random.key(5), s,
+                                    data.num_devices, WCFG)
+    keys = federated.scenario_keys(jax.random.key(9), 0, s)
+    p_b, m_b = federated.run_federated_batch(
+        fcfg=fl, init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+        nets=nets, wcfg=WCFG, scfg=SCFG, keys=keys)
+    recs = federated.batch_metrics_to_records(m_b)
+    dropped_any = False
+    for i in range(s):
+        net_i = jax.tree_util.tree_map(lambda a, i=i: a[i], nets)
+        p_i, h_i = federated.run_federated(
+            fcfg=fl, init_params=params, loss_fn=loss, eval_fn=ev,
+            data=data, net=net_i, wcfg=WCFG, scfg=SCFG, key=keys[i])
+        assert _same_tree(
+            p_i, jax.tree_util.tree_map(lambda a, i=i: a[i], p_b))
+        _assert_history_equal(h_i, recs[i])
+        dropped_any |= any(r.n_dropped > 0 for r in h_i)
+    assert dropped_any
+
+
+def test_dispatch_empty_selection_carries_model(world):
+    """The scalar-where empty-set guard survives dispatch: an all-zero
+    admitted mask scatters only frozen lanes and the model carries."""
+    data, params, loss, _ = world
+    k = data.num_devices
+    round_fn = federated.make_round_fn(
+        loss, dataclasses.replace(FL, dispatch_cap=3), data.capacity)
+    none_sel = jnp.zeros((k,))
+    idx, sel_eff, n_dropped = federated.dispatch_plan(none_sel, 3)
+    assert int(n_dropped) == 0
+    out = round_fn(params, data.images, data.labels, data.mask,
+                   data.sizes, sel_eff, jax.random.key(0),
+                   dispatch_idx=idx)
+    assert _same_tree(out, params)
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(out)]
+    assert all(np.isfinite(l).all() for l in leaves)
+
+
+def test_dispatch_drops_are_priced_out(world):
+    """A capacity-dropped device neither trains nor transmits: its
+    energy is zero and it cannot set the round's wall clock, but it
+    also does not reset its age (it never participated)."""
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(FL, dispatch_cap=2)
+    _, h_disp = federated.run_federated(fcfg=fl, **kw)
+    _, h_mask = federated.run_federated(fcfg=FL, **kw)
+    for rd in h_disp:
+        assert rd.n_dropped >= 0 and rd.n_selected <= 2
+    # Histories diverge after round 0 (ages/aggregates differ), so only
+    # round 0 admits a direct masked-vs-dispatched comparison: same
+    # schedule, strictly fewer joules when the cap bit.
+    r0d, r0m = h_disp[0], h_mask[0]
+    assert r0d.n_selected + r0d.n_dropped == r0m.n_selected
+    if r0d.n_dropped > 0:
+        assert r0d.energy_total < r0m.energy_total
+
+
+# ---------------------------------------------------------------------------
+# Scan-carry diet: bf16 storage for the EF residual and stream stats
+# ---------------------------------------------------------------------------
+
+def test_carry_dtype_float32_is_identity(world):
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(FL, compression=QUANT8)
+    p0, h0 = federated.run_federated(fcfg=fl, **kw)
+    p1, h1 = federated.run_federated(
+        fcfg=dataclasses.replace(fl, carry_dtype="float32"), **kw)
+    assert _same_tree(p0, p1)
+    _assert_history_equal(h0, h1)
+
+
+def test_carry_dtype_validation(world):
+    kw = _run_kwargs(world)
+    with pytest.raises((ValueError, TypeError)):
+        federated.run_federated(
+            fcfg=dataclasses.replace(FL, compression=QUANT8,
+                                     carry_dtype="int8"), **kw)
+
+
+@pytest.mark.parametrize("extras", ["compressed", "stream",
+                                    "compressed_stream_dispatch"])
+def test_carry_diet_scan_matches_loop(world, extras):
+    """The diet's casts live in shared helpers, so both drivers round
+    identically — the parity contract holds at reduced precision."""
+    kw = _run_kwargs(world)
+    fl = FL
+    if "compressed" in extras:
+        fl = dataclasses.replace(fl, compression=QUANT8)
+    if "stream" in extras:
+        fl = dataclasses.replace(
+            fl, stream=streaming.StreamConfig(process="poisson"))
+    if "dispatch" in extras:
+        fl = dataclasses.replace(fl, dispatch_cap=3)
+    fl = dataclasses.replace(fl, carry_dtype="bfloat16")
+    p_scan, h_scan = federated.run_federated(fcfg=fl, **kw)
+    p_loop, h_loop = federated.run_federated_loop(fcfg=fl, **kw)
+    assert _same_tree(p_scan, p_loop)
+    _assert_history_equal(h_scan, h_loop)
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(p_scan)]
+    assert all(np.isfinite(l).all() for l in leaves)
+
+
+def test_carry_diet_bf16_stays_close_to_f32(world):
+    """The diet is a storage rounding, not a different algorithm: a
+    compressed run's final params track the f32-carry run closely."""
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(FL, compression=QUANT8)
+    p32, _ = federated.run_federated(fcfg=fl, **kw)
+    pbf, _ = federated.run_federated(
+        fcfg=dataclasses.replace(fl, carry_dtype="bfloat16"), **kw)
+    for a, b in zip(jax.tree_util.tree_leaves(p32),
+                    jax.tree_util.tree_leaves(pbf)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-3, rtol=5e-2)
+
+
+def test_ef_foldback_bf16_storage_property():
+    """EF fold-back at the diet's precision (the re-run of the PR-6
+    lossless property): the in-round fold-back is still exactly
+    ``r' = r + u`` in f32 arithmetic — what the diet costs is ONE bf16
+    quantization of ``r'`` per round at storage time, bounded by half a
+    bf16 ulp (2^-8 relative).  Never-scheduled devices' residuals pass
+    through the round-trip bitwise (bf16 -> f32 -> bf16 is exact)."""
+    ccfg = compression.CompressionConfig(codec="quant", bit_width=4,
+                                         error_feedback=True)
+    codec = compression.get_codec("quant")
+    k, p = 4, 64
+    u = jax.random.normal(jax.random.key(0), (k, p))
+    r_store = (0.3 * jax.random.normal(jax.random.key(1), (k, p))
+               ).astype(jnp.bfloat16)          # the dieted carry
+    gains = jnp.ones((k,))
+    index = jnp.ones((k,))
+    selected = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    success = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    # What _train_round_compressed does under carry_dtype: upcast the
+    # stored residual, run the codec in f32, downcast the new residual.
+    r32 = r_store.astype(jnp.float32)
+    _, res = compression.apply_codec(codec, u, r32, selected,
+                                     jax.random.key(2), ccfg, gains,
+                                     index, success=success)
+    # (a) The f32 fold-back is exact w.r.t. the upcast residual.
+    np.testing.assert_array_equal(np.asarray(res[1]),
+                                  np.asarray(r32[1] + u[1]))
+    # (b) Storage rounding loses at most half a bf16 ulp of r': bf16
+    # keeps 7 stored mantissa bits, so half-ulp is 2^-8 relative.
+    stored = res.astype(jnp.bfloat16).astype(jnp.float32)
+    err = np.abs(np.asarray(stored[1]) - np.asarray(res[1]))
+    bound = 2.0 ** -8 * np.maximum(np.abs(np.asarray(res[1])), 1e-30)
+    assert np.all(err <= bound)
+    # (c) An untouched device's residual survives the round-trip
+    # bitwise: bf16 values are exactly representable in f32.
+    np.testing.assert_array_equal(
+        np.asarray(res[3].astype(jnp.bfloat16)), np.asarray(r_store[3]))
+
+
+def test_dispatch_sweepable_via_fl_axis():
+    """`dispatch_cap` rides the existing `fl` sweep-axis target — grids
+    over the capacity need zero sweep-layer changes."""
+    from repro.sweep import grid as grid_lib
+    spec = grid_lib.SweepSpec(
+        fl=FL, sched=SCFG, wireless=WCFG, scenarios_per_point=2,
+        base_seed=0,
+        axes=(grid_lib.Axis("fl", "dispatch_cap", (None, 4, 8)),))
+    points = spec.expand()
+    assert [pt.fl.dispatch_cap for pt in points] == [None, 4, 8]
