@@ -14,6 +14,8 @@ vs scan vs batch vs sharded-sweep simulation throughput; writes
 BENCH_fl_e2e.json), sched (scheduler latency, includes sweep/* rows),
 sweep (sweep engine rows only — the CI shard_map smoke), dispatch
 (dense-block dispatch smoke — the CI gather/scatter regression guard),
+async (event-driver smoke — sync scan vs event-scan sync limit vs
+buffered async under diurnal churn),
 kernels (Pallas micro), roofline (requires dryrun_results.json from
 repro.launch.dryrun).
 
@@ -138,6 +140,14 @@ def main() -> None:
         # sharded row exercises the real shard_map partitioning).
         from benchmarks import sched_micro
         for r in sched_micro.sweep_rows(quick):
+            _emit(r)
+
+    if want("async") and not want("sched"):
+        # Standalone event-driver smoke (CI runs this under 4 forced
+        # host devices): sync scan vs event-scan sync limit vs full
+        # buffered async, without paying the full sched suite.
+        from benchmarks import sched_micro
+        for r in sched_micro.async_rows(quick):
             _emit(r)
 
     if want("dispatch") and not want("fl_e2e"):

@@ -31,6 +31,12 @@ scheduling) and a straggler-heavy profile (heavy-tailed compute
 multipliers + dropouts), each a miniature FEEL run reported as
 ms/round.
 
+The ``async/*`` rows price the event-driven asynchronous driver
+(DESIGN.md §12): the synchronous scan baseline, the event scan in its
+synchronous limit (what the availability/pending-buffer machinery
+costs when inert — the bitwise-parity configuration) and full buffered
+async mode under diurnal churn, each as ms per scan step.
+
 The ``sweep/*`` rows cover the Monte-Carlo sweep engine (DESIGN.md §8):
 the jitted Welford chunk-fold (the O(R) aggregation every chunk pays)
 and one engine chunk execution on a miniature FEEL world, shard_map'd
@@ -220,6 +226,88 @@ def bench_faults(profile: str, k: int = 16, rounds: int = 4,
         out = sim(*args)
         jax.block_until_ready(out[0])
     return (time.perf_counter() - t0) / iters / rounds * 1e3
+
+
+def bench_events(profile: str, k: int = 16, rounds: int = 4,
+                 iters: int = 3) -> float:
+    """ms per event of the event-scan driver (DESIGN.md §12).
+
+    ``sync`` = the synchronous scan driver baseline on the same world;
+    ``sync_limit`` = the event driver in its synchronous limit (default
+    ``EventConfig()`` — the bitwise-parity configuration), so the pair
+    prices what the availability/pending-buffer machinery costs when it
+    is doing nothing; ``diurnal`` = full async mode (correlated
+    day/night churn, buffer_size 2, staleness discount, short tick
+    horizon) — the steady-state per-event cost of buffered asynchronous
+    aggregation.
+    """
+    import functools as _ft
+
+    from repro.core import events as events_lib
+    from repro.core import faults as faults_lib
+    from repro.core import federated
+    from repro.data import partition, synthetic
+    from repro.models import paper_nets
+
+    imgs, labs = synthetic.generate(0, samples_per_class=260)
+    data = partition.partition(
+        imgs, labs, seed=1,
+        spec=partition.PartitionSpec(num_devices=k, num_shards=50,
+                                     shard_size=50))
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=16)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    if profile == "sync":
+        ecfg = None
+    elif profile == "sync_limit":
+        ecfg = events_lib.EventConfig()
+    else:                                   # diurnal async
+        ecfg = events_lib.EventConfig(
+            availability="diurnal", duty=0.6, buffer_size=2,
+            staleness_decay=0.5, tick_horizon=0.05, num_events=rounds)
+    fcfg = federated.FLConfig(
+        num_rounds=rounds, batch_size=50, learning_rate=0.1,
+        faults=faults_lib.FaultConfig(reliability_ema=0.3), events=ecfg)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    wcfg = wireless.WirelessConfig()
+    net = wireless.sample_network(jax.random.key(0), k, wcfg)
+    loss = _ft.partial(paper_nets.loss_fn, spec=mspec)
+    ev = _ft.partial(paper_nets.accuracy, spec=mspec)
+    sim = federated.make_feel_sim(loss_fn=loss, eval_fn=ev, wcfg=wcfg,
+                                  scfg=scfg, fcfg=fcfg,
+                                  capacity=data.capacity)
+    hists = federated.client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    args = (params, data.images, data.labels, data.mask, data.sizes,
+            hists, test_x, data.test_labels, net, jax.random.key(7))
+    out = sim(*args)
+    jax.block_until_ready(out[0])     # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = sim(*args)
+        jax.block_until_ready(out[0])
+    n = federated.sim_length(fcfg)
+    return (time.perf_counter() - t0) / iters / n * 1e3
+
+
+def async_rows(quick: bool = True) -> List[Tuple[str, float, str]]:
+    """The ``async/*`` rows: event-driver cost vs the sync scan (the CI
+    event-driver smoke runs exactly these under 4 forced host devices)."""
+    del quick                         # miniature either way
+    rows = []
+    ms_sync = bench_events("sync")
+    ms_limit = bench_events("sync_limit")
+    ms_async = bench_events("diurnal")
+    rows.append(("async/sync/K16", round(ms_sync, 2),
+                 "ms_per_round sync scan_driver baseline"))
+    rows.append(("async/sync_limit/K16", round(ms_limit, 2),
+                 "ms_per_event event driver, parity config"))
+    rows.append(("async/diurnal/K16", round(ms_async, 2),
+                 "ms_per_event buffered staleness-weighted"))
+    rows.append(("async/overhead/K16",
+                 round(ms_limit / max(ms_sync, 1e-9), 2),
+                 "event sync-limit / sync scan per-round"))
+    return rows
 
 
 def bench_dispatch(cap, k: int = 32, rounds: int = 4,
@@ -441,5 +529,6 @@ def run(quick: bool = True) -> List[Tuple[str, float, str]]:
     rows.append((f"dispatch/speedup/K{k_disp}",
                  round(ms_masked / ms_block, 2),
                  "masked / dense-block steady per-round"))
+    rows.extend(async_rows(quick))
     rows.extend(sweep_rows(quick))
     return rows

@@ -123,18 +123,13 @@ class FusedPGD:
     double descent in VMEM.  ``interpret=None`` follows the backend
     (interpret on CPU, compiled on TPU) like the other kernel wrappers.
 
-    ``payload_bits`` caveat: the Pallas kernel bakes ``model_bits`` in
-    as a scalar static, so ANY ``payload_bits`` array — including the
-    device-uniform payloads of the ``quant``/``topk`` codecs — falls
-    back to the jnp tangent-PGD solver (same double descent, same
-    contract).  Special-casing statically-uniform payloads was
-    considered and rejected: a Python-scalar payload stays static when
-    the scan driver traces `schedule_impl` inline but becomes a traced
-    operand through the legacy loop's jitted `schedule`, so the two
-    drivers would take different solver paths and the scan==legacy
-    bitwise parity contract would silently break.  The real fix — a
-    per-device bits *operand* lane in the kernel, removing the fallback
-    entirely — is a ROADMAP open item.
+    ``payload_bits`` rides the kernel's per-device bits *operand* lane
+    (``kernels/sub2_pgd.py``): compressed per-device payloads and the
+    nominal scalar ``cfg.model_bits`` take the same fused path — the
+    bits row is always materialized to ``(K,)`` and fed as an operand,
+    never baked as a static.  A device-uniform bits row is arithmetic-
+    identical (elementwise) to the old scalar static, so pre-existing
+    uncompressed runs are bitwise unchanged.
     """
 
     params: bw.Sub2Params = bw.Sub2Params()
@@ -147,24 +142,22 @@ class FusedPGD:
               payload_bits: Optional[Array] = None
               ) -> tuple[Array, Array]:
         del data_sizes
-        if payload_bits is not None:
-            return bw.pgd_allocation(selected, t_train, gains, tx_power,
-                                     cfg, self.params, alpha0=alpha0,
-                                     payload_bits=payload_bits)
         from repro.kernels import ops as kernel_ops
         mask = (selected > 0.0).astype(jnp.float32)
         n_act = jnp.maximum(jnp.sum(mask), 1.0)
+        bits = cfg.model_bits if payload_bits is None else payload_bits
         # alpha0 seeds the water-filling Newton carry only; the descent
         # keeps both distinct basins (wf, uniform) like pgd_allocation.
         wf, _ = bw.min_time_allocation(selected, t_train, gains, tx_power,
-                                       cfg, self.params, alpha0=alpha0)
+                                       cfg, self.params, alpha0=alpha0,
+                                       payload_bits=payload_bits)
         starts = jnp.stack([wf, mask / n_act])
         p = self.params
         return kernel_ops.sub2_pgd(
             mask, t_train, gains, tx_power, starts, rho=p.rho,
             lr=p.pgd_lr, tau=p.smooth_tau, iters=p.pgd_iters,
             bandwidth_hz=cfg.bandwidth_hz, noise_psd=cfg.noise_psd,
-            model_bits=cfg.model_bits, min_alpha=cfg.min_alpha,
+            model_bits=bits, min_alpha=cfg.min_alpha,
             interpret=self.interpret)
 
 

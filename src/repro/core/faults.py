@@ -75,6 +75,16 @@ class FaultConfig:
     dropout_prob: float = 0.0       # P(device dies before uploading)
     reliability_ema: float = 0.0    # EMA rate beta; 0 freezes rel at 1
     overprovision: int = 0          # extra devices Sub1 admits (n_min +=)
+    # Chronic per-device heterogeneity (ROADMAP "chronically
+    # heterogeneous faults", minimal version): when > 0, each device's
+    # per-attempt drop rate is drawn ONCE per scenario as a
+    # mean-preserving log-normal spread around ``drop_prob``
+    # (:func:`chronic_rates`), so unreliability is *persistent per
+    # device* and the reliability-EMA discount has signal to learn.
+    # 0 keeps the i.i.d. process bitwise unchanged.  The config stays a
+    # hashable static — the realized ``(K,)`` rates are a traced
+    # operand threaded through :func:`sample_faults`.
+    chronic_spread: float = 0.0     # sigma of log-normal per-device rates
 
 
 @jax.tree_util.register_pytree_node_class
@@ -136,8 +146,31 @@ def active(cfg: Optional[FaultConfig]) -> Optional[FaultConfig]:
     return cfg
 
 
+def chronic_rates(key: Array, k: int,
+                  cfg: FaultConfig) -> Optional[Array]:
+    """Once-per-scenario ``(K,)`` per-device drop rates, or ``None``.
+
+    Mean-preserving log-normal spread around the nominal rate:
+    ``rate_k = drop_prob * exp(sigma * z_k - sigma^2 / 2)`` clipped to
+    [0, 1], with ``sigma = chronic_spread`` and ``z_k ~ N(0, 1)`` drawn
+    from a scenario-derived key.  Sampled *once* before the round loop
+    and held fixed, so a device that rolls a bad rate stays bad for the
+    whole run — the persistent signal the reliability EMA needs
+    (i.i.d. per-round faults average out; EXPERIMENTS.md §Faults).
+    Returns ``None`` (the scalar i.i.d. path, bitwise unchanged) when
+    the spread or the nominal rate is zero.
+    """
+    if cfg.drop_prob <= 0.0 or cfg.chronic_spread <= 0.0:
+        return None
+    s = cfg.chronic_spread
+    z = jax.random.normal(key, (k,))
+    return jnp.clip(cfg.drop_prob * jnp.exp(s * z - 0.5 * s * s),
+                    0.0, 1.0)
+
+
 def sample_faults(key: Array, gains: Array, net: wireless.NetworkState,
-                  cfg: FaultConfig) -> FaultDraw:
+                  cfg: FaultConfig,
+                  drop_rates: Optional[Array] = None) -> FaultDraw:
     """Draw one round's fault realization (pure, traceable, vmap-safe).
 
     The deep fade is deterministic *within* the round — block fading
@@ -145,12 +178,18 @@ def sample_faults(key: Array, gains: Array, net: wireless.NetworkState,
     attempts — while the Bernoulli drops are independent per attempt
     (short interference bursts).  The fading power is recovered from the
     sampled gains as ``|h|^2 = gains / pathloss``, so the fade test sees
-    exactly the channel the scheduler saw.
+    exactly the channel the scheduler saw.  ``drop_rates`` (chronic
+    per-device rates from :func:`chronic_rates`) replaces the scalar
+    ``drop_prob`` in the per-attempt Bernoulli when supplied; ``None``
+    is the i.i.d. path, bitwise identical to the pre-chronic draw.
     """
     k_drop, k_dropout, k_strag, k_tail = jax.random.split(key, 4)
     budget = attempt_budget(cfg)
     u_drop = jax.random.uniform(k_drop, gains.shape + (budget,))
-    dropped = u_drop < cfg.drop_prob
+    if drop_rates is None:
+        dropped = u_drop < cfg.drop_prob
+    else:
+        dropped = u_drop < drop_rates[..., None]
     h2 = gains / jnp.maximum(net.pathloss, 1e-30)
     faded = h2 < cfg.deep_fade_threshold
     attempt_ok = (~dropped) & (~faded[..., None])
@@ -195,6 +234,10 @@ def expected_time_mult(cfg: FaultConfig) -> float:
     spends *less* airtime, so pricing only the retry tax is the
     conservative deadline estimate.  ``drop_prob == 0`` gives exactly
     1.0, keeping fault-enabled-but-inert runs bitwise identical.
+    Chronic per-device rates price at the *nominal* ``drop_prob`` (the
+    spread's pre-clip mean) — the scheduler cannot see a scenario's
+    realized rates at trace time, and the mean-rate price is the
+    natural static stand-in.
     """
     budget = attempt_budget(cfg)
     q = min(max(float(cfg.drop_prob), 0.0), 1.0)
@@ -247,7 +290,8 @@ def apply_faults(draw: FaultDraw, selected: Array, alpha: Array,
 def fault_step(key: Array, selected: Array, alpha: Array, t_train: Array,
                gains: Array, net: wireless.NetworkState,
                wcfg: wireless.WirelessConfig,
-               payload_bits: Optional[Array], cfg: FaultConfig
+               payload_bits: Optional[Array], cfg: FaultConfig,
+               drop_rates: Optional[Array] = None
                ) -> Tuple[FaultDraw, Array, Array, Array]:
     """Jitted draw + realized accounting -> (draw, ok, energy, round_time).
 
@@ -258,7 +302,7 @@ def fault_step(key: Array, selected: Array, alpha: Array, t_train: Array,
     jitted step keeps the scan == loop parity contract bitwise
     (``tests/test_faults.py``).
     """
-    draw = sample_faults(key, gains, net, cfg)
+    draw = sample_faults(key, gains, net, cfg, drop_rates)
     ok, energy, round_time = apply_faults(draw, selected, alpha, t_train,
                                           gains, net, wcfg, payload_bits,
                                           cfg)
@@ -284,5 +328,6 @@ def reliability_update(rel: Array, selected: Array, ok: Array,
 
 
 __all__ = ["FaultConfig", "FaultDraw", "active", "attempt_budget",
-           "fault_step", "is_inert", "sample_faults", "time_mult",
-           "expected_time_mult", "apply_faults", "reliability_update"]
+           "chronic_rates", "fault_step", "is_inert", "sample_faults",
+           "time_mult", "expected_time_mult", "apply_faults",
+           "reliability_update"]

@@ -67,6 +67,7 @@ import numpy as np
 
 from repro.core import bandwidth, compression, diversity, faults, \
     scheduler, streaming, wireless
+from repro.core import events as events_lib
 from repro.data import partition as partition_lib
 from repro.data import synthetic
 
@@ -121,6 +122,28 @@ class FLConfig:
     # reduced precision too.  None (or "float32") = full-precision
     # carry, bitwise unchanged.
     carry_dtype: Optional[str] = None
+    # Event-driven asynchronous FEEL (DESIGN.md §12): when set, the
+    # simulation runs as a scan over scheduling *events* instead of
+    # synchronous rounds — per-device availability processes gate
+    # admission, uploads land after their compute + channel time, and
+    # the server applies staleness-weighted buffered aggregation
+    # (``core.events``).  ``make_feel_sim``/``make_feel_sim_batch``
+    # delegate to the event drivers, so the sweep engine and batch
+    # driver compose unchanged.  None = synchronous rounds; the event
+    # scan's synchronous limit reproduces them bitwise
+    # (``tests/test_events.py``).
+    events: Optional[events_lib.EventConfig] = None
+
+
+def sim_length(fcfg: FLConfig) -> int:
+    """Rows in the simulation's metrics: ``num_rounds`` for the
+    synchronous drivers, ``events.num_events`` (when set) for the event
+    drivers — the one place that resolves the default, so the sweep
+    engine's Welford aggregates and checkpoint shapes stay in step with
+    whichever driver ``make_feel_sim`` delegates to."""
+    if fcfg.events is not None and fcfg.events.num_events is not None:
+        return fcfg.events.num_events
+    return fcfg.num_rounds
 
 
 @dataclasses.dataclass
@@ -772,6 +795,14 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
             net: wireless.NetworkState, key: Array
             ) -> Tuple[Params, RoundMetrics]:
         k_dev = sizes.shape[0]
+        # Chronic per-device drop rates (DESIGN.md §10): drawn once per
+        # scenario off the *pristine* scenario key (folded, before the
+        # streaming init split, so every other stream is untouched) and
+        # held fixed across rounds.  None unless chronic_spread > 0 —
+        # the i.i.d. fault path stays bitwise identical.
+        drop_rates = faults.chronic_rates(
+            jax.random.fold_in(key, 0xC407), k_dev, flt) \
+            if flt is not None else None
         if stream is not None:
             key, k_init = jax.random.split(key)
             state0 = _diet_stream_state(
@@ -844,7 +875,8 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                     energy, round_time = _dispatch_accounting(result,
                                                               selected)
             else:
-                draw = faults.sample_faults(k_fault, gains, net, flt)
+                draw = faults.sample_faults(k_fault, gains, net, flt,
+                                            drop_rates)
                 ok, energy, round_time = faults.apply_faults(
                     draw, selected, result.alpha, result.t_train, gains,
                     net, wcfg, payload, flt)
@@ -927,8 +959,12 @@ def make_feel_sim(*, loss_fn: Callable, eval_fn: Callable,
     the call (pass a fresh copy per invocation in sweeps); CPU-backend
     JAX may decline the donation with a warning, which is harmless.
     """
-    sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
-                    eval_every)
+    if fcfg.events is not None:
+        sim = events_lib._make_event_sim(loss_fn, eval_fn, wcfg, scfg,
+                                         fcfg, capacity, eval_every)
+    else:
+        sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
+                        eval_every)
     return jax.jit(sim, donate_argnums=(0,) if donate_params else ())
 
 
@@ -993,8 +1029,12 @@ def make_feel_sim_batch(*, loss_fn: Callable, eval_fn: Callable,
     per-shard local batch.  ``S`` must be divisible by the mesh axis
     size (the sweep engine falls back to ``mesh=None`` otherwise).
     """
-    sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
-                    eval_every)
+    if fcfg.events is not None:
+        sim = events_lib._make_event_sim(loss_fn, eval_fn, wcfg, scfg,
+                                         fcfg, capacity, eval_every)
+    else:
+        sim = _make_sim(loss_fn, eval_fn, wcfg, scfg, fcfg, capacity,
+                        eval_every)
     vsim = jax.vmap(sim, in_axes=(0 if donate_params else None,
                                   None, None, None, None,
                                   None, None, None, 0, 0))
@@ -1164,6 +1204,12 @@ def run_federated_loop(
     splits) as the scan driver, so streaming runs stay bit-for-bit
     comparable (``tests/test_streaming.py``).
     """
+    if fcfg.events is not None:
+        raise ValueError(
+            "FLConfig.events is set: the event-driven drivers have no "
+            "legacy per-round loop (their reference is the synchronous-"
+            "limit parity contract, tests/test_events.py) — use "
+            "make_feel_sim / make_feel_sim_batch")
     k_dev = data.num_devices
     round_fn = make_round_fn(loss_fn, fcfg, data.capacity)
     hists = client_histograms(data, fcfg.num_classes)
@@ -1171,6 +1217,12 @@ def run_federated_loop(
     if n_cap is not None and n_cap < 1:
         raise ValueError(f"dispatch_cap must be >= 1, got {n_cap}")
     cdt = _carry_dtype(fcfg)
+    flt = faults.active(fcfg.faults)
+    # Chronic rates off the pristine scenario key, before the streaming
+    # init split — same derivation as the scan driver (parity contract).
+    drop_rates = faults.chronic_rates(
+        jax.random.fold_in(key, 0xC407), k_dev, flt) \
+        if flt is not None else None
     stream = fcfg.stream
     if stream is not None:
         process, size_cap, measure_col = _stream_setup(fcfg, data.capacity)
@@ -1181,7 +1233,6 @@ def run_federated_loop(
         codec = _comp_setup(fcfg)
         residual = jnp.zeros((k_dev, flat_param_size(init_params)),
                              cdt or jnp.float32)
-    flt = faults.active(fcfg.faults)
     exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
     rel = jnp.ones((k_dev,), jnp.float32) if flt is not None else None
     sch = _sched_cfg(scfg, fcfg)
@@ -1238,7 +1289,7 @@ def run_federated_loop(
             # rounds differently from the op-at-a-time eager schedule.
             draw, ok, energy, round_time = faults.fault_step(
                 k_fault, selected, result.alpha, result.t_train, gains,
-                net, wcfg, payload, flt)
+                net, wcfg, payload, flt, drop_rates)
         if comp is None:
             if flt is None:
                 params = round_fn(params, data.images, data.labels,

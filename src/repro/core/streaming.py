@@ -98,11 +98,12 @@ class StreamState:
     affinity: Array       # (K, C) arrival class distribution
     rates: Array          # (K,)   mean arrivals / round
     drift_class: Array    # (K,)   int32 current drift class
+    bank: object = None   # (R, K, C) per-scenario trace (TraceBank only)
 
     def tree_flatten(self):
         return ((self.hists, self.staleness, self.selected_prev,
                  self.round, self.affinity, self.rates,
-                 self.drift_class), None)
+                 self.drift_class, self.bank), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -335,6 +336,130 @@ class Trace:
         return row, arrivals, state
 
 
+@dataclasses.dataclass(frozen=True)
+class TraceBank:
+    """Replay from a *bank* of traces: one ``(R, K, C)`` trace per
+    scenario, drawn at ``init`` off the scenario key.
+
+    :class:`Trace` replays the same deltas on every scenario lane — a
+    Monte-Carlo sweep over S scenarios then averages S copies of one
+    workload.  ``TraceBank`` holds an ``(S_bank, R, K, C)`` stack
+    (e.g. :func:`trace_bank` over per-day usage logs) and each
+    scenario's ``init`` draws one trace uniformly from the bank with
+    its own scenario key, so the sweep averages over real workload
+    variation.  The drawn trace rides in ``StreamState.bank`` — an
+    ordinary carry leaf, so the draw composes with the scenario vmap
+    and ``batch == S singles`` holds bitwise (the row choice depends
+    only on the per-scenario key, never on the batch shape).  Register
+    with data::
+
+        streaming.register_process(
+            "trace_bank", lambda: streaming.TraceBank(bank),
+            overwrite=True)
+
+    The built-in ``"trace_bank"`` registration has no data and raises
+    with this recipe.
+    """
+
+    bank: object = None          # (S_bank, R, K, C) array-like
+
+    def _array(self) -> Array:
+        if self.bank is None:
+            raise ValueError(
+                "trace_bank process has no data — register your bank "
+                "first: streaming.register_process('trace_bank', "
+                "lambda: streaming.TraceBank(bank), overwrite=True) "
+                "with an (S_bank, rounds, K, C) delta stack (see "
+                "streaming.trace_bank / usage_log_to_deltas)")
+        b = jnp.asarray(self.bank, jnp.float32)
+        if b.ndim != 4:
+            raise ValueError(f"trace bank must be (S_bank, R, K, C), "
+                             f"got shape {b.shape}")
+        return b
+
+    def init(self, key: Array, hists0: Array,
+             cfg: StreamConfig) -> StreamState:
+        del cfg
+        b = self._array()
+        if b.shape[-2:] != hists0.shape[-2:]:
+            raise ValueError(
+                f"trace bank {b.shape} does not match the (K, C) device "
+                f"histograms {hists0.shape}")
+        row_id = jax.random.randint(key, (), 0, b.shape[0])
+        st = base_state(hists0)
+        return dataclasses.replace(st, bank=jnp.take(b, row_id, axis=0))
+
+    def sample(self, key: Array, state: StreamState,
+               cfg: StreamConfig) -> Tuple[Array, Array, StreamState]:
+        del key, cfg
+        d = state.bank
+        row = jnp.take(d, state.round % d.shape[0], axis=0)
+        arrivals = jnp.sum(jnp.maximum(row, 0.0), axis=-1)
+        return row, arrivals, state
+
+
+def usage_log_to_deltas(records, num_rounds: int, num_devices: int,
+                        num_classes: int,
+                        t_start: float | None = None,
+                        t_end: float | None = None):
+    """Bucket a usage log into the ``(R, K, C)`` delta array the
+    ``trace`` / ``trace_bank`` processes replay.
+
+    ``records`` is an iterable of usage events — JSONL strings or
+    already-decoded dicts — each carrying a timestamp ``"t"``, a device
+    id ``"device"``, a class label ``"class"`` and an optional signed
+    ``"count"`` (default 1; negative counts record evictions).  The
+    span ``[t_start, t_end)`` (default: the log's own extent) is cut
+    into ``num_rounds`` equal windows and each event's count lands in
+    its window's ``(device, class)`` cell; events outside the span or
+    the device/class range are dropped.  Pure host-side numpy — runs
+    once at setup, the result closes over the compiled simulation as a
+    constant.
+    """
+    import json as _json
+    import numpy as np
+    parsed = []
+    for rec in records:
+        if isinstance(rec, (str, bytes)):
+            rec = rec.strip()
+            if not rec:
+                continue
+            rec = _json.loads(rec)
+        parsed.append((float(rec["t"]), int(rec["device"]),
+                       int(rec["class"]), float(rec.get("count", 1))))
+    deltas = np.zeros((num_rounds, num_devices, num_classes), np.float32)
+    if not parsed:
+        return deltas
+    times = np.array([p[0] for p in parsed])
+    t0 = float(times.min()) if t_start is None else float(t_start)
+    t1 = float(times.max()) if t_end is None else float(t_end)
+    span = max(t1 - t0, 1e-12)
+    for t, dev, cls, count in parsed:
+        r = int((t - t0) / span * num_rounds)
+        if t == t1 and t_end is None:
+            r = num_rounds - 1       # closed right edge of the log span
+        if not (0 <= r < num_rounds and 0 <= dev < num_devices
+                and 0 <= cls < num_classes):
+            continue
+        deltas[r, dev, cls] += count
+    return deltas
+
+
+def trace_bank(logs, num_rounds: int, num_devices: int,
+               num_classes: int, t_start: float | None = None,
+               t_end: float | None = None):
+    """Stack per-scenario usage logs into the ``(S_bank, R, K, C)``
+    array :class:`TraceBank` draws from — one
+    :func:`usage_log_to_deltas` pass per log (e.g. one log per day)."""
+    import numpy as np
+    if not logs:
+        raise ValueError("trace_bank needs at least one usage log")
+    return np.stack([
+        usage_log_to_deltas(log, num_rounds, num_devices, num_classes,
+                            t_start=t_start, t_end=t_end)
+        for log in logs])
+
+
 _PROCESSES: Dict[str, Callable[[], ArrivalProcess]] = {}
 
 
@@ -365,9 +490,11 @@ register_process("poisson", Poisson)
 register_process("drift", Drift)
 register_process("shift", Shift)
 register_process("evict", Evict)
-# Data-less placeholder: reserves the name and raises the registration
-# recipe; users overwrite it with `Trace(deltas)` bound to real data.
+# Data-less placeholders: reserve the names and raise the registration
+# recipe; users overwrite them with `Trace(deltas)` / `TraceBank(bank)`
+# bound to real data.
 register_process("trace", Trace)
+register_process("trace_bank", TraceBank)
 
 
 def refresh(hists: Array, deltas: Array, arrivals: Array,

@@ -46,6 +46,50 @@ def fedavg_agg_kernel(updates: jax.Array, weights: jax.Array,
     )(updates, weights[:, None])
 
 
+def _fedavg_stale_kernel(updates_ref, weights_ref, mask_ref, stale_ref,
+                         out_ref):
+    u = updates_ref[...].astype(jnp.float32)          # (K, BP)
+    w = weights_ref[...].astype(jnp.float32)          # (K, 1)
+    m = mask_ref[...].astype(jnp.float32)             # (K, 1)
+    s = stale_ref[...].astype(jnp.float32)            # (K, 1)
+    out_ref[...] = jnp.sum(u * (w * m * s), axis=0).astype(out_ref.dtype)
+
+
+def fedavg_agg_stale_kernel(updates: jax.Array, weights: jax.Array,
+                            mask: jax.Array, stale_w: jax.Array,
+                            block_p: int = DEFAULT_BLOCK_P,
+                            interpret: bool = True) -> jax.Array:
+    """Staleness-weighted masked FedAvg reduction (event subsystem,
+    DESIGN.md §12).
+
+    ``out[p] = sum_k w[k] * m[k] * s[k] * updates[k, p]`` — the masked
+    reduction with a per-update staleness multiplier ``s`` fused into
+    the weight load.  The buffered aggregator's flush discounts each
+    arrived update by its model-version staleness ``(1 + tau)^-gamma``;
+    at ``gamma = 0`` the multiplier row is exactly 1.0 and the kernel is
+    bitwise :func:`fedavg_agg_masked_kernel` (the synchronous-limit
+    parity contract).  No internal renormalization — callers fold the
+    staleness discount into the normalizer themselves.  Same grid/VMEM
+    mapping as the masked kernel; the third (K, 1) tile is noise
+    against the (K, BLOCK_P) update tile.
+    """
+    k, p = updates.shape
+    grid = (p // block_p,)
+    return pl.pallas_call(
+        _fedavg_stale_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, block_p), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), updates.dtype),
+        interpret=interpret,
+    )(updates, weights[:, None], mask[:, None], stale_w[:, None])
+
+
 def _fedavg_masked_kernel(updates_ref, weights_ref, mask_ref, out_ref):
     u = updates_ref[...].astype(jnp.float32)          # (K, BP)
     w = weights_ref[...].astype(jnp.float32)          # (K, 1)

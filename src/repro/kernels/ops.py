@@ -70,6 +70,28 @@ def fedavg_agg_masked(updates: jax.Array, weights: jax.Array,
     return out[:p] if pad else out
 
 
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedavg_agg_stale(updates: jax.Array, weights: jax.Array,
+                     mask: jax.Array, stale_w: jax.Array,
+                     block_p: int = _agg.DEFAULT_BLOCK_P,
+                     interpret: bool | None = None) -> jax.Array:
+    """Staleness-weighted masked FedAvg: (K, P) x (K,) x3 -> (P,).
+
+    The event subsystem's buffered-flush lane (DESIGN.md §12): the
+    masked aggregation with each update additionally discounted by its
+    model-version staleness multiplier ``stale_w``.  Same padding and
+    tiling as :func:`fedavg_agg_masked`; an all-ones ``stale_w`` is
+    bitwise the masked kernel (synchronous-limit contract).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    k, p = updates.shape
+    bp = min(block_p, max(128, 1 << (p - 1).bit_length()))
+    padded, pad = _pad_to(updates, 1, bp)
+    out = _agg.fedavg_agg_stale_kernel(padded, weights, mask, stale_w,
+                                       block_p=bp, interpret=interpret)
+    return out[:p] if pad else out
+
+
 # Test/observability hook: counts how many times the batched-lane vmap
 # rule below was traced.  A vmap of the single-instance `sub2_pgd` entry
 # (the batched FEEL driver) is wired straight onto the kernel's (S, K)
@@ -80,8 +102,8 @@ BATCHED_LANE_TRACES = 0
 
 @functools.lru_cache(maxsize=32)
 def _sub2_pgd_entry(rho: float, lr: float, tau: float, iters: int,
-                    bandwidth_hz: float, model_bits: float,
-                    min_alpha: float, proj_iters: int, interpret: bool):
+                    bandwidth_hz: float, min_alpha: float,
+                    proj_iters: int, interpret: bool):
     """Single-instance kernel entry with a custom vmap rule.
 
     The plain path launches the kernel with a length-1 grid.  Under
@@ -91,27 +113,29 @@ def _sub2_pgd_entry(rho: float, lr: float, tau: float, iters: int,
     directly, so the scenario axis maps 1:1 onto kernel grid steps
     instead of being reconstructed by the generic pallas batching rule.
     Cached per static-parameter tuple so repeat solves reuse one
-    custom-vmap object (and jax's trace cache).
+    custom-vmap object (and jax's trace cache).  Payload bits ride as a
+    ``(K,)`` operand row (not a static), so per-device compressed
+    payloads keep this fused lane.
     """
     kern = functools.partial(
         _pgd.sub2_pgd_kernel, rho=rho, lr=lr, tau=tau, iters=iters,
-        bandwidth_hz=bandwidth_hz, model_bits=model_bits,
-        min_alpha=min_alpha, proj_iters=proj_iters, interpret=interpret)
+        bandwidth_hz=bandwidth_hz, min_alpha=min_alpha,
+        proj_iters=proj_iters, interpret=interpret)
 
     @jax.custom_batching.custom_vmap
-    def single(selected, t_train, c, tx_power, alpha0):
+    def single(selected, t_train, c, tx_power, bits, alpha0):
         alpha, obj = kern(selected[None], t_train[None], c[None],
-                          tx_power[None], alpha0[None])
+                          tx_power[None], bits[None], alpha0[None])
         return alpha[0], obj[0]
 
     @single.def_vmap
     def _batched_lane(axis_size, in_batched, selected, t_train, c,
-                      tx_power, alpha0):
+                      tx_power, bits, alpha0):
         global BATCHED_LANE_TRACES
         BATCHED_LANE_TRACES += 1
         args = [x if b else jnp.broadcast_to(x, (axis_size,) + x.shape)
-                for x, b in zip((selected, t_train, c, tx_power, alpha0),
-                                in_batched)]
+                for x, b in zip((selected, t_train, c, tx_power, bits,
+                                 alpha0), in_batched)]
         alpha, obj = kern(*args)
         return (alpha, obj), (True, True)
 
@@ -121,7 +145,7 @@ def _sub2_pgd_entry(rho: float, lr: float, tau: float, iters: int,
 def sub2_pgd(selected: jax.Array, t_train: jax.Array, gains: jax.Array,
              tx_power: jax.Array, alpha0: jax.Array, *, rho: float,
              lr: float, tau: float, iters: int, bandwidth_hz: float,
-             noise_psd: float, model_bits: float, min_alpha: float,
+             noise_psd: float, model_bits, min_alpha: float,
              proj_iters: int = _pgd.DEFAULT_PROJ_ITERS,
              interpret: bool | None = None
              ) -> tuple[jax.Array, jax.Array]:
@@ -133,6 +157,12 @@ def sub2_pgd(selected: jax.Array, t_train: jax.Array, gains: jax.Array,
     (S,)).  ``alpha0`` stacks the two starting points (water-filling, uniform); gains/power fold into the SNR coefficient
     c = g*P/(B*N0) here so the kernel sees one coefficient row.
 
+    ``model_bits`` may be a Python/0-d scalar (nominal model size) or a
+    per-device ``(K,)`` / ``(S, K)`` payload-bits array (compressed
+    uplinks, DESIGN.md §9) — either way it is materialized to a bits
+    row and fed to the kernel as an operand, so the fused lane survives
+    per-device payloads.
+
     The single-instance entry carries a custom vmap rule: a ``vmap``
     over it (the batched FEEL driver) launches the (S, K) kernel grid
     directly (see :func:`_sub2_pgd_entry`).
@@ -140,14 +170,15 @@ def sub2_pgd(selected: jax.Array, t_train: jax.Array, gains: jax.Array,
     interpret = _default_interpret() if interpret is None else interpret
     c = gains * tx_power / (bandwidth_hz * noise_psd)
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
-    args = (f32(selected), f32(t_train), f32(c), f32(tx_power), f32(alpha0))
+    bits = jnp.broadcast_to(f32(model_bits), selected.shape)
+    args = (f32(selected), f32(t_train), f32(c), f32(tx_power), bits,
+            f32(alpha0))
     if selected.ndim == 2:
         return _pgd.sub2_pgd_kernel(
             *args, rho=rho, lr=lr, tau=tau, iters=iters,
-            bandwidth_hz=bandwidth_hz, model_bits=model_bits,
-            min_alpha=min_alpha, proj_iters=proj_iters,
-            interpret=interpret)
-    entry = _sub2_pgd_entry(rho, lr, tau, iters, bandwidth_hz, model_bits,
+            bandwidth_hz=bandwidth_hz, min_alpha=min_alpha,
+            proj_iters=proj_iters, interpret=interpret)
+    entry = _sub2_pgd_entry(rho, lr, tau, iters, bandwidth_hz,
                             min_alpha, proj_iters, interpret)
     return entry(*args)
 

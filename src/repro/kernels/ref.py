@@ -32,6 +32,22 @@ def fedavg_agg_masked(updates: jax.Array, weights: jax.Array,
     return out.astype(updates.dtype)
 
 
+def fedavg_agg_stale(updates: jax.Array, weights: jax.Array,
+                     mask: jax.Array, stale_w: jax.Array) -> jax.Array:
+    """(K, P), (K,), (K,), (K,) -> (P,): staleness-weighted masked sum.
+
+    Mirrors ``fedavg_agg_stale_kernel`` exactly: mask and staleness
+    multiplier both fold into the weights *before* the reduction, no
+    renormalization — an all-ones staleness row reproduces
+    :func:`fedavg_agg_masked` bit for bit (the event subsystem's
+    synchronous-limit property test).
+    """
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32) \
+        * stale_w.astype(jnp.float32)
+    out = jnp.einsum("kp,k->p", updates.astype(jnp.float32), w)
+    return out.astype(updates.dtype)
+
+
 def diversity(labels: jax.Array, mask: jax.Array,
               num_classes: int) -> jax.Array:
     """(K, N) labels/mask -> (K, 3) [gini, shannon, count]."""
@@ -171,10 +187,14 @@ def sub2_pgd(selected: jax.Array, t_train: jax.Array,
              snr_coeff: jax.Array, tx_power: jax.Array,
              alpha0: jax.Array, *, rho: float, lr: float, tau: float,
              iters: int, bandwidth_hz: float, min_alpha: float,
-             model_bits: float,
+             model_bits,
              proj_iters: int = 32) -> tuple[jax.Array, jax.Array]:
     """Single-instance fused-PGD oracle: (K,) rows + (2, K) starts ->
     ((K,) alpha, () objective).
+
+    ``model_bits`` is a scalar nominal model size or a per-device
+    ``(K,)`` payload-bits row — every use is elementwise, matching the
+    kernel's bits operand lane.
 
     Same contract as ``sub2_pgd_kernel`` (tangent step with cosine lr,
     theta-bisection simplex projection, exact-objective best tracking

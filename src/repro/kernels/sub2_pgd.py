@@ -10,7 +10,8 @@ intermediates through HBM; here the (K,) problem state lives in
 registers/VMEM for the whole descent.
 
 TPU mapping: grid over the scenario axis S; each program owns one
-instance — mask/t_train/SNR-coefficient/power rows of (K,) plus a (2, K)
+instance — mask/t_train/SNR-coefficient/power/payload-bits rows of (K,)
+plus a (2, K)
 block of starting points (water-filling, uniform).  K <= 1024 devices x a handful of (2, K) f32 temps is a few
 KB of VMEM — the kernel is compute-bound on the VPU transcendentals
 (log1p per rate eval), which is exactly what fusing is for.  The simplex
@@ -37,15 +38,15 @@ N_STARTS = 2          # water-filling + (warm start | uniform)
 DEFAULT_PROJ_ITERS = 32
 
 
-def _sub2_pgd_kernel(sel_ref, tt_ref, c_ref, pw_ref, a0_ref,
+def _sub2_pgd_kernel(sel_ref, tt_ref, c_ref, pw_ref, bits_ref, a0_ref,
                      alpha_ref, obj_ref, *, rho: float, lr: float,
                      tau: float, iters: int, bandwidth_hz: float,
-                     model_bits: float, min_alpha: float,
-                     proj_iters: int):
+                     min_alpha: float, proj_iters: int):
     mask = sel_ref[0]                                  # (K,)
     tt = tt_ref[0]
     c = c_ref[0]
     pw = pw_ref[0]
+    bits = bits_ref[0]                                 # (K,) payload bits
     a0 = a0_ref[0]                                     # (N_STARTS, K)
     n_act = jnp.maximum(jnp.sum(mask), 1.0)
     any_act = jnp.sum(mask) > 0.5
@@ -56,7 +57,7 @@ def _sub2_pgd_kernel(sel_ref, tt_ref, c_ref, pw_ref, a0_ref,
         ae = jnp.maximum(av, min_alpha)
         rate = scale * ae * jnp.log1p(c / ae)
         return jnp.where(mask > 0.0,
-                         model_bits / jnp.maximum(rate, 1e-12), 0.0)
+                         bits / jnp.maximum(rate, 1e-12), 0.0)
 
     def exact_obj(av):                                 # (n, K) -> (n,)
         tu = upload(av)
@@ -76,8 +77,8 @@ def _sub2_pgd_kernel(sel_ref, tt_ref, c_ref, pw_ref, a0_ref,
         l = jnp.log1p(c / ae)
         rate = jnp.maximum(scale * ae * l, 1e-12)
         slope = scale * (l - c / (ae + c))
-        tu = jnp.where(mask > 0.0, model_bits / rate, 0.0)
-        dtu = -model_bits * slope / (rate * rate)
+        tu = jnp.where(mask > 0.0, bits / rate, 0.0)
+        dtu = -bits * slope / (rate * rate)
         tot = jnp.where(mask > 0.0, tt + tu, 0.0)
         w = jax.nn.softmax(tot / tau, axis=-1)
         g = (rho * pw + (1.0 - rho) * w) * dtu * mask
@@ -132,15 +133,18 @@ def _sub2_pgd_kernel(sel_ref, tt_ref, c_ref, pw_ref, a0_ref,
 
 def sub2_pgd_kernel(selected: jax.Array, t_train: jax.Array,
                     snr_coeff: jax.Array, tx_power: jax.Array,
+                    payload_bits: jax.Array,
                     alpha0: jax.Array, *, rho: float, lr: float,
                     tau: float, iters: int, bandwidth_hz: float,
-                    model_bits: float, min_alpha: float,
+                    min_alpha: float,
                     proj_iters: int = DEFAULT_PROJ_ITERS,
                     interpret: bool = True
                     ) -> tuple[jax.Array, jax.Array]:
     """Batched fused PGD: (S, K) instance rows -> ((S, K) alpha, (S,) obj).
 
-    ``snr_coeff`` is c = g*P / (B*N0); ``alpha0`` is (S, N_STARTS, K).
+    ``snr_coeff`` is c = g*P / (B*N0); ``payload_bits`` is the per-device
+    (S, K) uplink payload (the scalar ``model_bits`` broadcast when no
+    codec reshapes it); ``alpha0`` is (S, N_STARTS, K).
     """
     s, k = selected.shape
     if alpha0.shape != (s, N_STARTS, k):
@@ -148,17 +152,17 @@ def sub2_pgd_kernel(selected: jax.Array, t_train: jax.Array,
                          f"{alpha0.shape}")
     kern = functools.partial(
         _sub2_pgd_kernel, rho=rho, lr=lr, tau=tau, iters=iters,
-        bandwidth_hz=bandwidth_hz, model_bits=model_bits,
-        min_alpha=min_alpha, proj_iters=proj_iters)
+        bandwidth_hz=bandwidth_hz, min_alpha=min_alpha,
+        proj_iters=proj_iters)
     row = pl.BlockSpec((1, k), lambda i: (i, 0))
     alpha, obj = pl.pallas_call(
         kern,
         grid=(s,),
-        in_specs=[row, row, row, row,
+        in_specs=[row, row, row, row, row,
                   pl.BlockSpec((1, N_STARTS, k), lambda i: (i, 0, 0))],
         out_specs=[row, pl.BlockSpec((1, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((s, k), jnp.float32),
                    jax.ShapeDtypeStruct((s, 1), jnp.float32)],
         interpret=interpret,
-    )(selected, t_train, snr_coeff, tx_power, alpha0)
+    )(selected, t_train, snr_coeff, tx_power, payload_bits, alpha0)
     return alpha, obj[:, 0]

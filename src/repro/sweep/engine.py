@@ -368,7 +368,7 @@ class SweepEngine:
         With ``spec.ci_target > 0`` the chunk loop stops early once the
         final-accuracy CI half-width reaches the target."""
         if agg is None:
-            agg = aggregate_init(point.fl.num_rounds)
+            agg = aggregate_init(federated.sim_length(point.fl))
         base = self.spec.scenario_start(point.index)
         for off, size in self.spec.point_chunks():
             if off > 0 and point_converged(agg, self.spec.ci_target):

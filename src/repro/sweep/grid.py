@@ -38,14 +38,14 @@ from typing import Any, List, Tuple
 from repro.core import federated, scheduler, wireless
 
 # Axis targets -> which base config the field override applies to.
-TARGETS = ("fl", "sched", "wireless", "stream", "comp", "fault")
+TARGETS = ("fl", "sched", "wireless", "stream", "comp", "fault", "async")
 
 
 @dataclasses.dataclass(frozen=True)
 class Axis:
     """One swept dimension: ``target.field`` ranging over ``values``."""
 
-    target: str            # fl | sched | wireless | stream | comp | fault
+    target: str    # fl | sched | wireless | stream | comp | fault | async
     field: str
     values: Tuple[Any, ...]
 
@@ -108,7 +108,7 @@ def _apply(fl: federated.FLConfig, sched: scheduler.SchedulerConfig,
             fl = dataclasses.replace(
                 fl, compression=dataclasses.replace(fl.compression,
                                                     **{field: value}))
-        else:  # fault
+        elif target == "fault":
             if fl.faults is None:
                 raise ValueError(
                     f"axis fault.{field}: base FLConfig.faults is None "
@@ -117,6 +117,18 @@ def _apply(fl: federated.FLConfig, sched: scheduler.SchedulerConfig,
             _check_field(fl.faults, target, field)
             fl = dataclasses.replace(
                 fl, faults=dataclasses.replace(fl.faults,
+                                               **{field: value}))
+        else:  # async
+            if fl.events is None:
+                raise ValueError(
+                    f"axis async.{field}: base FLConfig.events is None "
+                    f"(set an EventConfig to sweep event-scan knobs; "
+                    f"for sync-vs-async itself use "
+                    f"Axis(target='fl', field='events', "
+                    f"values=(None, EventConfig(...))))")
+            _check_field(fl.events, target, field)
+            fl = dataclasses.replace(
+                fl, events=dataclasses.replace(fl.events,
                                                **{field: value}))
     return fl, sched, wcfg
 

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.checkpoint import msgpack_ckpt
+from repro.core import federated
 from repro.sweep import engine as engine_lib
 from repro.sweep import grid as grid_lib
 
@@ -176,6 +177,13 @@ class SweepRunner:
             # different target would silently mix populations.
             "target_accuracy": self.engine.target_accuracy,
             "total_chunks": len(self._schedule),
+            # Arity of the per-round metric tuple folded into the
+            # Welford aggregates: adding/removing a round metric
+            # changes the aggregate pytree structure, and resuming an
+            # old checkpoint would crash deep inside the fold with a
+            # pytree-structure error.  Stamping it here turns that
+            # into the loud schema check in :meth:`_load`.
+            "round_metrics_arity": len(engine_lib.ROUND_METRICS),
             "point_names": {str(p.index): p.name
                             for p in self._points},
         })
@@ -187,6 +195,17 @@ class SweepRunner:
             raise ValueError(
                 f"{self.ckpt_path}: sweep state version {version} != "
                 f"supported {STATE_VERSION}")
+        arity = meta.get("round_metrics_arity", -1)
+        if arity != len(engine_lib.ROUND_METRICS):
+            raise ValueError(
+                f"{self.ckpt_path}: checkpoint was written with "
+                f"{'an unstamped' if arity < 0 else arity} round-metric "
+                f"arity but this build folds "
+                f"{len(engine_lib.ROUND_METRICS)} per-round metrics "
+                f"({', '.join(engine_lib.ROUND_METRICS)}) — the Welford "
+                f"aggregate layout changed, so this checkpoint cannot "
+                f"be resumed.  Delete it (or point ckpt_path elsewhere) "
+                f"and re-run the sweep from scratch.")
         if meta.get("fingerprint") != self.spec.fingerprint():
             raise ValueError(
                 f"{self.ckpt_path}: checkpoint was written for a "
@@ -233,7 +252,8 @@ class SweepRunner:
                 agg, self.spec.ci_target)
             if not skipped:
                 if agg is None:
-                    agg = engine_lib.aggregate_init(point.fl.num_rounds)
+                    agg = engine_lib.aggregate_init(
+                        federated.sim_length(point.fl))
                 agg = self.engine.run_chunk(point, start, size, agg)
                 aggs[point_idx] = agg
                 # Skips are free — only real compute draws down the

@@ -1,0 +1,342 @@
+"""Event-driven asynchronous FEEL tests (DESIGN.md §12): availability
+processes, the staleness-weighted buffered flush and its Pallas lane,
+the synchronous-limit bitwise contract across subsystem compositions,
+batch==singles parity, and the async sweep axis."""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (compression, events, faults, federated,
+                        scheduler, streaming, wireless)
+from repro.data import partition, synthetic
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import paper_nets
+from repro.sweep import grid as grid_lib
+
+
+# ---------------------------------------------------------------------------
+# Fixtures: one tiny world shared module-wide (compiles dominate runtime)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world():
+    imgs, labs = synthetic.generate(0, samples_per_class=200)
+    data = partition.partition(
+        imgs, labs, seed=1,
+        spec=partition.PartitionSpec(num_devices=8, num_shards=36,
+                                     shard_size=50))
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=8)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    loss = functools.partial(paper_nets.loss_fn, spec=mspec)
+    ev = functools.partial(paper_nets.accuracy, spec=mspec)
+    return data, params, loss, ev
+
+
+WCFG = wireless.WirelessConfig()
+SCFG = scheduler.SchedulerConfig(method="das", n_min=2, iterations_max=3,
+                                 reliability_weight=0.4)
+FL = federated.FLConfig(num_rounds=3, batch_size=50, learning_rate=0.1)
+# Active-but-harmless fault config: no channel ever fires (ok ==
+# selected, airtime multiplier exactly 1.0), yet the *fault-aware*
+# aggregation path — update form over the success mask, reliability EMA
+# in the carry — is the one traced.  That is the path the
+# synchronous-limit contract targets.
+HARMLESS = faults.FaultConfig(reliability_ema=0.3)
+
+
+def _run_kwargs(world):
+    data, params, loss, ev = world
+    net = wireless.sample_network(jax.random.key(0), data.num_devices,
+                                  WCFG)
+    return dict(init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+                net=net, wcfg=WCFG, scfg=SCFG, key=jax.random.key(42))
+
+
+def _same_tree(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _assert_history_equal(ha, hb):
+    for a, b in zip(ha, hb):
+        assert a.accuracy == b.accuracy
+        assert a.round_time == b.round_time
+        assert a.energy_total == b.energy_total
+        assert a.n_selected == b.n_selected
+        assert a.n_success == b.n_success
+        assert np.array_equal(a.selected, b.selected)
+
+
+# ---------------------------------------------------------------------------
+# EventConfig validation and the availability-process registry
+# ---------------------------------------------------------------------------
+
+def test_event_config_validation(world):
+    data, params, loss, ev = world
+
+    def _build(ecfg):
+        events.make_event_sim(
+            loss_fn=loss, eval_fn=ev, wcfg=WCFG, scfg=SCFG,
+            fcfg=dataclasses.replace(FL, events=ecfg),
+            capacity=data.capacity)
+
+    with pytest.raises(ValueError, match="buffer_size"):
+        _build(events.EventConfig(buffer_size=0))
+    with pytest.raises(ValueError, match="tick_horizon"):
+        _build(events.EventConfig(tick_horizon=-0.5))
+    with pytest.raises(ValueError, match="unknown availability"):
+        _build(events.EventConfig(availability="no_such_process"))
+    with pytest.raises(ValueError, match="events is None"):
+        events.make_event_sim(
+            loss_fn=loss, eval_fn=ev, wcfg=WCFG, scfg=SCFG, fcfg=FL,
+            capacity=data.capacity)
+
+
+def test_availability_registry():
+    names = events.availability_names()
+    assert {"always", "churn", "diurnal"} <= set(names)
+    with pytest.raises(ValueError, match="unknown availability"):
+        events.get_availability("no_such_process")
+    with pytest.raises(ValueError, match="already registered"):
+        events.register_availability("always", events.AlwaysOn)
+
+
+@pytest.mark.parametrize("name", ["always", "churn", "diurnal"])
+def test_availability_process_shapes_and_determinism(name):
+    cfg = events.EventConfig(availability=name, avail_prob=0.6,
+                             duty=0.4)
+    proc = events.get_availability(name)
+    k = 8
+    state = proc.init(jax.random.key(1), k, cfg)
+    assert state.shape == (k,)
+    mask = proc.sample(jax.random.key(2), state,
+                       jnp.asarray(3, jnp.int32), cfg)
+    assert mask.shape == (k,)
+    mn = np.asarray(mask)
+    assert np.all((mn == 0.0) | (mn == 1.0))
+    # Deterministic given (key, state, tick).
+    np.testing.assert_array_equal(
+        mn, np.asarray(proc.sample(jax.random.key(2), state,
+                                   jnp.asarray(3, jnp.int32), cfg)))
+    if name == "always":
+        assert np.all(mn == 1.0)
+
+
+def test_diurnal_duty_sets_mean_availability():
+    """The sinusoidal level is rescaled so its cycle mean is ``duty``
+    (exact for duty <= 0.5)."""
+    proc = events.get_availability("diurnal")
+    means = {}
+    for duty in (0.2, 0.5):
+        cfg = events.EventConfig(availability="diurnal", duty=duty,
+                                 period=24.0, phase_spread=0.3)
+        state = proc.init(jax.random.key(7), 64, cfg)
+        total = 0.0
+        for t in range(48):                 # two full cycles
+            m = proc.sample(jax.random.fold_in(jax.random.key(8), t),
+                            state, jnp.asarray(t, jnp.int32), cfg)
+            total += float(jnp.mean(m))
+        means[duty] = total / 48
+    assert abs(means[0.2] - 0.2) < 0.08
+    assert abs(means[0.5] - 0.5) < 0.08
+    assert means[0.2] < means[0.5]
+
+
+# ---------------------------------------------------------------------------
+# Staleness weighting: closed form + the Pallas lane vs the einsum oracle
+# ---------------------------------------------------------------------------
+
+def test_staleness_multiplier_closed_form():
+    tau = jnp.asarray([0.0, 1.0, 3.0, 7.0], jnp.float32)
+    # decay == 0 is *exact* ones — no pow in the traced program, which
+    # is what keeps the zero-decay flush bitwise synchronous.
+    np.testing.assert_array_equal(
+        np.asarray(events.staleness_multiplier(tau, 0.0)),
+        np.ones(4, np.float32))
+    got = np.asarray(events.staleness_multiplier(tau, 0.7))
+    np.testing.assert_allclose(
+        got, (1.0 + np.asarray(tau)) ** -0.7, rtol=1e-6)
+    assert np.all(np.diff(got) < 0.0)       # staler -> lighter
+
+
+@pytest.mark.parametrize("k,p", [(4, 64), (8, 1000), (16, 4096)])
+def test_fedavg_agg_stale_kernel_matches_ref(k, p):
+    u = jax.random.normal(jax.random.key(k * 100 + p), (k, p))
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(1), (k,)))
+    m = (jax.random.uniform(jax.random.key(2), (k,)) > 0.4
+         ).astype(jnp.float32)
+    s = events.staleness_multiplier(
+        jax.random.randint(jax.random.key(3), (k,), 0, 5
+                           ).astype(jnp.float32), 0.5)
+    got = kernel_ops.fedavg_agg_stale(u, w, m, s)
+    want = kernel_ref.fedavg_agg_stale(u, w, m, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_agg_stale_all_ones_bitwise_equals_masked():
+    """An all-ones staleness row IS the masked kernel: w * m * 1.0 ==
+    w * m in f32, no renormalization inside the kernel — the reduction
+    identity the synchronous-limit contract leans on."""
+    u = jax.random.normal(jax.random.key(5), (9, 1536))
+    w = jax.nn.softmax(jax.random.normal(jax.random.key(6), (9,)))
+    m = (jax.random.uniform(jax.random.key(7), (9,)) > 0.3
+         ).astype(jnp.float32)
+    ones = jnp.ones((9,), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(kernel_ops.fedavg_agg_stale(u, w, m, ones)),
+        np.asarray(kernel_ops.fedavg_agg_masked(u, w, m)))
+    np.testing.assert_array_equal(
+        np.asarray(kernel_ref.fedavg_agg_stale(u, w, m, ones)),
+        np.asarray(kernel_ref.fedavg_agg_masked(u, w, m)))
+
+
+# ---------------------------------------------------------------------------
+# The synchronous-limit contract: default EventConfig == sync driver,
+# bitwise, across every subsystem composition
+# ---------------------------------------------------------------------------
+
+_QUANT = compression.CompressionConfig(codec="quant", bit_width=4)
+_STREAM = streaming.StreamConfig(rate=6.0)
+
+SYNC_LIMIT_CASES = {
+    "plain": {},
+    "compressed": dict(compression=_QUANT),
+    "streaming": dict(stream=_STREAM),
+    "dispatch_cap": dict(dispatch_cap=3),
+    "kernel_agg": dict(use_kernel_agg=True),
+    "combined_bf16": dict(compression=_QUANT, stream=_STREAM,
+                          dispatch_cap=3, carry_dtype="bfloat16"),
+}
+
+
+@pytest.mark.parametrize("case", sorted(SYNC_LIMIT_CASES))
+def test_sync_limit_bitwise(world, case):
+    """EventConfig() — always-on availability, buffer_size 1, zero
+    staleness decay, whole-cohort ticks — reproduces the synchronous
+    driver bit for bit (params AND every per-round metric), with each
+    subsystem riding along."""
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(FL, faults=HARMLESS,
+                             **SYNC_LIMIT_CASES[case])
+    p_sync, h_sync = federated.run_federated(fcfg=fl, **kw)
+    p_evt, h_evt = federated.run_federated(
+        fcfg=dataclasses.replace(fl, events=events.EventConfig()), **kw)
+    assert _same_tree(p_sync, p_evt)
+    _assert_history_equal(h_sync, h_evt)
+
+
+def test_sync_limit_bitwise_under_live_faults(world):
+    """The contract holds when faults actually fire (drops, retries,
+    stragglers): the event scan recomputes apply_faults' timing
+    expressions op-for-op."""
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(FL, faults=faults.FaultConfig(
+        drop_prob=0.35, max_retries=2, backoff_base=0.5,
+        straggler_prob=0.3, straggler_scale=3.0, dropout_prob=0.1,
+        reliability_ema=0.3, overprovision=1))
+    p_sync, h_sync = federated.run_federated(fcfg=fl, **kw)
+    p_evt, h_evt = federated.run_federated(
+        fcfg=dataclasses.replace(fl, events=events.EventConfig()), **kw)
+    assert _same_tree(p_sync, p_evt)
+    _assert_history_equal(h_sync, h_evt)
+    assert any(r.n_success < r.n_selected for r in h_sync)
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous mode: buffered flushes, staleness, availability gating
+# ---------------------------------------------------------------------------
+
+def test_async_mode_runs_and_stamps_horizon(world):
+    kw = _run_kwargs(world)
+    ecfg = events.EventConfig(availability="diurnal", duty=0.6,
+                              buffer_size=2, staleness_decay=0.5,
+                              tick_horizon=0.05, num_events=6)
+    fl = dataclasses.replace(FL, faults=HARMLESS, events=ecfg)
+    p, h = federated.run_federated(fcfg=fl, **kw)
+    # num_events overrides num_rounds as the scan length, and a fixed
+    # horizon means every event advances the clock by exactly that much.
+    assert len(h) == 6
+    assert all(np.isclose(r.round_time, 0.05) for r in h)
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(p)]
+    assert all(np.isfinite(l).all() for l in leaves)
+    assert all(np.isfinite(r.accuracy) for r in h)
+
+
+def test_event_batch_matches_singles(world):
+    """vmapped event scan == S independent single-scenario runs,
+    bitwise, in full async mode (diurnal churn, buffered flushes,
+    staleness discount, short horizon)."""
+    data, params, loss, ev = world
+    ecfg = events.EventConfig(availability="diurnal", duty=0.6,
+                              buffer_size=2, staleness_decay=0.5,
+                              tick_horizon=0.03, num_events=4)
+    fl = dataclasses.replace(FL, faults=HARMLESS, events=ecfg)
+    s = 2
+    nets = wireless.sample_networks(jax.random.key(5), s,
+                                    data.num_devices, WCFG)
+    keys = federated.scenario_keys(jax.random.key(9), 0, s)
+    p_b, m_b = federated.run_federated_batch(
+        fcfg=fl, init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+        nets=nets, wcfg=WCFG, scfg=SCFG, keys=keys)
+    recs = federated.batch_metrics_to_records(m_b)
+    for i in range(s):
+        net_i = jax.tree_util.tree_map(lambda a, i=i: a[i], nets)
+        p_i, h_i = federated.run_federated(
+            fcfg=fl, init_params=params, loss_fn=loss, eval_fn=ev,
+            data=data, net=net_i, wcfg=WCFG, scfg=SCFG, key=keys[i])
+        assert _same_tree(
+            p_i, jax.tree_util.tree_map(lambda a, i=i: a[i], p_b))
+        _assert_history_equal(h_i, recs[i])
+
+
+def test_run_federated_loop_refuses_events(world):
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(FL, events=events.EventConfig())
+    with pytest.raises(ValueError, match="legacy per-round loop"):
+        federated.run_federated_loop(fcfg=fl, **kw)
+
+
+def test_sim_length():
+    assert federated.sim_length(FL) == 3
+    assert federated.sim_length(dataclasses.replace(
+        FL, events=events.EventConfig())) == 3
+    assert federated.sim_length(dataclasses.replace(
+        FL, events=events.EventConfig(num_events=7))) == 7
+
+
+# ---------------------------------------------------------------------------
+# Sweep integration: the async axis
+# ---------------------------------------------------------------------------
+
+def test_async_axis_requires_event_config():
+    spec = grid_lib.SweepSpec(
+        fl=FL, sched=SCFG, wireless=WCFG,
+        axes=(grid_lib.Axis("async", "staleness_decay", (0.0, 0.5)),))
+    with pytest.raises(ValueError, match="async.staleness_decay"):
+        spec.expand()
+
+
+def test_async_axis_expands_event_knobs():
+    spec = grid_lib.SweepSpec(
+        fl=dataclasses.replace(FL, events=events.EventConfig()),
+        sched=SCFG, wireless=WCFG,
+        axes=(grid_lib.Axis("async", "staleness_decay", (0.0, 0.5)),))
+    points = spec.expand()
+    assert [p.fl.events.staleness_decay for p in points] == [0.0, 0.5]
+    # Sync-vs-async itself rides the generic fl axis.
+    spec2 = grid_lib.SweepSpec(
+        fl=FL, sched=SCFG, wireless=WCFG,
+        axes=(grid_lib.Axis(
+            "fl", "events",
+            (None, events.EventConfig(tick_horizon=0.05))),))
+    pts = spec2.expand()
+    assert pts[0].fl.events is None
+    assert pts[1].fl.events.tick_horizon == 0.05

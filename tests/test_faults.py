@@ -511,3 +511,60 @@ def test_jsonl_rewind_tolerates_torn_and_nondict_lines(fault_engine,
     lines = [json.loads(ln) for ln in open(jl)]
     assert [ln["cursor"] for ln in lines] == \
         list(range(1, len(fault_engine.spec.schedule()) + 1))
+
+
+# ---------------------------------------------------------------------------
+# Chronic per-device drop rates (persistent signal for the reliability EMA)
+# ---------------------------------------------------------------------------
+
+def test_chronic_rates_gating_shape_and_closed_form():
+    key = jax.random.key(11)
+    # Either knob at zero gates the feature off entirely (None -> the
+    # scalar i.i.d. path, bitwise unchanged).
+    assert faults.chronic_rates(key, 8, faults.FaultConfig(
+        drop_prob=0.0, chronic_spread=1.0)) is None
+    assert faults.chronic_rates(key, 8, faults.FaultConfig(
+        drop_prob=0.35, chronic_spread=0.0)) is None
+    cfg = faults.FaultConfig(drop_prob=0.35, chronic_spread=1.0)
+    r = faults.chronic_rates(key, 8, cfg)
+    assert r.shape == (8,)
+    rn = np.asarray(r)
+    assert np.all((rn >= 0.0) & (rn <= 1.0))
+    assert np.std(rn) > 0.0                  # actually heterogeneous
+    # Deterministic given the scenario key.
+    np.testing.assert_array_equal(
+        rn, np.asarray(faults.chronic_rates(key, 8, cfg)))
+    # Mean-preserving log-normal: rate_k = p * exp(s z_k - s^2/2).
+    z = np.asarray(jax.random.normal(key, (8,)))
+    np.testing.assert_allclose(
+        rn, np.clip(0.35 * np.exp(1.0 * z - 0.5), 0.0, 1.0), rtol=1e-6)
+
+
+def test_chronic_spread_noop_without_drop_prob(world):
+    """chronic_spread on a config whose drop_prob is zero must be a
+    bitwise no-op — the gate returns None, not a (K,) field of zeros."""
+    kw = _run_kwargs(world)
+    base = dataclasses.replace(FULL_FAULTS, drop_prob=0.0)
+    p0, h0 = federated.run_federated(fcfg=dataclasses.replace(
+        FL, faults=base), **kw)
+    p1, h1 = federated.run_federated(fcfg=dataclasses.replace(
+        FL, faults=dataclasses.replace(base, chronic_spread=2.0)), **kw)
+    assert _same_tree(p0, p1)
+    _assert_history_equal(h0, h1)
+
+
+def test_chronic_scan_matches_loop(world):
+    """Scan==legacy parity holds with the once-per-scenario (K,) rate
+    field threaded through both drivers."""
+    kw = _run_kwargs(world)
+    fl = dataclasses.replace(FL, faults=dataclasses.replace(
+        FULL_FAULTS, chronic_spread=1.2))
+    p_scan, h_scan = federated.run_federated(fcfg=fl, **kw)
+    p_loop, h_loop = federated.run_federated_loop(fcfg=fl, **kw)
+    assert _same_tree(p_scan, p_loop)
+    _assert_history_equal(h_scan, h_loop)
+    # Chronic rates perturb the draw stream: results differ from the
+    # i.i.d. configuration (the feature is not silently inert).
+    p_iid, _ = federated.run_federated(
+        fcfg=dataclasses.replace(FL, faults=FULL_FAULTS), **kw)
+    assert not _same_tree(p_scan, p_iid)

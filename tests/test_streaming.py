@@ -499,7 +499,11 @@ def test_trace_process_traceable_and_vmappable():
     np.testing.assert_array_equal(np.asarray(d_v), deltas)
 
 
-def test_trace_placeholder_registration_raises_with_recipe():
+def test_trace_registration_with_real_deltas_end_to_end(stream_world):
+    """The built-in ``"trace"`` name accepts a real delta array via the
+    documented overwrite recipe and drives the scan driver; the
+    data-less placeholder (and a wrong-rank array) still raise the
+    recipe.  Replaces the placeholder-only registration test."""
     assert "trace" in streaming.process_names()
     proc = streaming.get_process("trace")
     with pytest.raises(ValueError, match="register_process"):
@@ -509,6 +513,140 @@ def test_trace_placeholder_registration_raises_with_recipe():
         streaming.Trace(np.ones((4, 3))).init(
             jax.random.key(0), jnp.ones((4, 3)),
             streaming.StreamConfig(process="trace"))
+    data, net, params, loss, ev = stream_world
+    k = data.num_devices
+    deltas = np.zeros((3, k, 10), np.float32)
+    deltas[0, :, 1] = 25.0
+    deltas[1, :, 7] = 10.0
+    streaming.register_process(
+        "trace", lambda: streaming.Trace(deltas), overwrite=True)
+    try:
+        fcfg = federated.FLConfig(
+            num_rounds=3, batch_size=50, learning_rate=0.1,
+            stream=streaming.StreamConfig(process="trace"))
+        scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                         iterations_max=3)
+        p, hist = federated.run_federated(
+            init_params=params, loss_fn=loss, eval_fn=ev, data=data,
+            net=net, wcfg=WCFG, scfg=scfg, fcfg=fcfg,
+            key=jax.random.key(4))
+        assert len(hist) == 3
+        assert all(np.isfinite(r.round_time) for r in hist)
+    finally:
+        # restore the data-less placeholder for other tests
+        streaming.register_process("trace", streaming.Trace,
+                                   overwrite=True)
+
+
+def test_usage_log_to_deltas_buckets_counts():
+    """JSONL usage records bucket into (R, K, C): window assignment by
+    timestamp, signed counts accumulate, out-of-range events and blank
+    lines drop, the log-extent right edge lands in the last window."""
+    records = [
+        '{"t": 0.0, "device": 0, "class": 1, "count": 3}',
+        '{"t": 0.1, "device": 0, "class": 1}',          # default count 1
+        "",                                             # blank line
+        {"t": 5.0, "device": 1, "class": 2, "count": -2},  # eviction
+        '{"t": 9.9, "device": 1, "class": 0, "count": 4}',
+        '{"t": 10.0, "device": 2, "class": 3}',   # == max(t): last window
+        '{"t": 3.0, "device": 99, "class": 0}',   # device out of range
+        '{"t": 3.0, "device": 0, "class": 99}',   # class out of range
+    ]
+    d = streaming.usage_log_to_deltas(records, num_rounds=2,
+                                      num_devices=3, num_classes=4)
+    assert d.shape == (2, 3, 4)
+    assert d[0, 0, 1] == 4.0          # 3 + default 1, first window
+    assert d[1, 1, 2] == -2.0         # signed eviction, second window
+    assert d[1, 1, 0] == 4.0
+    assert d[1, 2, 3] == 1.0          # right-edge event
+    assert d.sum() == 4.0 + (-2.0) + 4.0 + 1.0
+    # explicit span: events outside [t_start, t_end) drop
+    d2 = streaming.usage_log_to_deltas(records, num_rounds=2,
+                                       num_devices=3, num_classes=4,
+                                       t_start=0.0, t_end=6.0)
+    assert d2[1, 1, 0] == 0.0         # t=9.9 outside the span
+    assert streaming.usage_log_to_deltas([], 2, 3, 4).sum() == 0.0
+
+
+def test_trace_bank_placeholder_and_validation():
+    assert "trace_bank" in streaming.process_names()
+    proc = streaming.get_process("trace_bank")
+    with pytest.raises(ValueError, match="register_process"):
+        proc.init(jax.random.key(0), jnp.ones((2, 3)),
+                  streaming.StreamConfig(process="trace_bank"))
+    with pytest.raises(ValueError, match="\\(S_bank, R, K, C\\)"):
+        streaming.TraceBank(np.ones((4, 2, 3))).init(
+            jax.random.key(0), jnp.ones((2, 3)),
+            streaming.StreamConfig(process="trace_bank"))
+    with pytest.raises(ValueError, match="does not match"):
+        streaming.TraceBank(np.ones((2, 4, 5, 6))).init(
+            jax.random.key(0), jnp.ones((2, 3)),
+            streaming.StreamConfig(process="trace_bank"))
+
+
+def test_trace_bank_batch_matches_singles_bitwise(stream_world):
+    """The batch driver under a trace bank: each scenario draws its own
+    bank row off its scenario key (so at least two lanes replay
+    different traces), and the S-scenario vmapped run equals the S
+    single-scenario runs bit for bit."""
+    data, _, params, loss, ev = stream_world
+    k = data.num_devices
+    rng = np.random.default_rng(3)
+    logs = [[{"t": float(rng.uniform(0.0, 50.0)),
+              "device": int(rng.integers(0, k)),
+              "class": int(rng.integers(0, 10)),
+              "count": int(rng.integers(1, 6))}
+             for _ in range(60)] for _ in range(4)]
+    bank = streaming.trace_bank(logs, num_rounds=3, num_devices=k,
+                                num_classes=10, t_start=0.0, t_end=50.0)
+    assert bank.shape == (4, 3, k, 10)
+    streaming.register_process(
+        "trace_bank", lambda: streaming.TraceBank(bank), overwrite=True)
+    try:
+        fcfg = federated.FLConfig(
+            num_rounds=3, batch_size=50, learning_rate=0.1,
+            stream=streaming.StreamConfig(process="trace_bank"))
+        scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                         iterations_max=3)
+        hists = federated.client_histograms(data, fcfg.num_classes)
+        test_x = synthetic.to_float(data.test_images)
+        s = 3
+        nets = wireless.sample_networks(jax.random.key(21), s, k, WCFG)
+        keys = federated.scenario_keys(jax.random.key(7), 0, s)
+        batch = federated.make_feel_sim_batch(
+            loss_fn=loss, eval_fn=ev, wcfg=WCFG, scfg=scfg, fcfg=fcfg,
+            capacity=data.capacity)
+        single = federated.make_feel_sim(
+            loss_fn=loss, eval_fn=ev, wcfg=WCFG, scfg=scfg, fcfg=fcfg,
+            capacity=data.capacity)
+        args = (data.images, data.labels, data.mask, data.sizes, hists,
+                test_x, data.test_labels)
+        pb, mb = batch(params, *args, nets, keys)
+        for i in range(s):
+            net_i = jax.tree_util.tree_map(lambda a: a[i], nets)
+            ps, ms = single(params, *args, net_i, keys[i])
+            for a, b in zip(jax.tree_util.tree_leaves(pb),
+                            jax.tree_util.tree_leaves(ps)):
+                np.testing.assert_array_equal(np.asarray(a)[i],
+                                              np.asarray(b))
+            assert np.array_equal(np.asarray(mb.accuracy)[i],
+                                  np.asarray(ms.accuracy),
+                                  equal_nan=True)
+        # the per-scenario draws actually vary.  The s=3 run above can
+        # legitimately collide (3 draws over 4 rows), so check over a
+        # wider key set, derived exactly as the driver derives the
+        # stream-init key (split(scenario_key)[1]).
+        proc = streaming.get_process("trace_bank")
+        more = federated.scenario_keys(jax.random.key(7), 0, 8)
+        rows = []
+        for i in range(8):
+            k_init = jax.random.split(more[i])[1]
+            st = proc.init(k_init, hists, fcfg.stream)
+            rows.append(np.asarray(st.bank))
+        assert any(not np.array_equal(rows[0], r) for r in rows[1:])
+    finally:
+        streaming.register_process("trace_bank", streaming.TraceBank,
+                                   overwrite=True)
 
 
 def test_trace_process_in_both_drivers(stream_world):

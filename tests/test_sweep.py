@@ -653,3 +653,33 @@ def test_ci_skips_do_not_burn_max_chunks_budget(world, tmp_path):
     assert out is not None
     assert float(out[0][1]["scalar.final_accuracy"]["count"]) == \
         spec.chunk_scenarios
+
+
+def test_runner_rejects_round_metrics_arity_mismatch(world, engine,
+                                                     tmp_path):
+    """PR 7 widened ROUND_METRICS; resuming a checkpoint folded under a
+    different arity would crash deep inside the Welford fold with a
+    pytree-structure error.  The stamped arity turns that into a loud,
+    actionable schema error — including for pre-stamp ("unstamped")
+    checkpoints."""
+    ck = str(tmp_path / "arity.msgpack")
+    runner_lib.SweepRunner(engine, ck).run(max_chunks=1)
+    flat, meta = msgpack_ckpt.load_flat(ck)
+
+    # (a) pre-PR-7 checkpoint: no arity key in the meta at all.
+    unstamped = {k: v for k, v in meta.items()
+                 if k != "round_metrics_arity"}
+    msgpack_ckpt.save(ck, flat, meta=unstamped)
+    with pytest.raises(ValueError, match="an unstamped"):
+        runner_lib.SweepRunner(engine, ck).run()
+
+    # (b) stamped, but with a different metric-tuple arity.
+    wrong = dict(meta)
+    wrong["round_metrics_arity"] = len(engine_lib.ROUND_METRICS) + 2
+    msgpack_ckpt.save(ck, flat, meta=wrong)
+    with pytest.raises(ValueError, match="cannot be resumed"):
+        runner_lib.SweepRunner(engine, ck).run()
+
+    # (c) restoring the true meta resumes cleanly to completion.
+    msgpack_ckpt.save(ck, flat, meta=dict(meta))
+    assert runner_lib.SweepRunner(engine, ck).run() is not None
