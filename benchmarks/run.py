@@ -15,9 +15,16 @@ BENCH_fl_e2e.json), sched (scheduler latency, includes sweep/* rows),
 sweep (sweep engine rows only — the CI shard_map smoke), dispatch
 (dense-block dispatch smoke — the CI gather/scatter regression guard),
 async (event-driver smoke — sync scan vs event-scan sync limit vs
-buffered async under diurnal churn),
+buffered async under diurnal churn), telemetry (in-scan frame overhead,
+inert vs enabled; ``--telemetry-log`` sinks the enabled run's JSONL
+round-event log for ``python -m repro.telemetry.report``),
 kernels (Pallas micro), roofline (requires dryrun_results.json from
 repro.launch.dryrun).
+
+``--profile DIR`` wraps the selected suites in ``jax.profiler.trace``
+and emits a ``profile/phases_seen`` row naming which ``repro/*`` named
+scopes (schedule, local_train, aggregate, stream_refresh) the drivers
+entered — the CI profiler smoke asserts all four.
 
 ``--host-tuned`` re-execs the process with the host-tuning idioms the
 related training repos bake into their launchers (SNIPPETS.md §1-2):
@@ -88,6 +95,15 @@ def main() -> None:
                          "CI smoke step)")
     ap.add_argument("--only", default="")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the selected suites in jax.profiler.trace"
+                         "(DIR) and report which repro/* named phases "
+                         "(schedule, local_train, aggregate, "
+                         "stream_refresh) were entered")
+    ap.add_argument("--telemetry-log", default=None, metavar="PATH",
+                    help="with the telemetry suite: sink the enabled "
+                         "run's round frames to this JSONL file (the CI "
+                         "report smoke reads it back)")
     ap.add_argument("--host-tuned", action="store_true",
                     help="re-exec with tcmalloc LD_PRELOAD (if present) "
                          "and one forced XLA host device per core "
@@ -105,6 +121,12 @@ def main() -> None:
 
     print("name,value,derived")
     t0 = time.time()
+
+    profile_ctx = None
+    if args.profile is not None:
+        import jax
+        profile_ctx = jax.profiler.trace(args.profile)
+        profile_ctx.__enter__()
 
     if want("fig2") or want("fig3") or want("fig45") or want("fig67") \
             or want("divergence"):
@@ -150,6 +172,15 @@ def main() -> None:
         for r in sched_micro.async_rows(quick):
             _emit(r)
 
+    if want("telemetry") and not want("sched"):
+        # Standalone telemetry smoke (CI runs this under 4 forced host
+        # devices): inert vs enabled frame overhead, plus the enabled
+        # run's JSONL round-event log for the report-CLI check.
+        from benchmarks import sched_micro
+        for r in sched_micro.telemetry_rows(
+                quick, log_path=args.telemetry_log):
+            _emit(r)
+
     if want("dispatch") and not want("fl_e2e"):
         # Standalone dispatch smoke (CI runs this under 4 forced host
         # devices): masked vs dense-block scan + a batched dispatched
@@ -176,6 +207,16 @@ def main() -> None:
         else:
             print(f"# roofline skipped: {args.dryrun_json} not found "
                   f"(run repro.launch.dryrun first)", file=sys.stderr)
+
+    if profile_ctx is not None:
+        profile_ctx.__exit__(None, None, None)
+        from repro import telemetry
+        seen = sorted(telemetry.seen_phases())
+        _emit(("profile/phases_seen", len(seen),
+               "named_scopes " + "+".join(seen) if seen else
+               "named_scopes none"))
+        print(f"# profiler trace written to {args.profile}",
+              file=sys.stderr)
 
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 

@@ -37,6 +37,12 @@ synchronous limit (what the availability/pending-buffer machinery
 costs when inert — the bitwise-parity configuration) and full buffered
 async mode under diurnal churn, each as ms per scan step.
 
+The ``telemetry/*`` rows price the in-scan telemetry subsystem
+(DESIGN.md §13): the scan driver with ``telemetry=None`` (the inert
+dispatch — today's program bitwise) vs the full frame set threaded
+through the same scan, reported as ms/round plus their ratio (the
+acceptance target is <1.10 steady-state).
+
 The ``sweep/*`` rows cover the Monte-Carlo sweep engine (DESIGN.md §8):
 the jitted Welford chunk-fold (the O(R) aggregation every chunk pays)
 and one engine chunk execution on a miniature FEEL world, shard_map'd
@@ -310,6 +316,96 @@ def async_rows(quick: bool = True) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def bench_telemetry(enabled: bool, k: int = 100, rounds: int = 4,
+                    iters: int = 3, log_path: str = None) -> float:
+    """ms per round of the scan driver with the telemetry frames on/off.
+
+    ``enabled=False`` is today's program (``telemetry=None`` — the
+    bitwise-inert dispatch); ``enabled=True`` threads the full frame
+    set (scores + Sub2 trace + transport + faults) through the scan
+    (DESIGN.md §13).  The pair prices the in-scan observability tax on
+    a K-device round body; the acceptance target is <10% steady-state.
+    ``log_path`` additionally sinks the enabled run's frames as a JSONL
+    round-event log (the CI report smoke reads it back).
+    """
+    import functools as _ft
+
+    from repro import telemetry as telemetry_lib
+    from repro.core import faults as faults_lib
+    from repro.core import federated
+    from repro.core import streaming as streaming_lib
+    from repro.data import partition, synthetic
+    from repro.models import paper_nets
+    from repro.telemetry import sinks
+
+    # Pool scales with K: 2K shards x 50 samples over 10 classes.
+    imgs, labs = synthetic.generate(
+        0, samples_per_class=max(400, k * 10))
+    data = partition.partition(
+        imgs, labs, seed=1,
+        spec=partition.PartitionSpec(num_devices=k, num_shards=2 * k,
+                                     shard_size=50, min_shards=1,
+                                     max_shards=1))
+    mspec = paper_nets.PaperNetSpec(kind="mlp", mlp_hidden=16)
+    params = paper_nets.init(jax.random.key(3), mspec)
+    # Streaming is on in BOTH arms (the ratio stays a pure telemetry
+    # price) so the frame set includes the staleness signal and the
+    # profiler smoke sees all four repro/* phases, stream_refresh
+    # included.
+    fcfg = federated.FLConfig(
+        num_rounds=rounds, batch_size=50, learning_rate=0.1,
+        stream=streaming_lib.StreamConfig(),
+        faults=faults_lib.FaultConfig(drop_prob=0.2, max_retries=2,
+                                      reliability_ema=0.3),
+        telemetry=telemetry_lib.TelemetryConfig() if enabled else None)
+    scfg = scheduler.SchedulerConfig(method="das", n_min=2,
+                                     iterations_max=3)
+    wcfg = wireless.WirelessConfig()
+    net = wireless.sample_network(jax.random.key(0), k, wcfg)
+    loss = _ft.partial(paper_nets.loss_fn, spec=mspec)
+    ev = _ft.partial(paper_nets.accuracy, spec=mspec)
+    sim = federated.make_feel_sim(loss_fn=loss, eval_fn=ev, wcfg=wcfg,
+                                  scfg=scfg, fcfg=fcfg,
+                                  capacity=data.capacity)
+    hists = federated.client_histograms(data, fcfg.num_classes)
+    test_x = synthetic.to_float(data.test_images)
+    args = (params, data.images, data.labels, data.mask, data.sizes,
+            hists, test_x, data.test_labels, net, jax.random.key(7))
+    out = sim(*args)
+    jax.block_until_ready(out[0])     # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = sim(*args)
+        jax.block_until_ready(out[0])
+    ms = (time.perf_counter() - t0) / iters / rounds * 1e3
+    if enabled and log_path is not None:
+        _, metrics, frames = out
+        sinks.write_round_frames(
+            log_path, frames, metrics=metrics,
+            manifest=sinks.run_manifest(fcfg, wcfg, scfg,
+                                        extra={"kind": "bench"}))
+    return ms
+
+
+def telemetry_rows(quick: bool = True,
+                   log_path: str = None) -> List[Tuple[str, float, str]]:
+    """The ``telemetry/*`` rows: in-scan frame overhead, inert vs
+    enabled (the CI telemetry smoke runs these and then feeds
+    ``log_path`` to ``python -m repro.telemetry.report``)."""
+    k = 24 if quick else 100
+    ms_off = bench_telemetry(False, k=k)
+    ms_on = bench_telemetry(True, k=k, log_path=log_path)
+    return [
+        (f"telemetry/inert/K{k}", round(ms_off, 2),
+         "ms_per_round telemetry=None scan_driver"),
+        (f"telemetry/enabled/K{k}", round(ms_on, 2),
+         "ms_per_round full frame set (scores+sub2+transport+faults)"),
+        (f"telemetry/overhead/K{k}",
+         round(ms_on / max(ms_off, 1e-9), 3),
+         "enabled / inert steady per-round (target <1.10)"),
+    ]
+
+
 def bench_dispatch(cap, k: int = 32, rounds: int = 4,
                    iters: int = 3) -> float:
     """ms per round of the scan driver with a dense-block dispatch cap.
@@ -530,5 +626,6 @@ def run(quick: bool = True) -> List[Tuple[str, float, str]]:
                  round(ms_masked / ms_block, 2),
                  "masked / dense-block steady per-round"))
     rows.extend(async_rows(quick))
+    rows.extend(telemetry_rows(quick))
     rows.extend(sweep_rows(quick))
     return rows

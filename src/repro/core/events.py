@@ -72,6 +72,8 @@ import numpy as np
 
 from repro.core import bandwidth, compression, diversity, faults, \
     scheduler, streaming, wireless
+from repro import telemetry as telemetry_lib
+from repro.telemetry import record as telemetry_record
 
 Array = jax.Array
 Params = Any
@@ -325,6 +327,7 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
         codec = fed._comp_setup(fcfg)
     flt = faults.active(fcfg.faults)
     exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
+    tel = telemetry_lib.active(fcfg.telemetry)
     gamma = ecfg.staleness_decay
     buf_target = float(ecfg.buffer_size)
     horizon = float(ecfg.tick_horizon)
@@ -401,11 +404,13 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
             payload_sched = bandwidth.effective_payload_bits(
                 payload, exp_mult, wcfg, gains) if flt is not None \
                 else payload
-            result = scheduler.schedule_impl(
-                k_sched, index_g, ages, sizes_r, gains, net, wcfg, sch,
-                staleness=stale, payload_bits=payload_sched,
-                reliability=rel if flt is not None else None)
+            with telemetry_lib.phase_scope("schedule"):
+                result = scheduler.schedule_impl(
+                    k_sched, index_g, ages, sizes_r, gains, net, wcfg,
+                    sch, staleness=stale, payload_bits=payload_sched,
+                    reliability=rel if flt is not None else None)
             selected = result.selected * free
+            admitted = selected
             if n_cap is None:
                 didx = None
                 n_dropped = jnp.zeros((), jnp.int32)
@@ -508,36 +513,53 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
             # success-set normalization bitwise.
             num = base * s_mult if gamma != 0.0 else base
             denom = jnp.maximum(jnp.sum(num), 1.0)
-            if comp is None:
-                # ``buffered_flush`` multiplies the discount in per row
-                # (the kernel lane's fused ``s`` operand), so only the
-                # normalizer is folded here.
-                flushed = buffered_flush(params, pend_rows, base / denom,
-                                         arrived, s_mult,
-                                         fcfg.use_kernel_agg)
-            else:
-                # Mirror the compressed synchronous round's aggregation
-                # (tensordot over the decoded rows) so the compressed
-                # sync-limit parity is also bitwise.
-                agg = jnp.tensordot(num / denom, pend_rows, axes=1)
-                p_leaves2, p_treedef2 = jax.tree_util.tree_flatten(
+            with telemetry_lib.phase_scope("aggregate"):
+                if comp is None:
+                    # ``buffered_flush`` multiplies the discount in per
+                    # row (the kernel lane's fused ``s`` operand), so
+                    # only the normalizer is folded here.
+                    flushed = buffered_flush(params, pend_rows,
+                                             base / denom, arrived,
+                                             s_mult, fcfg.use_kernel_agg)
+                else:
+                    # Mirror the compressed synchronous round's
+                    # aggregation (tensordot over the decoded rows) so
+                    # the compressed sync-limit parity is also bitwise.
+                    agg = jnp.tensordot(num / denom, pend_rows, axes=1)
+                    p_leaves2, p_treedef2 = jax.tree_util.tree_flatten(
+                        params)
+                    outs, offset = [], 0
+                    for p in p_leaves2:
+                        size = int(np.prod(p.shape))
+                        outs.append(
+                            p + agg[offset:offset + size]
+                            .reshape(p.shape).astype(p.dtype))
+                        offset += size
+                    flushed = jax.tree_util.tree_unflatten(p_treedef2,
+                                                           outs)
+                params = jax.tree_util.tree_map(
+                    lambda f, p: jnp.where(do_flush, f, p), flushed,
                     params)
-                outs, offset = [], 0
-                for p in p_leaves2:
-                    size = int(np.prod(p.shape))
-                    outs.append(
-                        p + agg[offset:offset + size].reshape(p.shape)
-                        .astype(p.dtype))
-                    offset += size
-                flushed = jax.tree_util.tree_unflatten(p_treedef2, outs)
-            params = jax.tree_util.tree_map(
-                lambda f, p: jnp.where(do_flush, f, p), flushed, params)
             version = version + do_flush.astype(jnp.int32)
             # Applied updates leave the buffer; un-flushed arrivals
             # stay buffered (and their devices stay busy) until the
             # buffer fills.
             cleared = arrived * do_flush.astype(jnp.float32)
             pend_mask = pend_mask * (1.0 - cleared)
+            if tel is not None:
+                frame = telemetry_record.round_frame(
+                    tel, result=result, admitted=admitted,
+                    sel_eff=selected, ok=ok, energy=energy,
+                    payload_bits=payload, gains=gains, net=net,
+                    wcfg=wcfg, sch=sch, key_sched=k_sched, index=index_g,
+                    ages=ages, staleness=stale,
+                    reliability=rel if flt is not None else None,
+                    draw=draw)
+                if tel.events:
+                    frame.update(telemetry_record.event_frame(
+                        avail=avail, free=free, in_flight=pend_mask,
+                        buffer_fill=buf_n, flushed=do_flush, tau=tau,
+                        clock=clock, version=version))
             # Participation = delivered, exactly as in the synchronous
             # drivers: ages reset and the streaming backlog clears for
             # uploads that landed this tick.
@@ -572,6 +594,8 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
                 out += (residual,)
             if flt is not None:
                 out += (rel,)
+            if tel is not None:
+                return out, (met, frame)
             return out, met
 
         carry0 = (params,
@@ -590,6 +614,10 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
             carry0 += (residual0,)
         if flt is not None:
             carry0 += (jnp.ones((k_dev,), jnp.float32),)
+        if tel is not None:
+            out_carry, (metrics, frames) = jax.lax.scan(
+                body, carry0, (do_eval, ticks))
+            return out_carry[0], metrics, frames
         out_carry, metrics = jax.lax.scan(body, carry0, (do_eval, ticks))
         return out_carry[0], metrics
 

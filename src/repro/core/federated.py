@@ -70,6 +70,8 @@ from repro.core import bandwidth, compression, diversity, faults, \
 from repro.core import events as events_lib
 from repro.data import partition as partition_lib
 from repro.data import synthetic
+from repro import telemetry as telemetry_lib
+from repro.telemetry import record as telemetry_record
 
 Array = jax.Array
 Params = Any
@@ -133,6 +135,17 @@ class FLConfig:
     # scan's synchronous limit reproduces them bitwise
     # (``tests/test_events.py``).
     events: Optional[events_lib.EventConfig] = None
+    # In-scan telemetry subsystem (DESIGN.md §13): when set, the scan
+    # bodies of both drivers (and the legacy loop) emit a per-round
+    # telemetry frame — scheduler score decompositions, admission/
+    # dispatch/delivery outcomes, Sub2 solver traces, per-device
+    # transport accounting, fault events by type, event-mode
+    # availability state — as an extra stacked output alongside
+    # RoundMetrics.  The frame only observes (no extra PRNG draws,
+    # nothing feeds back into the round), so the primary outputs stay
+    # bitwise identical to a disabled run.  None = no telemetry,
+    # bitwise today's program (the faults.active inert-config pattern).
+    telemetry: Optional[telemetry_lib.TelemetryConfig] = None
 
 
 def sim_length(fcfg: FLConfig) -> int:
@@ -157,11 +170,16 @@ class RoundRecord:
     selected: np.ndarray
     # Devices whose upload actually landed; equals n_selected on a
     # reliable edge (faults=None).  Defaulted so pre-fault positional
-    # constructors keep working.
+    # constructors keep working; the -1 sentinel is normalized to
+    # n_selected in __post_init__ so it never reaches users.
     n_success: int = -1
     # Admitted devices dropped by the dispatch capacity this round
     # (always 0 with ``dispatch_cap=None``).  Defaulted like n_success.
     n_dropped: int = 0
+
+    def __post_init__(self):
+        if self.n_success < 0:
+            self.n_success = self.n_selected
 
 
 @jax.tree_util.register_pytree_node_class
@@ -386,19 +404,21 @@ def _masked_local_train(trainer: Callable, max_steps: int, cfg: FLConfig,
     active = (step_idx < steps_k[:, None]).astype(jnp.float32)
     active = active * selected[:, None]             # frozen if unselected
     keys = jax.random.split(key, k)
-    if dispatch_idx is None:
-        client_params = trainer(params, images, labels, mask, active, keys)
-    else:
-        idx = dispatch_idx
-        block = trainer(params, images[idx], labels[idx], mask[idx],
-                        active[idx], keys[idx])
-        # Scatter the trained lanes back to device order; every
-        # off-block device is frozen at the global model (exactly what
-        # its masked-path lane would have returned).
-        client_params = jax.tree_util.tree_map(
-            lambda p, b: jnp.broadcast_to(p[None], (k,) + p.shape)
-            .at[idx].set(b),
-            params, block)
+    with telemetry_lib.phase_scope("local_train"):
+        if dispatch_idx is None:
+            client_params = trainer(params, images, labels, mask, active,
+                                    keys)
+        else:
+            idx = dispatch_idx
+            block = trainer(params, images[idx], labels[idx], mask[idx],
+                            active[idx], keys[idx])
+            # Scatter the trained lanes back to device order; every
+            # off-block device is frozen at the global model (exactly
+            # what its masked-path lane would have returned).
+            client_params = jax.tree_util.tree_map(
+                lambda p, b: jnp.broadcast_to(p[None], (k,) + p.shape)
+                .at[idx].set(b),
+                params, block)
     # FedAvg weights D_k / D_r over the selected set.
     w = sizes.astype(jnp.float32) * selected
     w = w / jnp.maximum(jnp.sum(w), 1.0)
@@ -423,10 +443,11 @@ def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
                                            images, labels, mask, sizes,
                                            selected, key,
                                            dispatch_idx=dispatch_idx)
-    agg = fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
-    any_sel = jnp.sum(selected) > 0.0
-    return jax.tree_util.tree_map(
-        lambda a, p: jnp.where(any_sel, a, p), agg, params)
+    with telemetry_lib.phase_scope("aggregate"):
+        agg = fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
+        any_sel = jnp.sum(selected) > 0.0
+        return jax.tree_util.tree_map(
+            lambda a, p: jnp.where(any_sel, a, p), agg, params)
 
 
 def fedavg_aggregate_masked(params: Params, client_params: Params,
@@ -494,10 +515,11 @@ def _train_round_faulty(trainer: Callable, max_steps: int, cfg: FLConfig,
                                            images, labels, mask, sizes,
                                            selected, key,
                                            dispatch_idx=dispatch_idx)
-    w = sizes.astype(jnp.float32) * ok
-    w = w / jnp.maximum(jnp.sum(w), 1.0)
-    return fedavg_aggregate_masked(params, client_params, w, ok,
-                                   cfg.use_kernel_agg)
+    with telemetry_lib.phase_scope("aggregate"):
+        w = sizes.astype(jnp.float32) * ok
+        w = w / jnp.maximum(jnp.sum(w), 1.0)
+        return fedavg_aggregate_masked(params, client_params, w, ok,
+                                       cfg.use_kernel_agg)
 
 
 def _max_local_steps(cfg: FLConfig, capacity: int) -> int:
@@ -587,19 +609,20 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
     if success is not None:
         w = sizes.astype(jnp.float32) * selected * success
         w = w / jnp.maximum(jnp.sum(w), 1.0)
-    c, residual = compression.apply_codec(
-        codec, updates, residual, selected, k_comp, fcfg.compression,
-        gains, index, success=success)
-    if cdt is not None:
-        residual = residual.astype(cdt)
-    agg = jnp.tensordot(w, c, axes=1)               # (P,)
-    outs, offset = [], 0
-    for p in p_leaves:
-        size = int(np.prod(p.shape))
-        outs.append(p + agg[offset:offset + size].reshape(p.shape)
-                    .astype(p.dtype))
-        offset += size
-    return jax.tree_util.tree_unflatten(p_treedef, outs), residual
+    with telemetry_lib.phase_scope("aggregate"):
+        c, residual = compression.apply_codec(
+            codec, updates, residual, selected, k_comp, fcfg.compression,
+            gains, index, success=success)
+        if cdt is not None:
+            residual = residual.astype(cdt)
+        agg = jnp.tensordot(w, c, axes=1)           # (P,)
+        outs, offset = [], 0
+        for p in p_leaves:
+            size = int(np.prod(p.shape))
+            outs.append(p + agg[offset:offset + size].reshape(p.shape)
+                        .astype(p.dtype))
+            offset += size
+        return jax.tree_util.tree_unflatten(p_treedef, outs), residual
 
 
 def _sched_cfg(scfg: scheduler.SchedulerConfig,
@@ -702,20 +725,21 @@ def _stream_round(process, fcfg: FLConfig, size_cap: float,
     they are upcast here before any arithmetic so the whole refresh runs
     in f32 and only the carried state pays the diet.
     """
-    cdt = _carry_dtype(fcfg)
-    if cdt is not None:
-        st = dataclasses.replace(
-            st, hists=st.hists.astype(jnp.float32),
-            staleness=st.staleness.astype(jnp.float32))
-    deltas, arrivals, st = process.sample(k_arr, st, fcfg.stream)
-    hists_r, stats, stale = streaming.refresh(
-        st.hists, deltas, arrivals, st.staleness, st.selected_prev,
-        fcfg.stream, size_cap=size_cap)
-    sizes_r = stats[..., 2]
-    index = diversity.diversity_index_from_stats(
-        div=stats[..., measure_col], data_sizes=sizes_r, ages=ages,
-        weights=fcfg.index_weights)
-    return index, sizes_r, stale, hists_r, st
+    with telemetry_lib.phase_scope("stream_refresh"):
+        cdt = _carry_dtype(fcfg)
+        if cdt is not None:
+            st = dataclasses.replace(
+                st, hists=st.hists.astype(jnp.float32),
+                staleness=st.staleness.astype(jnp.float32))
+        deltas, arrivals, st = process.sample(k_arr, st, fcfg.stream)
+        hists_r, stats, stale = streaming.refresh(
+            st.hists, deltas, arrivals, st.staleness, st.selected_prev,
+            fcfg.stream, size_cap=size_cap)
+        sizes_r = stats[..., 2]
+        index = diversity.diversity_index_from_stats(
+            div=stats[..., measure_col], data_sizes=sizes_r, ages=ages,
+            weights=fcfg.index_weights)
+        return index, sizes_r, stale, hists_r, st
 
 
 def _stream_advance(st: streaming.StreamState, hists_r: Array,
@@ -789,6 +813,7 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
         codec = _comp_setup(fcfg)
     flt = faults.active(fcfg.faults)
     exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
+    tel = telemetry_lib.active(fcfg.telemetry)
 
     def sim(params: Params, images: Array, labels: Array, mask: Array,
             sizes: Array, hists: Array, test_x: Array, test_labels: Array,
@@ -853,11 +878,13 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
             payload_sched = bandwidth.effective_payload_bits(
                 payload, exp_mult, wcfg, gains) if flt is not None \
                 else payload
-            result = scheduler.schedule_impl(
-                k_sched, index, ages, sizes_r, gains, net, wcfg, sch,
-                staleness=stale, payload_bits=payload_sched,
-                reliability=rel if flt is not None else None)
+            with telemetry_lib.phase_scope("schedule"):
+                result = scheduler.schedule_impl(
+                    k_sched, index, ages, sizes_r, gains, net, wcfg, sch,
+                    staleness=stale, payload_bits=payload_sched,
+                    reliability=rel if flt is not None else None)
             selected = result.selected
+            admitted = selected
             # Dense-block dispatch (DESIGN.md §11): the plan runs right
             # after scheduling so faults, training, ages, reliability
             # and metrics all see the *realized* (post-drop) selection.
@@ -868,6 +895,7 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 didx, selected, n_dropped = dispatch_plan(selected, n_cap)
             if flt is None:
                 ok = selected
+                draw = None
                 if n_cap is None:
                     energy = result.energy
                     round_time = result.round_time
@@ -898,6 +926,20 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                     gains, index,
                     success=draw.success if flt is not None else None,
                     dispatch_idx=didx)
+            # Telemetry frame (DESIGN.md §13): built *before* the
+            # ages/reliability carry updates so the trace records the
+            # signals the scheduler actually saw.  Pure observer — no
+            # PRNG draws, nothing feeds back — and statically absent
+            # with telemetry=None (the bitwise contract).
+            if tel is not None:
+                frame = telemetry_record.round_frame(
+                    tel, result=result, admitted=admitted,
+                    sel_eff=selected, ok=ok, energy=energy,
+                    payload_bits=payload, gains=gains, net=net,
+                    wcfg=wcfg, sch=sch, key_sched=k_sched, index=index,
+                    ages=ages, staleness=stale,
+                    reliability=rel if flt is not None else None,
+                    draw=draw)
             # Participation = delivered: ages reset and streaming
             # backlog clears only for uploads that landed.
             ages = jnp.where(ok > 0.0, 0, ages + 1)
@@ -927,6 +969,8 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 out += (residual,)
             if flt is not None:
                 out += (rel,)
+            if tel is not None:
+                return out, (met, frame)
             return out, met
 
         ages0 = jnp.zeros((k_dev,), jnp.int32)
@@ -937,6 +981,10 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
             carry0 += (residual0,)
         if flt is not None:
             carry0 += (jnp.ones((k_dev,), jnp.float32),)
+        if tel is not None:
+            out_carry, (metrics, frames) = jax.lax.scan(body, carry0,
+                                                        do_eval)
+            return out_carry[0], metrics, frames
         out_carry, metrics = jax.lax.scan(body, carry0, do_eval)
         return out_carry[0], metrics
 
@@ -1042,12 +1090,16 @@ def make_feel_sim_batch(*, loss_fn: Callable, eval_fn: Callable,
         from jax.experimental.shard_map import shard_map
         sharded = jax.sharding.PartitionSpec(scenario_axis)
         rep = jax.sharding.PartitionSpec()
+        # Telemetry adds a third (frames) output with the same leading
+        # scenario axis as params/metrics — sharded identically.
+        n_out = 3 if telemetry_lib.active(fcfg.telemetry) is not None \
+            else 2
         vsim = shard_map(
             vsim, mesh=mesh,
             in_specs=(sharded if donate_params else rep,
                       rep, rep, rep, rep, rep, rep, rep,
                       sharded, sharded),
-            out_specs=(sharded, sharded),
+            out_specs=(sharded,) * n_out,
             check_rep=False)
     return jax.jit(vsim, donate_argnums=(0,) if donate_params else ())
 
@@ -1129,15 +1181,23 @@ def run_federated(
     ``donate_params=True`` hands ``init_params`` to the scan carry (the
     caller must not reuse those arrays afterwards — see
     :func:`make_feel_sim`).
+
+    With ``fcfg.telemetry`` set (DESIGN.md §13) the return grows a
+    third element: the stacked per-round telemetry frame dict from
+    ``repro.telemetry.record`` — callers with telemetry off see the
+    historical 2-tuple unchanged.
     """
     sim = make_feel_sim(loss_fn=loss_fn, eval_fn=eval_fn, wcfg=wcfg,
                         scfg=scfg, fcfg=fcfg, capacity=data.capacity,
                         eval_every=eval_every, donate_params=donate_params)
     hists = client_histograms(data, fcfg.num_classes)
     test_x = synthetic.to_float(data.test_images)
-    params, metrics = sim(init_params, data.images, data.labels, data.mask,
-                          data.sizes, hists, test_x, data.test_labels,
-                          net, key)
+    out = sim(init_params, data.images, data.labels, data.mask,
+              data.sizes, hists, test_x, data.test_labels, net, key)
+    if len(out) == 3:
+        params, metrics, frames = out
+        return params, metrics_to_records(metrics), frames
+    params, metrics = out
     return params, metrics_to_records(metrics)
 
 
@@ -1170,6 +1230,10 @@ def run_federated_batch(
       (params, metrics): final params stacked ``(S, ...)`` per leaf and
       :class:`RoundMetrics` with leading ``(S, R, ...)`` axes.  Use
       :func:`batch_metrics_to_records` for per-scenario record lists.
+      With ``fcfg.telemetry`` set a third element joins: the stacked
+      frame dict with leading ``(S, R, ...)`` axes — scenario ``i`` of
+      the batch is bitwise the single run's frames (batch == singles,
+      ``tests/test_telemetry.py``).
     """
     sim = make_feel_sim_batch(loss_fn=loss_fn, eval_fn=eval_fn, wcfg=wcfg,
                               scfg=scfg, fcfg=fcfg, capacity=data.capacity,
@@ -1202,7 +1266,9 @@ def run_federated_loop(
     the scan-parity tests and the ``fl_e2e`` old-vs-new benchmark.
     Honors ``fcfg.stream`` with the same per-round sequence (and key
     splits) as the scan driver, so streaming runs stay bit-for-bit
-    comparable (``tests/test_streaming.py``).
+    comparable (``tests/test_streaming.py``).  With ``fcfg.telemetry``
+    set the return grows a third element — the stacked per-round frame
+    dict (host numpy), same field set as the scan driver's.
     """
     if fcfg.events is not None:
         raise ValueError(
@@ -1236,6 +1302,23 @@ def run_federated_loop(
     exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
     rel = jnp.ones((k_dev,), jnp.float32) if flt is not None else None
     sch = _sched_cfg(scfg, fcfg)
+    tel = telemetry_lib.active(fcfg.telemetry)
+    frames_host: List[dict] = []
+    if tel is not None:
+        # Jitted (not eager) on purpose, like ``faults.fault_step`` and
+        # ``_dispatch_plan_jit``: the scan driver compiles the frame
+        # fused, and op-at-a-time eager arithmetic is the one way the
+        # loop's recorded floats could drift off the scan's.
+        @jax.jit
+        def _frame_fn(result, admitted, sel_eff, ok, energy, payload,
+                      gains, net_, k_sched, index, ages_, stale, rel_,
+                      draw):
+            return telemetry_record.round_frame(
+                tel, result=result, admitted=admitted, sel_eff=sel_eff,
+                ok=ok, energy=energy, payload_bits=payload, gains=gains,
+                net=net_, wcfg=wcfg, sch=sch, key_sched=k_sched,
+                index=index, ages=ages_, staleness=stale,
+                reliability=rel_, draw=draw)
 
     ages = jnp.zeros((k_dev,), jnp.int32)
     params = init_params
@@ -1268,6 +1351,7 @@ def run_federated_loop(
                                     gains, net, wcfg, sch, stale,
                                     payload_sched, rel)
         selected = result.selected
+        admitted = selected
         # Same dispatch plan + re-pricing as the scan body, through the
         # jitted entries (parity: fused == loop bitwise).
         if n_cap is None:
@@ -1277,6 +1361,7 @@ def run_federated_loop(
             didx, selected, n_dropped = _dispatch_plan_jit(selected, n_cap)
         if flt is None:
             ok = selected
+            draw = None
             if n_cap is None:
                 energy = result.energy
                 round_time = result.round_time
@@ -1305,6 +1390,12 @@ def run_federated_loop(
                 selected, k_train, residual, gains, index,
                 success=draw.success if flt is not None else None,
                 dispatch_idx=didx)
+        # Frame before the ages/reliability updates — the trace records
+        # the signals the scheduler saw (same placement as the scan).
+        if tel is not None:
+            frames_host.append(jax.device_get(_frame_fn(
+                result, admitted, selected, ok, energy, payload, gains,
+                net, k_sched, index, ages, stale, rel, draw)))
         ages = jnp.where(ok > 0.0, 0, ages + 1)
         if flt is not None:
             rel = faults.reliability_update(rel, selected, ok, flt)
@@ -1326,4 +1417,8 @@ def run_federated_loop(
             n_success=int(jnp.sum(ok)),
             n_dropped=int(n_dropped),
         ))
+    if tel is not None:
+        frames = {name: np.stack([f[name] for f in frames_host])
+                  for name in (frames_host[0] if frames_host else ())}
+        return params, history, frames
     return params, history

@@ -146,6 +146,47 @@ def reliability_discount(priority: Array, reliability: Optional[Array],
     return priority * ((1.0 - w) + w * reliability)
 
 
+def score_trace(key: Optional[Array], index: Array, ages: Array,
+                sch: SchedulerConfig,
+                staleness: Optional[Array] = None,
+                reliability: Optional[Array] = None) -> dict:
+    """Per-device selection-score decomposition (telemetry, DESIGN.md §13).
+
+    Recomputes — next to the policies, so edits co-locate — the priority
+    surface each method ranks on: the raw base priority
+    (``score_base``: the diversity index for DAS, ``log1p(age)`` for
+    ABS, the uniform draw for random, ones for full), the
+    staleness-boosted value, the reliability-discounted final priority,
+    and the resulting dense rank (0 = highest).  Uses the *same* key and
+    hook functions the policies consume, so the trace reproduces the
+    exact surface ``schedule_impl`` ranked on without touching policy
+    internals or drawing extra randomness.  Pure and traceable; only
+    the telemetry subsystem calls it, so disabled runs compile no trace.
+    """
+    if sch.method == "das":
+        base = index
+    elif sch.method == "abs":
+        base = jnp.log1p(ages.astype(jnp.float32))
+    elif sch.method == "random":
+        base = jax.random.uniform(key, index.shape)
+    elif sch.method == "full":
+        base = jnp.ones_like(index)
+    else:
+        raise ValueError(f"unknown scheduling method: {sch.method!r}")
+    if sch.method in ("das", "abs"):
+        boosted = staleness_boost(base, staleness, sch)
+        final = reliability_discount(boosted, reliability, sch)
+        if sch.method == "abs" and key is not None:
+            # ABS's small random tiebreak (same key the policy used).
+            final = final + 1e-4 * jax.random.uniform(key, final.shape)
+    else:
+        boosted = base
+        final = base
+    rank = jnp.argsort(jnp.argsort(-final)).astype(jnp.int32)
+    return {"score_base": base, "score_boosted": boosted,
+            "score_final": final, "score_rank": rank}
+
+
 def _finalize(selected: Array, alpha: Array, t_train: Array, gains: Array,
               net: wireless.NetworkState, cfg: wireless.WirelessConfig,
               iterations: Array | int = 0,

@@ -22,6 +22,7 @@ runs jitted on device; only the O(R) carry ever reaches the host.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -293,7 +294,8 @@ class SweepEngine:
                  init_params, target_accuracy: float = 0.85,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  use_sharding: bool = True,
-                 donate_params: bool = False):
+                 donate_params: bool = False,
+                 telemetry_dir: Optional[str] = None):
         self.spec = spec
         self.data = data
         self.loss_fn = loss_fn
@@ -301,6 +303,14 @@ class SweepEngine:
         self.init_params = init_params
         self.target_accuracy = float(target_accuracy)
         self.donate_params = donate_params
+        # Per-scenario telemetry streams (DESIGN.md §13): grid points
+        # whose FLConfig.telemetry is set return stacked frames from the
+        # batch sim; when a directory is given each scenario's frames
+        # land in their own JSONL file keyed by the fold_in-derived
+        # global scenario index, so re-running a chunk (resume) simply
+        # overwrites the same files with the same bytes.
+        self.telemetry_dir = telemetry_dir
+        self._manifest_written = False
         if mesh is None and use_sharding:
             mesh = mesh_lib.make_scenario_mesh()
         self.mesh = mesh
@@ -356,10 +366,45 @@ class SweepEngine:
         params = federated.tile_params(self.init_params, size) \
             if self.donate_params else self.init_params
         sim = self._sim_for(point, size)
-        _, metrics = sim(params, data.images, data.labels, data.mask,
-                         data.sizes, self._hists_for(point), self._test_x,
-                         data.test_labels, nets, keys)
+        out = sim(params, data.images, data.labels, data.mask,
+                  data.sizes, self._hists_for(point), self._test_x,
+                  data.test_labels, nets, keys)
+        if len(out) == 3:
+            _, metrics, frames = out
+            self._sink_frames(point, global_start, size, metrics, frames)
+        else:
+            _, metrics = out
         return self._fold(agg, metrics, self.target_accuracy)
+
+    def _sink_frames(self, point: grid_lib.GridPoint, global_start: int,
+                     size: int, metrics, frames) -> None:
+        """One JSONL round-event file per scenario in the chunk, named
+        by grid-point index and global scenario index (the same fold_in
+        index that derives the scenario's streams, so a resumed re-run
+        rewrites identical bytes), plus one run manifest per sweep."""
+        if self.telemetry_dir is None:
+            return
+        from repro.telemetry import sinks
+        os.makedirs(self.telemetry_dir, exist_ok=True)
+        if not self._manifest_written:
+            sinks.write_manifest(
+                os.path.join(self.telemetry_dir, "manifest.json"),
+                self.spec, extra={"kind": "sweep",
+                                  "fingerprint": self.spec.fingerprint()})
+            self._manifest_written = True
+        host_frames = sinks.frames_to_host(frames)
+        host_met = jax.device_get(metrics)
+        for s in range(size):
+            scn = global_start + s
+            path = os.path.join(
+                self.telemetry_dir,
+                f"point{point.index:03d}_scn{scn:05d}.jsonl")
+            sinks.write_round_frames(
+                path,
+                {k: v[s] for k, v in host_frames.items()},
+                metrics=jax.tree_util.tree_map(lambda a, s=s: a[s],
+                                               host_met),
+                scenario=scn)
 
     def run_point(self, point: grid_lib.GridPoint, agg=None):
         """All chunks of one grid point folded into one fresh aggregate

@@ -29,7 +29,6 @@ the checkpoint) is an error, not a silent restart.
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import os
 from typing import Dict, List, Optional, Tuple
@@ -40,6 +39,7 @@ from repro.checkpoint import msgpack_ckpt
 from repro.core import federated
 from repro.sweep import engine as engine_lib
 from repro.sweep import grid as grid_lib
+from repro.telemetry import sinks
 
 # Version of the runner's resume-state layout inside the checkpoint
 # meta/tree (independent of the msgpack container version).
@@ -102,27 +102,13 @@ class SweepRunner:
         """Drop lines past the resumed cursor (the resume-safe append
         contract): a killed run may have streamed chunks that were
         never checkpointed; those re-execute, so their stale lines must
-        go before the re-run appends duplicates."""
-        if self.jsonl_path is None or not os.path.exists(self.jsonl_path):
+        go before the re-run appends duplicates.  The kept-line
+        semantics live in ``telemetry.sinks.jsonl_rewind`` (shared with
+        the round-event logs), which also hardened the rewrite to
+        fsync-before-replace."""
+        if self.jsonl_path is None:
             return
-        kept = []
-        with open(self.jsonl_path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                except json.JSONDecodeError:
-                    break                     # torn tail write: drop rest
-                if not isinstance(rec, dict):
-                    break                     # valid JSON, wrong shape: ditto
-                if rec.get("cursor", 0) > cursor:
-                    break
-                kept.append(line)
-        with open(self.jsonl_path, "w") as f:
-            for line in kept:
-                f.write(line + "\n")
+        sinks.jsonl_rewind(self.jsonl_path, cursor)
 
     def _jsonl_emit(self, cursor: int, point: grid_lib.GridPoint,
                     start: int, size: int, agg, skipped: bool) -> None:
@@ -154,9 +140,7 @@ class SweepRunner:
             "skipped": skipped,
             "scalar": scalars,
         }
-        with open(self.jsonl_path, "a") as f:
-            f.write(json.dumps(rec) + "\n")
-            f.flush()
+        sinks.jsonl_append(self.jsonl_path, rec)
 
     # -- state <-> disk --------------------------------------------------
 
@@ -272,14 +256,18 @@ def run_sweep(spec: grid_lib.SweepSpec, *, data, loss_fn, eval_fn,
               init_params, ckpt_path: Optional[str] = None,
               target_accuracy: float = 0.85, use_sharding: bool = True,
               donate_params: bool = False, resume: bool = True,
-              jsonl_path: Optional[str] = None):
+              jsonl_path: Optional[str] = None,
+              telemetry_dir: Optional[str] = None):
     """One-call sweep: build the engine, optionally resume from
     ``ckpt_path``, optionally stream per-chunk aggregates to
-    ``jsonl_path``, return per-point summaries."""
+    ``jsonl_path``, return per-point summaries.  ``telemetry_dir``
+    collects per-scenario round-event JSONL streams for grid points
+    whose ``FLConfig.telemetry`` is set (DESIGN.md §13)."""
     eng = engine_lib.SweepEngine(
         spec, data=data, loss_fn=loss_fn, eval_fn=eval_fn,
         init_params=init_params, target_accuracy=target_accuracy,
-        use_sharding=use_sharding, donate_params=donate_params)
+        use_sharding=use_sharding, donate_params=donate_params,
+        telemetry_dir=telemetry_dir)
     if ckpt_path is None and jsonl_path is None:
         # engine.run_point honors spec.ci_target on its own, so the
         # runner layer is only needed for checkpoints/JSONL streaming.

@@ -1,0 +1,108 @@
+"""In-scan telemetry subsystem (DESIGN.md §13).
+
+The paper's claims are argued from *per-round, per-device* quantities —
+diversity ranks, admission decisions, Sub2 allocations, the energy
+split — but the drivers only surface the nine aggregate
+:class:`repro.core.federated.RoundMetrics` leaves; everything else is
+computed inside the jit and thrown away.  This package makes those
+internals observable without giving up the compiled drivers:
+
+* :class:`TelemetryConfig` rides on ``FLConfig.telemetry``.  When set,
+  the scan bodies of both FEEL drivers (synchronous and event-driven)
+  and the legacy loop emit a per-round *frame* — a flat dict of stacked
+  arrays (``repro.telemetry.record``) holding scheduler score
+  decompositions, admission/drop/dispatch outcomes, Sub2 solver traces,
+  per-device payload bits and realized upload energy/time, fault events
+  by type, and (event mode) availability/staleness state.  Frames ride
+  the scan's ``ys`` output, so telemetry costs zero host syncs.
+* ``telemetry=None`` (the default) statically dispatches today's
+  program **bitwise** — the same ``is_inert``/:func:`active` pattern as
+  ``core.faults``: every frame computation sits behind a Python-level
+  ``if tel is not None`` so the disabled jaxpr is literally unchanged.
+* Host-side durability lives in ``repro.telemetry.sinks`` (fsync-safe
+  JSONL round-event writer + the resume-safe rewind shared with the
+  sweep runner, and a run manifest), and ``python -m
+  repro.telemetry.report`` renders a run summary from a JSONL log.
+* :func:`phase_scope` wraps the four driver phases — ``schedule``,
+  ``local_train``, ``aggregate``, ``stream_refresh`` — in
+  ``jax.named_scope`` so ``jax.profiler.trace`` output (see
+  ``benchmarks/run.py --profile``) attributes time to them.
+
+Contracts (``tests/test_telemetry.py``): with telemetry enabled the
+*primary* outputs (params, metrics) are bitwise identical to the
+``telemetry=None`` run across every subsystem composition (frames only
+observe — no extra PRNG splits, no op feeding back into the round), and
+``batch == S singles`` holds bitwise on every telemetry leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, Optional
+
+import jax
+
+# The four profiled driver phases, in round order.  ``stream_refresh``
+# only appears in streaming runs; the other three are always present.
+PHASES = ("schedule", "local_train", "aggregate", "stream_refresh")
+
+_seen_phases: set = set()
+
+
+def phase_scope(name: str):
+    """``jax.named_scope`` for one driver phase, recorded for tests.
+
+    The scope is pure trace-time metadata (it names HLO ops for the
+    profiler; no op changes), so the drivers enter it unconditionally —
+    the ``telemetry=None`` bitwise contract is unaffected.
+    """
+    _seen_phases.add(name)
+    return jax.named_scope(f"repro/{name}")
+
+
+def seen_phases() -> FrozenSet[str]:
+    """Phase scopes entered since process start (test introspection)."""
+    return frozenset(_seen_phases)
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static telemetry knobs (hashable; rides on ``FLConfig.telemetry``).
+
+    Each flag gates one frame group; the all-``False`` instance is
+    *inert* — it records nothing, so :func:`active` normalizes it to
+    ``None`` and the drivers compile the identical no-telemetry
+    program (the ``core.faults`` disabled-means-identical pattern).
+    Admission outcomes (``admitted``/``dispatched``/``delivered``) are
+    recorded whenever any group is on — they are the backbone every
+    report view joins against.
+    """
+
+    scores: bool = True     # per-device scheduler score decomposition
+    sub2: bool = True       # Sub2 allocation vector + objective trace
+    transport: bool = True  # payload bits, realized upload time/energy
+    faults: bool = True     # fault events by type (needs FLConfig.faults)
+    events: bool = True     # event-mode availability/staleness state
+
+
+def is_inert(cfg: TelemetryConfig) -> bool:
+    """True when the config records nothing at all."""
+    return not (cfg.scores or cfg.sub2 or cfg.transport or cfg.faults
+                or cfg.events)
+
+
+def active(cfg: Optional[TelemetryConfig]) -> Optional[TelemetryConfig]:
+    """Normalize an inert config to ``None`` (the no-telemetry path).
+
+    Every driver dispatches through this, so an all-``False``
+    :class:`TelemetryConfig` compiles the *same program* as
+    ``telemetry=None`` — bitwise, because it is the identical
+    computation.
+    """
+    if cfg is None or is_inert(cfg):
+        return None
+    return cfg
+
+
+__all__ = ["TelemetryConfig", "is_inert", "active", "phase_scope",
+           "seen_phases", "PHASES"]

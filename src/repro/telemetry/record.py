@@ -1,0 +1,162 @@
+"""Traceable per-round telemetry frames (DESIGN.md §13).
+
+A *frame* is a flat ``dict[str, Array]`` built inside the scan body —
+dicts are pytrees, so ``lax.scan`` stacks every leaf over the round
+axis and the batch driver's vmap adds a scenario axis, with zero
+changes to the scan plumbing.  All builders are pure and traceable, and
+none of them draws fresh randomness or feeds anything back into the
+round: the frame is an *observer*, which is what keeps the primary
+outputs bitwise identical to the no-telemetry run
+(``tests/test_telemetry.py``).
+
+:func:`round_frame` is the single assembly point both FEEL drivers and
+the legacy loop call, so the recorded field set cannot drift between
+them; :func:`event_frame` adds the event-driver extras.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core import bandwidth as bw
+from repro.core import scheduler as sched_lib
+from repro.core import wireless
+
+Array = Any
+Frame = Dict[str, Array]
+
+
+def sub2_frame(result: "sched_lib.ScheduleResult", gains: Array,
+               net: "wireless.NetworkState",
+               wcfg: "wireless.WirelessConfig",
+               sch: "sched_lib.SchedulerConfig",
+               payload_bits: Optional[Array]) -> Frame:
+    """Sub2 solver trace: allocation vector, iterations, objective.
+
+    ``sub2_obj`` is Eq. 15a at the solver's allocation; ``sub2_obj_eq``
+    re-evaluates it at the equal-share allocation over the admitted set
+    (the solver's warm-start shape), so ``sub2_gain = obj_eq - obj`` is
+    the objective improvement the solve bought this round — the
+    convergence-quality signal the report CLI summarizes.
+    """
+    sel = result.selected
+    alpha_eq = sel / jnp.maximum(jnp.sum(sel), 1.0)
+    rho = sch.sub2.rho
+    obj = bw.sub2_objective(result.alpha, sel, result.t_train, gains,
+                            net.tx_power, wcfg, rho,
+                            payload_bits=payload_bits)
+    obj_eq = bw.sub2_objective(alpha_eq, sel, result.t_train, gains,
+                               net.tx_power, wcfg, rho,
+                               payload_bits=payload_bits)
+    return {
+        "alpha": result.alpha,
+        "sub2_iters": result.iterations,
+        "sub2_obj": obj,
+        "sub2_obj_eq": obj_eq,
+        "sub2_gain": obj_eq - obj,
+    }
+
+
+def transport_frame(sel_eff: Array, result: "sched_lib.ScheduleResult",
+                    energy: Array, payload_bits: Optional[Array],
+                    wcfg: "wireless.WirelessConfig") -> Frame:
+    """Per-device uplink accounting on the realized (post-drop) set.
+
+    ``payload_bits`` is the codec's per-device payload (``None`` on
+    uncompressed runs, where every device uploads ``wcfg.model_bits``);
+    ``energy`` is the *realized* upload energy the driver accounted
+    (post-fault/post-dispatch), and ``t_up`` the scheduler's per-device
+    upload time with the unselected-infinity sentinel zeroed.
+    """
+    bits = jnp.full_like(sel_eff, float(wcfg.model_bits)) \
+        if payload_bits is None else payload_bits
+    t_up = jnp.where(jnp.isinf(result.t_up), 0.0, result.t_up)
+    return {
+        "payload_bits": bits * sel_eff,
+        "t_up": t_up * sel_eff,
+        "energy_up": energy,
+    }
+
+
+def fault_frame(draw, sel_eff: Array) -> Frame:
+    """Fault events by type over the realized admitted set.
+
+    Derived from the round's :class:`repro.core.faults.FaultDraw`: an
+    *outage* burned its whole retry budget, a *dropout* died before its
+    first attempt, a *straggler* drew a compute multiplier above 1.
+    """
+    sel = sel_eff > 0.0
+    return {
+        "fault_outage": (sel & (draw.attempts > 0.0)
+                         & (draw.success <= 0.0)).astype(jnp.float32),
+        "fault_dropout": (sel & (draw.attempts <= 0.0))
+        .astype(jnp.float32),
+        "fault_straggler": (sel & (draw.compute_mult > 1.0))
+        .astype(jnp.float32),
+        "fault_attempts": draw.attempts * sel_eff,
+    }
+
+
+def round_frame(tel, *, result, admitted: Array, sel_eff: Array,
+                ok: Array, energy: Array, payload_bits: Optional[Array],
+                gains: Array, net, wcfg, sch, key_sched, index: Array,
+                ages: Array, staleness: Optional[Array],
+                reliability: Optional[Array], draw) -> Frame:
+    """Assemble one round's telemetry frame (both drivers + legacy loop).
+
+    ``admitted`` is the scheduler's selection before the dispatch cap,
+    ``sel_eff`` the realized (post-drop) set, ``ok`` the uploads that
+    landed; ``ages``/``reliability``/``staleness`` are the values the
+    *scheduler saw* (pre-update).  ``draw`` is the round's fault draw or
+    ``None`` on a reliable edge — the fault group is recorded only when
+    the fault subsystem actually ran.
+    """
+    frame: Frame = {
+        "admitted": admitted,
+        "dispatched": sel_eff,
+        "delivered": ok,
+    }
+    if tel.scores:
+        frame.update(sched_lib.score_trace(
+            key_sched, index, ages, sch, staleness=staleness,
+            reliability=reliability))
+        if staleness is not None:
+            frame["staleness"] = staleness
+    if tel.sub2:
+        frame.update(sub2_frame(result, gains, net, wcfg, sch,
+                                payload_bits))
+    if tel.transport:
+        frame.update(transport_frame(sel_eff, result, energy,
+                                     payload_bits, wcfg))
+    if tel.faults and draw is not None:
+        frame.update(fault_frame(draw, sel_eff))
+    return frame
+
+
+def event_frame(*, avail: Array, free: Array, in_flight: Array,
+                buffer_fill: Array, flushed: Array, tau: Array,
+                clock: Array, version: Array) -> Frame:
+    """Event-driver extras: availability gate, pending/buffer state.
+
+    ``in_flight`` is the end-of-tick pending mask (devices whose update
+    has not been applied), ``tau`` the per-slot model-version staleness
+    at flush evaluation, ``flushed`` whether the buffer emptied this
+    tick, ``clock``/``version`` the post-tick simulated time and global
+    model version.
+    """
+    return {
+        "avail": avail,
+        "free": free,
+        "in_flight": in_flight,
+        "buffer_fill": buffer_fill.astype(jnp.float32),
+        "flushed": flushed.astype(jnp.float32),
+        "staleness_tau": tau,
+        "clock": clock,
+        "model_version": version.astype(jnp.int32),
+    }
+
+
+__all__ = ["round_frame", "event_frame", "sub2_frame", "transport_frame",
+           "fault_frame"]

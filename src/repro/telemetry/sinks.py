@@ -1,0 +1,238 @@
+"""Durable host-side telemetry sinks (DESIGN.md §13).
+
+One shared home for the repo's JSONL discipline:
+
+* :func:`jsonl_append` — append one record, flush, optionally fsync.
+  The sweep runner's per-chunk streaming goes through it unchanged.
+* :func:`jsonl_rewind` — the resume-safe rewind contract factored out
+  of ``sweep/runner.py``: keep lines whose cursor is at or below the
+  resumed checkpoint, drop torn tails and non-dict lines, and rewrite
+  the file **fsync-before-replace** (temp file in the same directory,
+  fsynced, then ``os.replace``) so a crash mid-rewind can never leave a
+  half-truncated log.
+* :func:`write_round_frames` — one JSON line per round from a stacked
+  telemetry frame dict (``repro.telemetry.record``), the format
+  ``python -m repro.telemetry.report`` renders.
+* :func:`run_manifest` / :func:`write_manifest` — the run's identity
+  card: config fingerprint, jax/jaxlib versions, XLA flags, device
+  topology, git sha.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+from typing import Any, Dict, Iterable, List, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# JSONL primitives
+# ---------------------------------------------------------------------------
+
+def jsonl_append(path: str, record: dict, fsync: bool = False) -> None:
+    """Append one JSON line; flush always, fsync on request.
+
+    Flush-only matches the sweep runner's historical behavior (a line
+    is torn only if the process dies mid-``write``, which the rewind
+    contract already tolerates); ``fsync=True`` additionally survives
+    power loss, for round-event logs that feed offline analysis.
+    """
+    with open(path, "a") as f:
+        f.write(json.dumps(record) + "\n")
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+
+
+def jsonl_rewind(path: str, cursor: int, key: str = "cursor") -> None:
+    """Drop lines past ``cursor`` (the resume-safe append contract).
+
+    A killed run may have streamed records that were never
+    checkpointed; those re-execute on resume, so their stale lines must
+    go before the re-run appends duplicates.  Kept-line semantics are
+    exactly the sweep runner's: stop at the first torn (non-JSON) line,
+    the first non-dict line, or the first record past the cursor.  The
+    rewrite goes through a same-directory temp file + fsync +
+    ``os.replace`` so the log is never observable half-truncated.
+    """
+    if not os.path.exists(path):
+        return
+    kept: List[str] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                break                     # torn tail write: drop rest
+            if not isinstance(rec, dict):
+                break                     # valid JSON, wrong shape: ditto
+            if rec.get(key, 0) > cursor:
+                break
+            kept.append(line)
+    tmp = path + ".rewind.tmp"
+    with open(tmp, "w") as f:
+        for line in kept:
+            f.write(line + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def read_jsonl(path: str) -> List[dict]:
+    """All well-formed dict records of a JSONL file (torn tail dropped,
+    same tolerance as :func:`jsonl_rewind`)."""
+    out: List[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                break
+            if not isinstance(rec, dict):
+                break
+            out.append(rec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Round-event frames -> JSONL
+# ---------------------------------------------------------------------------
+
+def frames_to_host(frames: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    """One device->host transfer for a whole run's stacked frames."""
+    import jax
+    host = jax.device_get(frames)
+    return {k: np.asarray(v) for k, v in host.items()}
+
+
+def _jsonify(v: np.ndarray):
+    a = np.asarray(v)
+    if a.ndim == 0:
+        x = a.item()
+        if isinstance(x, float) and not np.isfinite(x):
+            return None
+        return x
+    return [_jsonify(e) for e in a]
+
+
+# RoundMetrics scalar leaves merged into each round line when the
+# caller passes the run's metrics (the (R, K) leaves stay in the frame).
+_METRIC_FIELDS = ("accuracy", "n_selected", "round_time", "energy_total",
+                  "n_success", "n_dropped")
+
+
+def write_round_frames(path: str, frames: Dict[str, Any],
+                       metrics=None,
+                       scenario: Optional[int] = None,
+                       manifest: Optional[dict] = None,
+                       fsync: bool = True) -> int:
+    """Write a run's telemetry frames as one JSON line per round.
+
+    ``frames`` leaves carry a leading round axis (the scan's ``ys``
+    stacking); each line holds the round index, the optional scenario
+    index (the sweep engine's fold_in-derived global index), and every
+    frame field for that round.  ``metrics`` (a
+    :class:`repro.core.federated.RoundMetrics`) merges the per-round
+    scalar metrics — accuracy, round time, totals — into each line so
+    the report CLI can render the round table from one file.  The file
+    is written fresh (truncate, not append) — a scenario's log is a
+    pure function of its run, so re-running overwrites rather than
+    duplicating — and fsynced before close by default.  Returns the
+    number of round lines written.
+    """
+    host = frames_to_host(frames)
+    if metrics is not None:
+        met_host = frames_to_host(
+            {f: getattr(metrics, f) for f in _METRIC_FIELDS})
+        host = {**met_host, **host}
+    lengths = {v.shape[0] for v in host.values()}
+    if len(lengths) != 1:
+        raise ValueError(f"frame leaves disagree on round count: "
+                         f"{sorted(lengths)}")
+    rounds = lengths.pop()
+    with open(path, "w") as f:
+        if manifest is not None:
+            f.write(json.dumps({"type": "manifest", **manifest}) + "\n")
+        for r in range(rounds):
+            rec: dict = {"type": "round", "round": r}
+            if scenario is not None:
+                rec["scenario"] = int(scenario)
+            for name, arr in host.items():
+                rec[name] = _jsonify(arr[r])
+            f.write(json.dumps(rec) + "\n")
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    return rounds
+
+
+# ---------------------------------------------------------------------------
+# Run manifest
+# ---------------------------------------------------------------------------
+
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def config_fingerprint(*cfgs) -> str:
+    """Stable digest of the run's static configs (same ``repr`` canon
+    as ``SweepSpec.fingerprint``, so frozen-dataclass configs hash
+    deterministically)."""
+    return hashlib.sha1(repr(tuple(cfgs)).encode()).hexdigest()
+
+
+def run_manifest(*cfgs, extra: Optional[dict] = None) -> dict:
+    """The run's identity card: everything needed to tie a JSONL log
+    back to the code, configs and machine that produced it."""
+    import jax
+    devices = jax.devices()
+    man = {
+        "config_fingerprint": config_fingerprint(*cfgs),
+        "configs": {type(c).__name__: repr(c) for c in cfgs},
+        "jax_version": jax.__version__,
+        "jaxlib_version": getattr(
+            __import__("jaxlib"), "__version__", None),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "device_count": len(devices),
+        "device_platform": devices[0].platform if devices else None,
+        "backend": jax.default_backend(),
+        "git_sha": _git_sha(),
+    }
+    if extra:
+        man.update(extra)
+    return man
+
+
+def write_manifest(path: str, *cfgs, extra: Optional[dict] = None) -> dict:
+    """Write the manifest JSON (fsync-before-replace) and return it."""
+    man = run_manifest(*cfgs, extra=extra)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(man, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return man
+
+
+__all__ = ["jsonl_append", "jsonl_rewind", "read_jsonl", "frames_to_host",
+           "write_round_frames", "run_manifest", "write_manifest",
+           "config_fingerprint"]
