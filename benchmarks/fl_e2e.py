@@ -286,8 +286,13 @@ def _bench_sweep(cfg: E2EConfig,
     return out
 
 
-def _bench_compressed(cfg: E2EConfig) -> Dict[str, float]:
-    """Scan-driver invocations with codec=quant@8 vs codec=none."""
+def _bench_compressed(cfg: E2EConfig) -> Tuple[Dict[str, float], object]:
+    """Scan-driver invocations with codec=quant@8 vs codec=none.
+
+    Returns ``(out, metrics_none)`` — the codec=none arm's RoundMetrics
+    ride along so ``run`` can append a store summary without re-running
+    the sim.
+    """
     from repro.core import compression
 
     k = cfg.batch_devices
@@ -297,6 +302,7 @@ def _bench_compressed(cfg: E2EConfig) -> Dict[str, float]:
     test_x = synthetic.to_float(data.test_images)
     out: Dict[str, float] = {"devices": k, "rounds": rounds}
     totals: Dict[str, Tuple[float, float]] = {}
+    metrics_none = None
     for codec in ("none", "quant"):
         fcfg_c = dataclasses.replace(
             fcfg, compression=compression.CompressionConfig(
@@ -317,13 +323,15 @@ def _bench_compressed(cfg: E2EConfig) -> Dict[str, float]:
                                      - out[f"{codec}_invocation_s"])
         totals[codec] = (float(jnp.sum(metrics.energy_total)),
                          float(metrics.accuracy[-1]))
+        if codec == "none":
+            metrics_none = metrics
     out["energy_none_j"], out["final_acc_none"] = totals["none"]
     out["energy_quant8_j"], out["final_acc_quant8"] = totals["quant"]
     out["energy_ratio_quant8_vs_none"] = (
         out["energy_quant8_j"] / max(out["energy_none_j"], 1e-12))
     out["invocation_overhead_vs_none"] = (
         out["quant_invocation_s"] / out["none_invocation_s"])
-    return out
+    return out, metrics_none
 
 
 def _bench_dispatch(cfg: E2EConfig, k: int = 0, n_sched: int = 15,
@@ -511,7 +519,7 @@ def dispatch_rows(quick: bool = True) -> List[Row]:
     return rows
 
 
-def run(quick: bool = True) -> List[Row]:
+def run(quick: bool = True, store_path: str | None = None) -> List[Row]:
     cfg = E2EConfig(rounds=5 if quick else 15, repeats=5)
     results: Dict[str, object] = {"quick": quick,
                                   "config": dataclasses.asdict(cfg)}
@@ -558,7 +566,7 @@ def run(quick: bool = True) -> List[Row]:
                  round(b["aggregate_speedup_vs_legacy_steady"], 2),
                  "steady vs steady: warm batch exec vs S x warm legacy "
                  "rounds"))
-    comp = _bench_compressed(cfg)
+    comp, comp_metrics = _bench_compressed(cfg)
     results["compressed"] = comp
     rows.append((f"fl_e2e/compressed_K{cfg.batch_devices}/"
                  f"energy_ratio_quant8_vs_none",
@@ -617,6 +625,25 @@ def run(quick: bool = True) -> List[Row]:
     with open(BENCH_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     rows.append(("fl_e2e/json_written", 1.0, BENCH_JSON))
+    if store_path is not None:
+        # Cross-run history (repro.telemetry.store): learning outcome
+        # from the codec=none sim + the K=batch_devices single-driver
+        # timings.  The regression gate compares this record against
+        # the committed CI baseline.
+        from repro.telemetry import store as store_lib
+        single = singles[cfg.batch_devices]
+        summary = store_lib.run_summary(
+            accuracy=comp_metrics.accuracy,
+            selected=comp_metrics.selected,
+            energy=comp_metrics.energy,
+            timings={
+                "steady_s_per_round":
+                    single["scan_invocation_s"] / cfg.rounds,
+                "compile_s": single["scan_compile_s"],
+            })
+        store_lib.append_run(store_path, summary, run="fl_e2e",
+                             configs=(cfg,))
+        rows.append(("fl_e2e/store_appended", 1.0, store_path))
     return rows
 
 

@@ -104,6 +104,11 @@ def main() -> None:
                     help="with the telemetry suite: sink the enabled "
                          "run's round frames to this JSONL file (the CI "
                          "report smoke reads it back)")
+    ap.add_argument("--metrics-store", default=None, metavar="PATH",
+                    help="append run summaries (final acc, energy, "
+                         "fairness, timings) to this cross-run JSONL "
+                         "store (repro.telemetry.store) — the "
+                         "regression-gate input")
     ap.add_argument("--host-tuned", action="store_true",
                     help="re-exec with tcmalloc LD_PRELOAD (if present) "
                          "and one forced XLA host device per core "
@@ -128,95 +133,104 @@ def main() -> None:
         profile_ctx = jax.profiler.trace(args.profile)
         profile_ctx.__enter__()
 
-    if want("fig2") or want("fig3") or want("fig45") or want("fig67") \
-            or want("divergence"):
-        from benchmarks import paper_figs
-        if want("fig2"):
-            for r in paper_figs.fig2_limited_devices(quick):
+    def run_suites() -> None:
+        if want("fig2") or want("fig3") or want("fig45") or want("fig67") \
+                or want("divergence"):
+            from benchmarks import paper_figs
+            if want("fig2"):
+                for r in paper_figs.fig2_limited_devices(quick):
+                    _emit(r)
+            if want("fig3"):
+                for r in paper_figs.fig3_local_epochs(quick):
+                    _emit(r)
+            if want("fig45"):
+                for r in paper_figs.fig45_model_size(quick):
+                    _emit(r)
+            if want("fig67"):
+                for r in paper_figs.fig67_energy_time(quick):
+                    _emit(r)
+            if want("divergence"):
+                for r in paper_figs.selection_fraction_sweep(quick):
+                    _emit(r)
+
+        if want("fl_e2e"):
+            from benchmarks import fl_e2e
+            for r in fl_e2e.run(quick, store_path=args.metrics_store):
                 _emit(r)
-        if want("fig3"):
-            for r in paper_figs.fig3_local_epochs(quick):
+
+        if want("sched"):
+            from benchmarks import sched_micro
+            for r in sched_micro.run(quick):
                 _emit(r)
-        if want("fig45"):
-            for r in paper_figs.fig45_model_size(quick):
-                _emit(r)
-        if want("fig67"):
-            for r in paper_figs.fig67_energy_time(quick):
-                _emit(r)
-        if want("divergence"):
-            for r in paper_figs.selection_fraction_sweep(quick):
+        elif want("sweep"):
+            # Standalone sweep smoke (CI runs this under
+            # XLA_FLAGS=--xla_force_host_platform_device_count=4 so the
+            # sharded row exercises the real shard_map partitioning).
+            from benchmarks import sched_micro
+            for r in sched_micro.sweep_rows(quick):
                 _emit(r)
 
-    if want("fl_e2e"):
-        from benchmarks import fl_e2e
-        for r in fl_e2e.run(quick):
-            _emit(r)
+        if want("async") and not want("sched"):
+            # Standalone event-driver smoke (CI runs this under 4 forced
+            # host devices): sync scan vs event-scan sync limit vs full
+            # buffered async, without paying the full sched suite.
+            from benchmarks import sched_micro
+            for r in sched_micro.async_rows(quick):
+                _emit(r)
 
-    if want("sched"):
-        from benchmarks import sched_micro
-        for r in sched_micro.run(quick):
-            _emit(r)
-    elif want("sweep"):
-        # Standalone sweep smoke (CI runs this under
-        # XLA_FLAGS=--xla_force_host_platform_device_count=4 so the
-        # sharded row exercises the real shard_map partitioning).
-        from benchmarks import sched_micro
-        for r in sched_micro.sweep_rows(quick):
-            _emit(r)
+        if want("telemetry") and not want("sched"):
+            # Standalone telemetry smoke (CI runs this under 4 forced
+            # host devices): inert vs enabled frame overhead, plus the
+            # enabled run's JSONL round-event log for the report-CLI
+            # check.
+            from benchmarks import sched_micro
+            for r in sched_micro.telemetry_rows(
+                    quick, log_path=args.telemetry_log,
+                    store_path=args.metrics_store):
+                _emit(r)
 
-    if want("async") and not want("sched"):
-        # Standalone event-driver smoke (CI runs this under 4 forced
-        # host devices): sync scan vs event-scan sync limit vs full
-        # buffered async, without paying the full sched suite.
-        from benchmarks import sched_micro
-        for r in sched_micro.async_rows(quick):
-            _emit(r)
+        if want("dispatch") and not want("fl_e2e"):
+            # Standalone dispatch smoke (CI runs this under 4 forced
+            # host devices): masked vs dense-block scan + a batched
+            # dispatched run, without paying the full fl_e2e suite.
+            from benchmarks import fl_e2e
+            for r in fl_e2e.dispatch_rows(quick):
+                _emit(r)
 
-    if want("telemetry") and not want("sched"):
-        # Standalone telemetry smoke (CI runs this under 4 forced host
-        # devices): inert vs enabled frame overhead, plus the enabled
-        # run's JSONL round-event log for the report-CLI check.
-        from benchmarks import sched_micro
-        for r in sched_micro.telemetry_rows(
-                quick, log_path=args.telemetry_log):
-            _emit(r)
+        if want("kernels"):
+            from benchmarks import kernel_bench
+            for r in kernel_bench.run(quick):
+                _emit(r)
 
-    if want("dispatch") and not want("fl_e2e"):
-        # Standalone dispatch smoke (CI runs this under 4 forced host
-        # devices): masked vs dense-block scan + a batched dispatched
-        # run, without paying the full fl_e2e suite.
-        from benchmarks import fl_e2e
-        for r in fl_e2e.dispatch_rows(quick):
-            _emit(r)
+        if want("roofline"):
+            if os.path.exists(args.dryrun_json):
+                from benchmarks import roofline
+                for row in roofline.analyze(
+                        __import__("json").load(open(args.dryrun_json))):
+                    _emit((f"roofline/{row['arch']}/{row['shape']}/"
+                           f"{row['dominant']}",
+                           round(max(row['compute_s'], row['memory_s'],
+                                     row['collective_s']), 4),
+                           f"useful={row['useful_ratio']:.3f}"))
+            else:
+                print(f"# roofline skipped: {args.dryrun_json} not found "
+                      f"(run repro.launch.dryrun first)", file=sys.stderr)
 
-    if want("kernels"):
-        from benchmarks import kernel_bench
-        for r in kernel_bench.run(quick):
-            _emit(r)
-
-    if want("roofline"):
-        if os.path.exists(args.dryrun_json):
-            from benchmarks import roofline
-            for row in roofline.analyze(
-                    __import__("json").load(open(args.dryrun_json))):
-                _emit((f"roofline/{row['arch']}/{row['shape']}/"
-                       f"{row['dominant']}",
-                       round(max(row['compute_s'], row['memory_s'],
-                                 row['collective_s']), 4),
-                       f"useful={row['useful_ratio']:.3f}"))
-        else:
-            print(f"# roofline skipped: {args.dryrun_json} not found "
-                  f"(run repro.launch.dryrun first)", file=sys.stderr)
-
-    if profile_ctx is not None:
-        profile_ctx.__exit__(None, None, None)
-        from repro import telemetry
-        seen = sorted(telemetry.seen_phases())
-        _emit(("profile/phases_seen", len(seen),
-               "named_scopes " + "+".join(seen) if seen else
-               "named_scopes none"))
-        print(f"# profiler trace written to {args.profile}",
-              file=sys.stderr)
+    # try/finally so a suite raising mid-run still finalizes the
+    # profiler trace directory and emits phases_seen — a half-written
+    # trace dir with no closing __exit__ is unreadable by the viewer.
+    try:
+        run_suites()
+    finally:
+        if profile_ctx is not None:
+            profile_ctx.__exit__(None, None, None)
+            from repro import telemetry
+            seen = sorted(telemetry.seen_phases())
+            _emit(("profile/phases_seen", len(seen),
+                   "named_scopes " + "+".join(seen) if seen else
+                   "named_scopes none"))
+            print(f"# profiler trace written to {args.profile}",
+                  file=sys.stderr)
 
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 

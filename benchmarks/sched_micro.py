@@ -317,7 +317,8 @@ def async_rows(quick: bool = True) -> List[Tuple[str, float, str]]:
 
 
 def bench_telemetry(enabled: bool, k: int = 100, rounds: int = 4,
-                    iters: int = 3, log_path: str = None) -> float:
+                    iters: int = 3, log_path: str = None,
+                    store_path: str = None) -> float:
     """ms per round of the scan driver with the telemetry frames on/off.
 
     ``enabled=False`` is today's program (``telemetry=None`` — the
@@ -384,17 +385,29 @@ def bench_telemetry(enabled: bool, k: int = 100, rounds: int = 4,
             log_path, frames, metrics=metrics,
             manifest=sinks.run_manifest(fcfg, wcfg, scfg,
                                         extra={"kind": "bench"}))
+    if enabled and store_path is not None:
+        from repro.telemetry import store as store_lib
+        metrics = out[1]
+        summary = store_lib.run_summary(
+            accuracy=metrics.accuracy, selected=metrics.selected,
+            energy=metrics.energy,
+            timings={"steady_s_per_round": ms / 1e3})
+        store_lib.append_run(store_path, summary, run="telemetry_smoke",
+                             configs=(fcfg, wcfg, scfg))
     return ms
 
 
-def telemetry_rows(quick: bool = True,
-                   log_path: str = None) -> List[Tuple[str, float, str]]:
+def telemetry_rows(quick: bool = True, log_path: str = None,
+                   store_path: str = None) -> List[Tuple[str, float, str]]:
     """The ``telemetry/*`` rows: in-scan frame overhead, inert vs
     enabled (the CI telemetry smoke runs these and then feeds
-    ``log_path`` to ``python -m repro.telemetry.report``)."""
+    ``log_path`` to ``python -m repro.telemetry.report``).
+    ``store_path`` additionally appends the enabled run's summary to
+    the cross-run metrics store (``repro.telemetry.store``)."""
     k = 24 if quick else 100
     ms_off = bench_telemetry(False, k=k)
-    ms_on = bench_telemetry(True, k=k, log_path=log_path)
+    ms_on = bench_telemetry(True, k=k, log_path=log_path,
+                            store_path=store_path)
     return [
         (f"telemetry/inert/K{k}", round(ms_off, 2),
          "ms_per_round telemetry=None scan_driver"),

@@ -73,6 +73,7 @@ import numpy as np
 from repro.core import bandwidth, compression, diversity, faults, \
     scheduler, streaming, wireless
 from repro import telemetry as telemetry_lib
+from repro.telemetry import health as telemetry_health
 from repro.telemetry import record as telemetry_record
 
 Array = jax.Array
@@ -328,6 +329,8 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
     flt = faults.active(fcfg.faults)
     exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
     tel = telemetry_lib.active(fcfg.telemetry)
+    sig_fn = fed._make_sig_fn(loss_fn, fcfg, capacity) \
+        if (tel is not None and tel.signals) else None
     gamma = ecfg.staleness_decay
     buf_target = float(ecfg.buffer_size)
     horizon = float(ecfg.tick_horizon)
@@ -367,6 +370,9 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
                 pos += 1
             if flt is not None:
                 rel = carry[pos]
+                pos += 1
+            if sig_fn is not None:
+                sigst = carry[pos]
             if cdt is not None:
                 pend_rows = pend_rows.astype(jnp.float32)
             # Key discipline copied from the synchronous scan body:
@@ -479,6 +485,18 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
                     success=draw.success if flt is not None else None)
                 if cdt is not None:
                     residual = residual.astype(cdt)
+            # Learning-signal observations (DESIGN.md §14), taken on the
+            # *raw* pre-codec updates against the pre-flush global model
+            # the devices actually trained from — same matrix/reduction
+            # the synchronous driver observes, so signals agree in the
+            # synchronous limit.  Pure observer; nothing feeds back.
+            if sig_fn is not None:
+                loss_delta, upd_norm = sig_fn(
+                    params, client_params,
+                    rows if comp is None else updates,
+                    images, labels, mask)
+                sigst = telemetry_health.signal_update(
+                    sigst, ok, loss_delta, upd_norm, energy)
             # Enqueue the uploads that will land (a failed upload never
             # arrives; its energy is already charged and — under
             # compression — its update already folded back into the
@@ -554,7 +572,10 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
                     wcfg=wcfg, sch=sch, key_sched=k_sched, index=index_g,
                     ages=ages, staleness=stale,
                     reliability=rel if flt is not None else None,
-                    draw=draw)
+                    draw=draw,
+                    signals=telemetry_health.signals_frame(
+                        sigst, ok, loss_delta, upd_norm)
+                    if sig_fn is not None else None)
                 if tel.events:
                     frame.update(telemetry_record.event_frame(
                         avail=avail, free=free, in_flight=pend_mask,
@@ -594,6 +615,8 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
                 out += (residual,)
             if flt is not None:
                 out += (rel,)
+            if sig_fn is not None:
+                out += (sigst,)
             if tel is not None:
                 return out, (met, frame)
             return out, met
@@ -614,6 +637,8 @@ def _make_event_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg,
             carry0 += (residual0,)
         if flt is not None:
             carry0 += (jnp.ones((k_dev,), jnp.float32),)
+        if sig_fn is not None:
+            carry0 += (telemetry_health.signal_init(k_dev),)
         if tel is not None:
             out_carry, (metrics, frames) = jax.lax.scan(
                 body, carry0, (do_eval, ticks))

@@ -71,6 +71,7 @@ from repro.core import events as events_lib
 from repro.data import partition as partition_lib
 from repro.data import synthetic
 from repro import telemetry as telemetry_lib
+from repro.telemetry import health as telemetry_health
 from repro.telemetry import record as telemetry_record
 
 Array = jax.Array
@@ -348,6 +349,7 @@ def _dispatch_accounting(result, sel_eff: Array) -> Tuple[Array, Array]:
 # drift off the scan bitwise.
 _dispatch_plan_jit = jax.jit(dispatch_plan, static_argnums=(1,))
 _dispatch_accounting_jit = jax.jit(_dispatch_accounting)
+_signal_update_jit = jax.jit(telemetry_health.signal_update)
 
 
 def _carry_dtype(fcfg: FLConfig):
@@ -428,7 +430,8 @@ def _masked_local_train(trainer: Callable, max_steps: int, cfg: FLConfig,
 def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
                  params: Params, images: Array, labels: Array, mask: Array,
                  sizes: Array, selected: Array, key: Array,
-                 dispatch_idx: Optional[Array] = None) -> Params:
+                 dispatch_idx: Optional[Array] = None,
+                 sig_fn: Optional[Callable] = None) -> Params:
     """Masked local training for all K clients + FedAvg. Pure, traceable.
 
     An empty admitted set (possible when ``n_min == 0`` and every device
@@ -438,16 +441,27 @@ def _train_round(trainer: Callable, max_steps: int, cfg: FLConfig,
     the aggregated value bitwise unchanged.  Under dispatch the guard
     still works: an all-dropped/all-unselected round scatters nothing
     but frozen lanes and the zero-weight aggregate is discarded.
+
+    ``sig_fn`` (telemetry signals group, DESIGN.md §14) is the
+    learning-signal observer from :func:`_make_sig_fn`: when set, the
+    return value grows a trailing ``(loss_delta, update_norm)`` pair
+    computed from the stacked client params *before* aggregation.  A
+    pure observer — the aggregate itself is untouched.
     """
     client_params, w = _masked_local_train(trainer, max_steps, cfg, params,
                                            images, labels, mask, sizes,
                                            selected, key,
                                            dispatch_idx=dispatch_idx)
+    obs = sig_fn(params, client_params, None, images, labels, mask) \
+        if sig_fn is not None else None
     with telemetry_lib.phase_scope("aggregate"):
         agg = fedavg_aggregate(client_params, w, cfg.use_kernel_agg)
         any_sel = jnp.sum(selected) > 0.0
-        return jax.tree_util.tree_map(
+        new_params = jax.tree_util.tree_map(
             lambda a, p: jnp.where(any_sel, a, p), agg, params)
+    if sig_fn is not None:
+        return new_params, obs
+    return new_params
 
 
 def fedavg_aggregate_masked(params: Params, client_params: Params,
@@ -501,7 +515,8 @@ def _train_round_faulty(trainer: Callable, max_steps: int, cfg: FLConfig,
                         params: Params, images: Array, labels: Array,
                         mask: Array, sizes: Array, selected: Array,
                         ok: Array, key: Array,
-                        dispatch_idx: Optional[Array] = None) -> Params:
+                        dispatch_idx: Optional[Array] = None,
+                        sig_fn: Optional[Callable] = None) -> Params:
     """Fault-aware round: train the *selected* set, aggregate the *ok* set.
 
     Every admitted device runs its local epochs (the failure happens at
@@ -510,16 +525,24 @@ def _train_round_faulty(trainer: Callable, max_steps: int, cfg: FLConfig,
     the success set, so the aggregate stays a convex combination and an
     all-fail round degrades to carrying the previous model
     (:func:`fedavg_aggregate_masked`).
+
+    ``sig_fn``: see :func:`_train_round` — appends the observer's
+    ``(loss_delta, update_norm)`` pair to the return value.
     """
     client_params, _ = _masked_local_train(trainer, max_steps, cfg, params,
                                            images, labels, mask, sizes,
                                            selected, key,
                                            dispatch_idx=dispatch_idx)
+    obs = sig_fn(params, client_params, None, images, labels, mask) \
+        if sig_fn is not None else None
     with telemetry_lib.phase_scope("aggregate"):
         w = sizes.astype(jnp.float32) * ok
         w = w / jnp.maximum(jnp.sum(w), 1.0)
-        return fedavg_aggregate_masked(params, client_params, w, ok,
-                                       cfg.use_kernel_agg)
+        new_params = fedavg_aggregate_masked(params, client_params, w, ok,
+                                             cfg.use_kernel_agg)
+    if sig_fn is not None:
+        return new_params, obs
+    return new_params
 
 
 def _max_local_steps(cfg: FLConfig, capacity: int) -> int:
@@ -551,7 +574,8 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
                             key: Array, residual: Array, gains: Array,
                             index: Array,
                             success: Optional[Array] = None,
-                            dispatch_idx: Optional[Array] = None
+                            dispatch_idx: Optional[Array] = None,
+                            sig_fn: Optional[Callable] = None
                             ) -> Tuple[Params, Array]:
     """Masked local training + compressed-uplink FedAvg.  Pure, traceable.
 
@@ -606,6 +630,8 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
     updates = jnp.concatenate(
         [(cl - p[None]).reshape(k, -1)
          for cl, p in zip(leaves, p_leaves)], axis=1)
+    obs = sig_fn(params, client_params, updates, images, labels, mask) \
+        if sig_fn is not None else None
     if success is not None:
         w = sizes.astype(jnp.float32) * selected * success
         w = w / jnp.maximum(jnp.sum(w), 1.0)
@@ -622,7 +648,10 @@ def _train_round_compressed(trainer: Callable, max_steps: int,
             outs.append(p + agg[offset:offset + size].reshape(p.shape)
                         .astype(p.dtype))
             offset += size
-        return jax.tree_util.tree_unflatten(p_treedef, outs), residual
+        new_params = jax.tree_util.tree_unflatten(p_treedef, outs)
+    if sig_fn is not None:
+        return new_params, residual, obs
+    return new_params, residual
 
 
 def _sched_cfg(scfg: scheduler.SchedulerConfig,
@@ -643,8 +672,45 @@ def _sched_cfg(scfg: scheduler.SchedulerConfig,
     return sch
 
 
+def _make_sig_fn(loss_fn: Callable, fcfg: FLConfig,
+                 capacity: int) -> Callable:
+    """Learning-signal observer for the telemetry ``signals`` group.
+
+    Returns ``sig_fn(params0, client_params, updates, images, labels,
+    mask) -> (loss_delta, update_norm)``, both ``(K,) f32``.  The
+    compressed round passes its existing flattened ``(K, P)`` update
+    matrix; the plain/faulty rounds pass ``None`` and the matrix is
+    built here with the same ravel order, so every driver path shares
+    one norm reduction.  The loss probe evaluates a fixed leading
+    window of each shard (no PRNG), so enabling signals cannot perturb
+    the round (DESIGN.md §14 purity contract).  The window is capped
+    at ``health.PROBE_CAP`` samples: the probe costs two forward
+    passes per device per round, and an uncapped batch-size window
+    prices at ~25% of the whole round body — the cap keeps the
+    signals group inside the <1.10 telemetry overhead budget.
+    """
+    probe = telemetry_health.make_signal_probe(
+        loss_fn, min(fcfg.batch_size, capacity,
+                     telemetry_health.PROBE_CAP))
+
+    def sig_fn(params0, client_params, updates, images, labels, mask):
+        if updates is None:
+            updates = telemetry_health.flatten_updates(client_params,
+                                                       params0)
+        return (probe(params0, client_params, images, labels, mask),
+                telemetry_health.update_norms(updates))
+
+    return sig_fn
+
+
+def _sig_enabled(fcfg: FLConfig) -> bool:
+    tel = telemetry_lib.active(fcfg.telemetry)
+    return tel is not None and tel.signals
+
+
 def make_round_fn(loss_fn: Callable, cfg: FLConfig,
-                  capacity: int) -> Callable:
+                  capacity: int,
+                  sig_fn: Optional[Callable] = None) -> Callable:
     """Returns jit'd ``round_fn(params, data, selected, weights, key)``.
 
     ``selected``/``weights`` come from the scheduler (host side); the round
@@ -666,11 +732,13 @@ def make_round_fn(loss_fn: Callable, cfg: FLConfig,
     if cfg.compression is not None:
         codec = _comp_setup(cfg)
         return jax.jit(functools.partial(_train_round_compressed, trainer,
-                                         max_steps, cfg, codec))
+                                         max_steps, cfg, codec,
+                                         sig_fn=sig_fn))
     if faults.active(cfg.faults) is not None:
         return jax.jit(functools.partial(_train_round_faulty, trainer,
-                                         max_steps, cfg))
-    return jax.jit(functools.partial(_train_round, trainer, max_steps, cfg))
+                                         max_steps, cfg, sig_fn=sig_fn))
+    return jax.jit(functools.partial(_train_round, trainer, max_steps, cfg,
+                                     sig_fn=sig_fn))
 
 
 # ---------------------------------------------------------------------------
@@ -814,6 +882,8 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
     flt = faults.active(fcfg.faults)
     exp_mult = faults.expected_time_mult(flt) if flt is not None else 1.0
     tel = telemetry_lib.active(fcfg.telemetry)
+    sig_fn = _make_sig_fn(loss_fn, fcfg, capacity) \
+        if (tel is not None and tel.signals) else None
 
     def sim(params: Params, images: Array, labels: Array, mask: Array,
             sizes: Array, hists: Array, test_x: Array, test_labels: Array,
@@ -847,6 +917,9 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 pos += 1
             if flt is not None:
                 rel = carry[pos]
+                pos += 1
+            if sig_fn is not None:
+                sigst = carry[pos]
             # One extra split for streaming, appended at the end; the
             # fault stream is *folded* off the carried key instead of
             # widening the split, because ``split(key, n)`` re-keys every
@@ -910,22 +983,38 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                     net, wcfg, payload, flt)
             if comp is None:
                 if flt is None:
-                    params = _train_round(trainer, max_steps, fcfg, params,
-                                          images, labels, mask, sizes_r,
-                                          selected, k_train,
-                                          dispatch_idx=didx)
+                    out = _train_round(trainer, max_steps, fcfg, params,
+                                       images, labels, mask, sizes_r,
+                                       selected, k_train,
+                                       dispatch_idx=didx, sig_fn=sig_fn)
                 else:
-                    params = _train_round_faulty(
+                    out = _train_round_faulty(
                         trainer, max_steps, fcfg, params, images, labels,
                         mask, sizes_r, selected, ok, k_train,
-                        dispatch_idx=didx)
+                        dispatch_idx=didx, sig_fn=sig_fn)
+                if sig_fn is not None:
+                    params, obs = out
+                else:
+                    params = out
             else:
-                params, residual = _train_round_compressed(
+                out = _train_round_compressed(
                     trainer, max_steps, fcfg, codec, params, images,
                     labels, mask, sizes_r, selected, k_train, residual,
                     gains, index,
                     success=draw.success if flt is not None else None,
-                    dispatch_idx=didx)
+                    dispatch_idx=didx, sig_fn=sig_fn)
+                if sig_fn is not None:
+                    params, residual, obs = out
+                else:
+                    params, residual = out
+            # Learning-signal carry (DESIGN.md §14): fold this round's
+            # delivered observations in *before* the frame is built, so
+            # the frame snapshots the exact post-round state a
+            # learning-signal scheduler would rank on next round.
+            if sig_fn is not None:
+                loss_delta, upd_norm = obs
+                sigst = telemetry_health.signal_update(
+                    sigst, ok, loss_delta, upd_norm, energy)
             # Telemetry frame (DESIGN.md §13): built *before* the
             # ages/reliability carry updates so the trace records the
             # signals the scheduler actually saw.  Pure observer — no
@@ -939,7 +1028,10 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                     wcfg=wcfg, sch=sch, key_sched=k_sched, index=index,
                     ages=ages, staleness=stale,
                     reliability=rel if flt is not None else None,
-                    draw=draw)
+                    draw=draw,
+                    signals=telemetry_health.signals_frame(
+                        sigst, ok, loss_delta, upd_norm)
+                    if sig_fn is not None else None)
             # Participation = delivered: ages reset and streaming
             # backlog clears only for uploads that landed.
             ages = jnp.where(ok > 0.0, 0, ages + 1)
@@ -969,6 +1061,8 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
                 out += (residual,)
             if flt is not None:
                 out += (rel,)
+            if sig_fn is not None:
+                out += (sigst,)
             if tel is not None:
                 return out, (met, frame)
             return out, met
@@ -981,6 +1075,8 @@ def _make_sim(loss_fn: Callable, eval_fn: Callable, wcfg, scfg, fcfg,
             carry0 += (residual0,)
         if flt is not None:
             carry0 += (jnp.ones((k_dev,), jnp.float32),)
+        if sig_fn is not None:
+            carry0 += (telemetry_health.signal_init(k_dev),)
         if tel is not None:
             out_carry, (metrics, frames) = jax.lax.scan(body, carry0,
                                                         do_eval)
@@ -1277,7 +1373,9 @@ def run_federated_loop(
             "limit parity contract, tests/test_events.py) — use "
             "make_feel_sim / make_feel_sim_batch")
     k_dev = data.num_devices
-    round_fn = make_round_fn(loss_fn, fcfg, data.capacity)
+    sig_fn = _make_sig_fn(loss_fn, fcfg, data.capacity) \
+        if _sig_enabled(fcfg) else None
+    round_fn = make_round_fn(loss_fn, fcfg, data.capacity, sig_fn=sig_fn)
     hists = client_histograms(data, fcfg.num_classes)
     n_cap = fcfg.dispatch_cap
     if n_cap is not None and n_cap < 1:
@@ -1312,16 +1410,21 @@ def run_federated_loop(
         @jax.jit
         def _frame_fn(result, admitted, sel_eff, ok, energy, payload,
                       gains, net_, k_sched, index, ages_, stale, rel_,
-                      draw):
+                      draw, sigst, loss_delta, upd_norm):
             return telemetry_record.round_frame(
                 tel, result=result, admitted=admitted, sel_eff=sel_eff,
                 ok=ok, energy=energy, payload_bits=payload, gains=gains,
                 net=net_, wcfg=wcfg, sch=sch, key_sched=k_sched,
                 index=index, ages=ages_, staleness=stale,
-                reliability=rel_, draw=draw)
+                reliability=rel_, draw=draw,
+                signals=telemetry_health.signals_frame(
+                    sigst, ok, loss_delta, upd_norm)
+                if sigst is not None else None)
 
     ages = jnp.zeros((k_dev,), jnp.int32)
     params = init_params
+    sigst = telemetry_health.signal_init(k_dev) \
+        if sig_fn is not None else None
     history: List[RoundRecord] = []
     test_x = synthetic.to_float(data.test_images)
 
@@ -1377,25 +1480,40 @@ def run_federated_loop(
                 net, wcfg, payload, flt, drop_rates)
         if comp is None:
             if flt is None:
-                params = round_fn(params, data.images, data.labels,
-                                  data.mask, sizes_r, selected, k_train,
-                                  dispatch_idx=didx)
+                out = round_fn(params, data.images, data.labels,
+                               data.mask, sizes_r, selected, k_train,
+                               dispatch_idx=didx)
             else:
-                params = round_fn(params, data.images, data.labels,
-                                  data.mask, sizes_r, selected, ok,
-                                  k_train, dispatch_idx=didx)
+                out = round_fn(params, data.images, data.labels,
+                               data.mask, sizes_r, selected, ok,
+                               k_train, dispatch_idx=didx)
+            if sig_fn is not None:
+                params, obs = out
+            else:
+                params = out
         else:
-            params, residual = round_fn(
+            out = round_fn(
                 params, data.images, data.labels, data.mask, sizes_r,
                 selected, k_train, residual, gains, index,
                 success=draw.success if flt is not None else None,
                 dispatch_idx=didx)
+            if sig_fn is not None:
+                params, residual, obs = out
+            else:
+                params, residual = out
+        # Signal carry folds in before the frame, same as the scan.
+        loss_delta = upd_norm = None
+        if sig_fn is not None:
+            loss_delta, upd_norm = obs
+            sigst = _signal_update_jit(sigst, ok, loss_delta, upd_norm,
+                                       energy)
         # Frame before the ages/reliability updates — the trace records
         # the signals the scheduler saw (same placement as the scan).
         if tel is not None:
             frames_host.append(jax.device_get(_frame_fn(
                 result, admitted, selected, ok, energy, payload, gains,
-                net, k_sched, index, ages, stale, rel, draw)))
+                net, k_sched, index, ages, stale, rel, draw,
+                sigst, loss_delta, upd_norm)))
         ages = jnp.where(ok > 0.0, 0, ages + 1)
         if flt is not None:
             rel = faults.reliability_update(rel, selected, ok, flt)

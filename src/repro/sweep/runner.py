@@ -40,6 +40,7 @@ from repro.core import federated
 from repro.sweep import engine as engine_lib
 from repro.sweep import grid as grid_lib
 from repro.telemetry import sinks
+from repro.telemetry import store as store_lib
 
 # Version of the runner's resume-state layout inside the checkpoint
 # meta/tree (independent of the msgpack container version).
@@ -90,6 +91,7 @@ class SweepRunner:
     ckpt_path: Optional[str]
     checkpoint_every: int = 1
     jsonl_path: Optional[str] = None
+    store_path: Optional[str] = None
 
     def __post_init__(self):
         self.spec = self.engine.spec
@@ -248,8 +250,44 @@ class SweepRunner:
             if cursor % self.checkpoint_every == 0 \
                     or cursor == len(self._schedule):
                 self._save(aggs, cursor)
-        return [(self._points[i], engine_lib.aggregate_summary(aggs[i]))
-                for i in sorted(aggs)]
+        out = [(self._points[i], engine_lib.aggregate_summary(aggs[i]))
+               for i in sorted(aggs)]
+        self._store_append(out)
+        return out
+
+    # -- cross-run metrics store -----------------------------------------
+
+    def _store_append(self, results) -> None:
+        """One store record per completed grid point (DESIGN.md §14).
+
+        The Welford aggregate holds scenario-level moments only — no
+        per-device arrays — so each record carries the scenario-mean
+        scalars under the store's canonical names.  Fairness indices
+        are absent; the gate treats a metric missing from *both* sides
+        as not-measured, so sweep baselines compare cleanly against
+        sweep currents.
+        """
+        if self.store_path is None:
+            return
+        for point, summary in results:
+            def _mean(name: str) -> Optional[float]:
+                st = summary.get(f"scalar.{name}")
+                if st is None or float(st["count"]) <= 0:
+                    return None
+                v = float(st["mean"])
+                return v if math.isfinite(v) else None
+
+            metrics = {
+                "final_acc": _mean("final_accuracy"),
+                "rounds_to_target": _mean("rounds_to_target"),
+                "total_energy_j": _mean("energy_total"),
+                "energy_per_device_j": _mean("energy_per_device"),
+            }
+            store_lib.append_run(
+                self.store_path, metrics, run=f"sweep/{point.name}",
+                configs=(self.spec,),
+                extra={"point": point.index,
+                       "spec_fingerprint": self.spec.fingerprint()})
 
 
 def run_sweep(spec: grid_lib.SweepSpec, *, data, loss_fn, eval_fn,
@@ -257,23 +295,27 @@ def run_sweep(spec: grid_lib.SweepSpec, *, data, loss_fn, eval_fn,
               target_accuracy: float = 0.85, use_sharding: bool = True,
               donate_params: bool = False, resume: bool = True,
               jsonl_path: Optional[str] = None,
-              telemetry_dir: Optional[str] = None):
+              telemetry_dir: Optional[str] = None,
+              store_path: Optional[str] = None):
     """One-call sweep: build the engine, optionally resume from
     ``ckpt_path``, optionally stream per-chunk aggregates to
     ``jsonl_path``, return per-point summaries.  ``telemetry_dir``
     collects per-scenario round-event JSONL streams for grid points
-    whose ``FLConfig.telemetry`` is set (DESIGN.md §13)."""
+    whose ``FLConfig.telemetry`` is set (DESIGN.md §13);
+    ``store_path`` appends one cross-run summary record per completed
+    point to the metrics store (DESIGN.md §14)."""
     eng = engine_lib.SweepEngine(
         spec, data=data, loss_fn=loss_fn, eval_fn=eval_fn,
         init_params=init_params, target_accuracy=target_accuracy,
         use_sharding=use_sharding, donate_params=donate_params,
         telemetry_dir=telemetry_dir)
-    if ckpt_path is None and jsonl_path is None:
+    if ckpt_path is None and jsonl_path is None and store_path is None:
         # engine.run_point honors spec.ci_target on its own, so the
-        # runner layer is only needed for checkpoints/JSONL streaming.
+        # runner layer is only needed for checkpoints/JSONL streaming
+        # and store appends.
         return eng.run()
-    return SweepRunner(eng, ckpt_path,
-                       jsonl_path=jsonl_path).run(resume=resume)
+    return SweepRunner(eng, ckpt_path, jsonl_path=jsonl_path,
+                       store_path=store_path).run(resume=resume)
 
 
 __all__ = ["SweepRunner", "run_sweep", "STATE_VERSION"]

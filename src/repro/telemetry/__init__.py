@@ -83,12 +83,13 @@ class TelemetryConfig:
     transport: bool = True  # payload bits, realized upload time/energy
     faults: bool = True     # fault events by type (needs FLConfig.faults)
     events: bool = True     # event-mode availability/staleness state
+    signals: bool = True    # per-device learning signals + fairness health
 
 
 def is_inert(cfg: TelemetryConfig) -> bool:
     """True when the config records nothing at all."""
     return not (cfg.scores or cfg.sub2 or cfg.transport or cfg.faults
-                or cfg.events)
+                or cfg.events or cfg.signals)
 
 
 def active(cfg: Optional[TelemetryConfig]) -> Optional[TelemetryConfig]:

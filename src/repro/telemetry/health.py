@@ -1,0 +1,229 @@
+"""In-scan learning-signal & fairness health metrics (DESIGN.md §14).
+
+PR 9 frames record what the *scheduler* did; this module records what
+the *learning* did.  A :class:`SignalState` rides at the tail of the
+scan carry of both FEEL drivers and the legacy loop (gated by
+``TelemetryConfig.signals``) and accumulates, per device:
+
+* ``loss_delta``   — last observed local loss improvement (loss at the
+  global params minus loss at the device's trained params, evaluated on
+  a fixed deterministic probe window of its shard — no PRNG draws).
+* ``update_norm``  — last observed L2 norm of the device's model delta,
+  computed uniformly from the flattened ``(K, P)`` update matrix so the
+  plain / compressed / event paths share one reduction order.
+* ``participation`` — cumulative count of delivered uploads.
+* ``energy``       — cumulative realized upload energy (J).
+
+Per-round derived aggregates (Jain fairness over participation and over
+energy, starved-device count, divergence sentinels) are emitted into
+the telemetry frame by :func:`signals_aggregates`.  Everything here is
+a pure observer: no extra PRNG splits, nothing feeds back into the
+round, so the ``telemetry=None`` bitwise contract of DESIGN.md §13
+extends to the signals group unchanged (``tests/test_health.py``).
+
+The per-device signal carry is deliberately the substrate the ROADMAP's
+learning-signal-aware scheduler (arXiv 2201.11247; gradient-importance
+axis of arXiv 2004.00490) will rank on: a future scheduler family reads
+``SignalState`` instead of static diversity indices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+# Local loss delta above this magnitude (or non-finite) marks a device
+# as diverging in the frame's sentinel counts.  Softmax CE on the
+# paper's 10-class problems lives in [0, ~2.3] at init; |delta| > 50 is
+# unambiguously a blow-up, not a large honest step.
+EXPLODING_LOSS = 50.0
+
+# Upper bound on the loss-probe window (samples per device).  The probe
+# costs two forward passes per device per round; capping it keeps the
+# signals group a small fraction of the round body (the <1.10 overhead
+# budget) while a 16-sample window still tracks the sign and scale of
+# the local loss move.
+PROBE_CAP = 16
+
+
+def jain_index(x: Array) -> Array:
+    """Jain's fairness index ``(Σx)² / (K·Σx²)`` over a ``(K,)`` vector.
+
+    1.0 when all devices hold equal share, ``1/K`` when one device holds
+    everything.  The all-zero vector (no uploads yet) is *defined* as
+    perfectly fair (1.0) rather than 0/0.
+    """
+    x = x.astype(jnp.float32)
+    s = jnp.sum(x)
+    ss = jnp.sum(x * x)
+    k = jnp.asarray(x.shape[-1], jnp.float32)
+    return jnp.where(ss > 0.0, (s * s) / (k * ss), 1.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SignalState:
+    """Per-device learning-signal accumulators (scan-carry resident).
+
+    ``loss_delta``/``update_norm`` hold the *last observed* value for
+    each device (unchanged while it sits out); ``participation`` and
+    ``energy`` are cumulative since round 0.
+    """
+
+    loss_delta: Array     # (K,) f32 — last local loss improvement
+    update_norm: Array    # (K,) f32 — last update L2 norm
+    participation: Array  # (K,) i32 — cumulative delivered uploads
+    energy: Array         # (K,) f32 — cumulative realized upload J
+
+    def tree_flatten(self):
+        return ((self.loss_delta, self.update_norm, self.participation,
+                 self.energy), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def signal_init(k: int) -> SignalState:
+    """Zero state for ``k`` devices."""
+    return SignalState(
+        loss_delta=jnp.zeros((k,), jnp.float32),
+        update_norm=jnp.zeros((k,), jnp.float32),
+        participation=jnp.zeros((k,), jnp.int32),
+        energy=jnp.zeros((k,), jnp.float32),
+    )
+
+
+def signal_update(state: SignalState, ok: Array, loss_delta: Array,
+                  update_norm: Array, energy: Array) -> SignalState:
+    """Fold one round's observations into the carry.
+
+    ``ok`` is the delivered mask (the driver's post-fault upload mask);
+    last-observed fields only move for delivered devices, cumulative
+    fields add the round's realized contribution.  ``energy`` is the
+    driver's realized per-device vector, already zero off the delivered
+    set, so it adds directly.
+    """
+    hit = ok > 0.0
+    return SignalState(
+        loss_delta=jnp.where(hit, loss_delta, state.loss_delta),
+        update_norm=jnp.where(hit, update_norm, state.update_norm),
+        participation=state.participation + hit.astype(jnp.int32),
+        energy=state.energy + energy,
+    )
+
+
+def update_norms(updates: Array) -> Array:
+    """Per-device L2 norm from a flattened ``(K, P)`` update matrix.
+
+    Every driver path funnels through this one reduction so the norms
+    agree bitwise between the plain, compressed and event-driven
+    bodies (same axis order, same dtype).
+    """
+    u = updates.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(u * u, axis=-1))
+
+
+def flatten_updates(client_params, params) -> Array:
+    """``(K, P)`` update matrix from stacked client params vs globals.
+
+    Mirrors the compressed path's ravel order (tree leaves in pytree
+    order, each ``.reshape(K, -1)``) so plain-path norms match what the
+    codec path computes from its own ``updates`` matrix.
+    """
+    leaves_c = jax.tree_util.tree_leaves(client_params)
+    leaves_g = jax.tree_util.tree_leaves(params)
+    k = leaves_c[0].shape[0]
+    return jnp.concatenate(
+        [(c - g[None]).reshape(k, -1) for c, g in zip(leaves_c, leaves_g)],
+        axis=1)
+
+
+def make_signal_probe(loss_fn: Callable, probe_size: int) -> Callable:
+    """Build the per-device loss-delta probe.
+
+    Returns ``probe(params, client_params, images, labels, mask) ->
+    (K,) f32``: per-device loss at the global params minus loss at the
+    device's trained params, both evaluated on the **first**
+    ``probe_size`` samples of the device's shard — a fixed window, so
+    the probe draws no randomness and stays a pure observer.  Devices
+    whose ``client_params`` equal the globals (unselected / frozen
+    lanes) get exactly 0 because both terms are the identical
+    computation.
+    """
+
+    from repro.data import synthetic
+
+    def _one(params_g, params_c, images, labels, mask):
+        win = slice(0, probe_size)
+        imgs = synthetic.to_float(images[win])
+        lbl = labels[win]
+        msk = mask[win]
+        before = loss_fn(params_g, imgs, lbl, msk)
+        after = loss_fn(params_c, imgs, lbl, msk)
+        return (before - after).astype(jnp.float32)
+
+    def probe(params, client_params, images, labels, mask):
+        return jax.vmap(_one, in_axes=(None, 0, 0, 0, 0))(
+            params, client_params, images, labels, mask)
+
+    return probe
+
+
+def signals_frame(state: SignalState, ok: Array, loss_delta: Array,
+                  update_norm: Array) -> Dict[str, Array]:
+    """Frame leaves for one round's signals group.
+
+    ``sig_loss_delta``/``sig_update_norm`` are *this round's*
+    observations masked to the delivered set; the ``*_last`` /
+    cumulative leaves snapshot the post-update carry (the exact state a
+    learning-signal scheduler would rank on next round); the scalars
+    are the derived health aggregates.
+    """
+    hit = ok > 0.0
+    frame = {
+        "sig_loss_delta": jnp.where(hit, loss_delta, 0.0),
+        "sig_update_norm": jnp.where(hit, update_norm, 0.0),
+        "sig_loss_delta_last": state.loss_delta,
+        "sig_update_norm_last": state.update_norm,
+        "sig_participation": state.participation,
+        "sig_energy_cum": state.energy,
+    }
+    frame.update(signals_aggregates(state, loss_delta, hit))
+    return frame
+
+
+def signals_aggregates(state: SignalState, loss_delta: Array,
+                       hit: Array) -> Dict[str, Array]:
+    """Scalar health aggregates derived from the post-update carry."""
+    nonfinite = hit & ~jnp.isfinite(loss_delta)
+    exploding = hit & jnp.isfinite(loss_delta) \
+        & (jnp.abs(loss_delta) > EXPLODING_LOSS)
+    return {
+        "jain_participation": jain_index(state.participation),
+        "jain_energy": jain_index(state.energy),
+        "starved": jnp.sum(
+            (state.participation == 0).astype(jnp.int32)),
+        "div_nonfinite": jnp.sum(nonfinite.astype(jnp.int32)),
+        "div_exploding": jnp.sum(exploding.astype(jnp.int32)),
+    }
+
+
+# Frame leaves the signals group adds (report CLI + tests key off this).
+SIGNAL_LEAVES: Tuple[str, ...] = (
+    "sig_loss_delta", "sig_update_norm", "sig_loss_delta_last",
+    "sig_update_norm_last", "sig_participation", "sig_energy_cum",
+    "jain_participation", "jain_energy", "starved",
+    "div_nonfinite", "div_exploding",
+)
+
+
+__all__ = ["SignalState", "signal_init", "signal_update", "update_norms",
+           "flatten_updates", "make_signal_probe", "signals_frame",
+           "signals_aggregates", "jain_index", "SIGNAL_LEAVES",
+           "EXPLODING_LOSS", "PROBE_CAP"]

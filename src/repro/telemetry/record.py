@@ -103,7 +103,8 @@ def round_frame(tel, *, result, admitted: Array, sel_eff: Array,
                 ok: Array, energy: Array, payload_bits: Optional[Array],
                 gains: Array, net, wcfg, sch, key_sched, index: Array,
                 ages: Array, staleness: Optional[Array],
-                reliability: Optional[Array], draw) -> Frame:
+                reliability: Optional[Array], draw,
+                signals: Optional[Frame] = None) -> Frame:
     """Assemble one round's telemetry frame (both drivers + legacy loop).
 
     ``admitted`` is the scheduler's selection before the dispatch cap,
@@ -111,7 +112,9 @@ def round_frame(tel, *, result, admitted: Array, sel_eff: Array,
     landed; ``ages``/``reliability``/``staleness`` are the values the
     *scheduler saw* (pre-update).  ``draw`` is the round's fault draw or
     ``None`` on a reliable edge — the fault group is recorded only when
-    the fault subsystem actually ran.
+    the fault subsystem actually ran.  ``signals`` is the pre-built
+    learning-signal group (``repro.telemetry.health.signals_frame``) —
+    the driver builds it from its signal carry when ``tel.signals``.
     """
     frame: Frame = {
         "admitted": admitted,
@@ -132,6 +135,8 @@ def round_frame(tel, *, result, admitted: Array, sel_eff: Array,
                                      payload_bits, wcfg))
     if tel.faults and draw is not None:
         frame.update(fault_frame(draw, sel_eff))
+    if signals is not None:
+        frame.update(signals)
     return frame
 
 

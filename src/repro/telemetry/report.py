@@ -16,7 +16,14 @@ points at a standalone manifest JSON) and prints:
   texture at a glance);
 * an **energy / fault breakdown** — realized upload energy plus fault
   events by type when the fault group was recorded;
-* **Sub2 convergence stats** — iteration and objective-gain summary.
+* **Sub2 convergence stats** — iteration and objective-gain summary;
+* **learning signals** — delivered loss-delta / update-norm summary
+  plus divergence sentinel counts (signals group, DESIGN.md §14);
+* **fairness** — end-of-run Jain indices over participation and energy
+  and the starved-device count.
+
+``--json`` emits the same content as a machine-readable dict
+(:func:`summary_dict`) for the regression gate and external tooling.
 
 Exit status 0 on a parsed log with at least one round record, 2 on
 usage/IO errors, 1 on a log with no round records — so CI can assert
@@ -214,13 +221,149 @@ def _sub2_stats(rounds: List[dict]) -> List[str]:
     return lines
 
 
+def _last_per_scenario(rounds: List[dict]) -> List[dict]:
+    """The final round record of each scenario (cumulative leaves —
+    participation, energy, Jain — are end-of-run there)."""
+    last: Dict = {}
+    for r in rounds:
+        last[r.get("scenario")] = r  # rounds are sorted by (scn, round)
+    return list(last.values())
+
+
+def _signals(rounds: List[dict]) -> List[str]:
+    deltas, norms = [], []
+    nonfinite = exploding = 0
+    have = False
+    for r in rounds:
+        ld, un = r.get("sig_loss_delta"), r.get("sig_update_norm")
+        deliv = r.get("delivered")
+        if not isinstance(ld, list) or not isinstance(deliv, list):
+            continue
+        have = True
+        for d, v in zip(deliv, ld):
+            if d and d > 0 and v is not None:
+                deltas.append(float(v))
+        for d, v in zip(deliv, un or []):
+            if d and d > 0 and v is not None:
+                norms.append(float(v))
+        nonfinite += int(_scalar(r, "div_nonfinite") or 0)
+        exploding += int(_scalar(r, "div_exploding") or 0)
+    if not have:
+        return ["== Learning signals ==",
+                "no signal trace recorded (signals group disabled)"]
+    lines = ["== Learning signals =="]
+    if deltas:
+        lines.append(f"local loss delta (delivered) — mean "
+                     f"{np.mean(deltas):+.5f}, min {np.min(deltas):+.5f}"
+                     f", max {np.max(deltas):+.5f} over {len(deltas)} "
+                     f"device-rounds")
+    if norms:
+        lines.append(f"update L2 norm (delivered) — mean "
+                     f"{np.mean(norms):.5f}, max {np.max(norms):.5f}")
+    lines.append(f"divergence sentinels — non-finite: {nonfinite}, "
+                 f"exploding: {exploding}"
+                 + ("  << CHECK RUN" if nonfinite or exploding else ""))
+    return lines
+
+
+def _fairness(rounds: List[dict]) -> List[str]:
+    finals = [r for r in _last_per_scenario(rounds)
+              if _scalar(r, "jain_participation") is not None]
+    if not finals:
+        return ["== Fairness ==",
+                "no fairness trace recorded (signals group disabled)"]
+    jp = [float(r["jain_participation"]) for r in finals]
+    je = [float(r["jain_energy"]) for r in finals
+          if _scalar(r, "jain_energy") is not None]
+    starved = [int(r["starved"]) for r in finals
+               if _scalar(r, "starved") is not None]
+    lines = ["== Fairness (end of run) =="]
+    lines.append(f"Jain(participation) — mean {np.mean(jp):.4f}, "
+                 f"min {np.min(jp):.4f} over {len(jp)} scenario(s)")
+    if je:
+        lines.append(f"Jain(energy)        — mean {np.mean(je):.4f}, "
+                     f"min {np.min(je):.4f}")
+    if starved:
+        lines.append(f"starved devices (never delivered) — mean "
+                     f"{np.mean(starved):.1f}, max {int(np.max(starved))}")
+    return lines
+
+
 def render(rounds: List[dict],
            manifest: Optional[dict] = None) -> str:
     """The full text report for a list of round records."""
     blocks = [_summary(rounds, manifest), _round_table(rounds),
               _heatmap(rounds), _energy_faults(rounds),
-              _sub2_stats(rounds)]
+              _sub2_stats(rounds), _signals(rounds), _fairness(rounds)]
     return "\n".join("\n".join(b) for b in blocks if b)
+
+
+def summary_dict(rounds: List[dict],
+                 manifest: Optional[dict] = None) -> dict:
+    """Machine-readable report (the ``--json`` mode's payload).
+
+    Mirrors the text sections: run identity, per-round scalar rows, the
+    Sub2 / signal / fairness aggregates.  Consumed by the regression
+    gate and external tooling so nothing screen-scrapes the table.
+    """
+    scenarios = sorted({r.get("scenario") for r in rounds
+                        if r.get("scenario") is not None})
+    out: dict = {
+        "rounds": max(r.get("round", 0) for r in rounds) + 1,
+        "round_records": len(rounds),
+        "scenarios": len(scenarios) or 1,
+        "manifest": {k: manifest.get(k) for k in
+                     ("jax_version", "backend", "device_count",
+                      "git_sha", "config_fingerprint")}
+        if manifest else None,
+        "round_table": [],
+    }
+    for r in rounds:
+        out["round_table"].append({
+            k: _scalar(r, k) for k in
+            ("scenario", "round", "n_selected", "n_success", "n_dropped",
+             "accuracy", "round_time", "energy_total", "sub2_iters",
+             "sub2_gain", "jain_participation", "jain_energy", "starved",
+             "div_nonfinite", "div_exploding")
+            if r.get(k) is not None})
+    iters = [r["sub2_iters"] for r in rounds
+             if _scalar(r, "sub2_iters") is not None]
+    gains = [r["sub2_gain"] for r in rounds
+             if _scalar(r, "sub2_gain") is not None]
+    out["sub2"] = {
+        "mean_iterations": float(np.mean(iters)) if iters else None,
+        "mean_gain": float(np.mean(gains)) if gains else None,
+    }
+    deltas, norms = [], []
+    nonfinite = exploding = 0
+    for r in rounds:
+        ld, un = r.get("sig_loss_delta"), r.get("sig_update_norm")
+        deliv = r.get("delivered")
+        if not isinstance(ld, list) or not isinstance(deliv, list):
+            continue
+        deltas.extend(float(v) for d, v in zip(deliv, ld)
+                      if d and d > 0 and v is not None)
+        norms.extend(float(v) for d, v in zip(deliv, un or [])
+                     if d and d > 0 and v is not None)
+        nonfinite += int(_scalar(r, "div_nonfinite") or 0)
+        exploding += int(_scalar(r, "div_exploding") or 0)
+    out["signals"] = {
+        "mean_loss_delta": float(np.mean(deltas)) if deltas else None,
+        "mean_update_norm": float(np.mean(norms)) if norms else None,
+        "div_nonfinite": nonfinite,
+        "div_exploding": exploding,
+    } if deltas or norms else None
+    finals = [r for r in _last_per_scenario(rounds)
+              if _scalar(r, "jain_participation") is not None]
+    out["fairness"] = {
+        "jain_participation": [float(r["jain_participation"])
+                               for r in finals],
+        "jain_energy": [float(r["jain_energy"]) for r in finals
+                        if _scalar(r, "jain_energy") is not None],
+        "starved": [int(r["starved"]) for r in finals
+                    if _scalar(r, "starved") is not None],
+    } if finals else None
+    return out
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -230,6 +373,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("logs", nargs="+", help="JSONL round-event file(s)")
     ap.add_argument("--manifest", default=None,
                     help="standalone run-manifest JSON to include")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable summary dict instead "
+                         "of the text report")
     args = ap.parse_args(argv)
     manifest = None
     if args.manifest is not None:
@@ -250,7 +396,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     if not rounds:
         print("no round records found", file=sys.stderr)
         return 1
-    print(render(rounds, manifest))
+    if args.json:
+        print(json.dumps(sinks.sanitize(summary_dict(rounds, manifest)),
+                         indent=2))
+    else:
+        print(render(rounds, manifest))
     return 0
 
 

@@ -33,6 +33,26 @@ import numpy as np
 # JSONL primitives
 # ---------------------------------------------------------------------------
 
+def sanitize(value):
+    """Map non-finite floats to ``None`` recursively, deterministically.
+
+    ``json.dumps`` emits literal ``NaN``/``Infinity`` for non-finite
+    Python floats — invalid JSON that breaks every strict parser
+    downstream.  All sink writers funnel dict records through this, so
+    a NaN divergence sentinel round-trips through JSONL as ``null``
+    (missing-not-invalid) instead of corrupting the line.
+    """
+    if isinstance(value, float):
+        return value if np.isfinite(value) else None
+    if isinstance(value, dict):
+        return {k: sanitize(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [sanitize(v) for v in value]
+    if isinstance(value, np.ndarray) or isinstance(value, np.generic):
+        return _jsonify(value)
+    return value
+
+
 def jsonl_append(path: str, record: dict, fsync: bool = False) -> None:
     """Append one JSON line; flush always, fsync on request.
 
@@ -40,9 +60,11 @@ def jsonl_append(path: str, record: dict, fsync: bool = False) -> None:
     is torn only if the process dies mid-``write``, which the rewind
     contract already tolerates); ``fsync=True`` additionally survives
     power loss, for round-event logs that feed offline analysis.
+    Records pass through :func:`sanitize` so non-finite floats land as
+    ``null`` rather than invalid bare ``NaN`` tokens.
     """
     with open(path, "a") as f:
-        f.write(json.dumps(record) + "\n")
+        f.write(json.dumps(sanitize(record)) + "\n")
         f.flush()
         if fsync:
             os.fsync(f.fileno())
@@ -162,7 +184,8 @@ def write_round_frames(path: str, frames: Dict[str, Any],
     rounds = lengths.pop()
     with open(path, "w") as f:
         if manifest is not None:
-            f.write(json.dumps({"type": "manifest", **manifest}) + "\n")
+            f.write(json.dumps(sanitize({"type": "manifest", **manifest}))
+                    + "\n")
         for r in range(rounds):
             rec: dict = {"type": "round", "round": r}
             if scenario is not None:
@@ -235,4 +258,4 @@ def write_manifest(path: str, *cfgs, extra: Optional[dict] = None) -> dict:
 
 __all__ = ["jsonl_append", "jsonl_rewind", "read_jsonl", "frames_to_host",
            "write_round_frames", "run_manifest", "write_manifest",
-           "config_fingerprint"]
+           "config_fingerprint", "sanitize"]

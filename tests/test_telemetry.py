@@ -85,7 +85,7 @@ def test_inert_config_normalizes_to_none():
     assert telemetry.active(None) is None
     inert = telemetry.TelemetryConfig(scores=False, sub2=False,
                                       transport=False, faults=False,
-                                      events=False)
+                                      events=False, signals=False)
     assert telemetry.is_inert(inert)
     assert telemetry.active(inert) is None
     assert telemetry.active(TEL) is TEL
@@ -97,7 +97,7 @@ def test_inert_config_builds_two_tuple_sim(world):
     # same return arity, same values.
     inert = telemetry.TelemetryConfig(scores=False, sub2=False,
                                       transport=False, faults=False,
-                                      events=False)
+                                      events=False, signals=False)
     kw = _run_kwargs(world)
     out_none = federated.run_federated(fcfg=FL, **kw)
     out_inert = federated.run_federated(
